@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: one line per kernel path.
+
+Times the production non-TPU implementations (jnp chunked/associative/ref
+paths — the exact code the CPU backend executes and the TPU-kernel oracles).
+Pallas-interpret timings are not wall-clock meaningful and are excluded.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._timing import csv_line, time_call
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.vtrace.ops import vtrace
+from repro.models import attention as attn
+
+
+def main() -> list[str]:
+    lines = []
+    ks = jax.random.split(jax.random.key(0), 8)
+
+    # flash-style chunked attention (prefill path)
+    B, T, H, K, h = 2, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, T, H, h), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, T, K, h), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, T, K, h), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: attn.full_attention(q, k, v, chunk=256))
+    us = time_call(fn, q, k, v)
+    flops = 4 * B * T * T * H * h / 2  # causal
+    lines.append(csv_line("attn_chunked_1k", us, f"gflops={flops / us / 1e3:.1f}"))
+
+    fnw = jax.jit(
+        lambda q, k, v: attn.sliding_window_attention(q, k, v, window=256)
+    )
+    us = time_call(fnw, q, k, v)
+    lines.append(csv_line("attn_sliding_1k_w256", us, ""))
+
+    # SSD scan (mamba2)
+    B, T, Hs, P, N = 2, 1024, 8, 64, 64
+    x = jax.random.normal(ks[3], (B, T, Hs, P), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (B, T, Hs)))
+    A = -jnp.exp(jax.random.normal(ks[5], (Hs,)) * 0.5)
+    Bm = jax.random.normal(ks[6], (B, T, N), jnp.bfloat16) * 0.3
+    Cm = jax.random.normal(ks[7], (B, T, N), jnp.bfloat16) * 0.3
+    fn = jax.jit(lambda *a: ssd_scan(*a, chunk=256))
+    us = time_call(fn, x, dt, A, Bm, Cm)
+    lines.append(csv_line("ssd_scan_1k", us, f"tokens_per_s={B * T / us * 1e6:,.0f}"))
+
+    # RG-LRU scan
+    B, T, W = 4, 1024, 512
+    x = jax.random.normal(ks[0], (B, T, W))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, T, W)))
+    gi = jax.nn.sigmoid(jax.random.normal(ks[2], (B, T, W)))
+    fn = jax.jit(rglru_scan)
+    us = time_call(fn, x, a, gi)
+    lines.append(csv_line("rglru_scan_1k", us, f"tokens_per_s={B * T / us * 1e6:,.0f}"))
+
+    # V-trace
+    B, T = 256, 64
+    lr = jax.random.normal(ks[3], (B, T)) * 0.3
+    disc = jnp.full((B, T), 0.99)
+    rew = jax.random.normal(ks[4], (B, T))
+    val = jax.random.normal(ks[5], (B, T))
+    boot = jax.random.normal(ks[6], (B,))
+    fn = jax.jit(vtrace)
+    us = time_call(fn, lr, disc, rew, val, boot)
+    lines.append(csv_line("vtrace_256x64", us, f"steps_per_s={B * T / us * 1e6:,.0f}"))
+
+    for line in lines:
+        print(line, flush=True)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — | — | — "
+            f"| — | {r['skipped'].split(';')[0]} |"
+        )
+    if "error" in r:
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | — | — | — | — "
+            f"| — | {r['error'][:60]} |"
+        )
+    ro = r.get("roofline")
+    mem = r["memory"]
+    if not ro:
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | — | — | — | — "
+            f"| {mem['peak_gb']:.2f} | compile-only (multi-pod pass) |"
+        )
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {ro['dominant']} "
+        f"| {ro['compute_s'] * 1e3:.2f} | {ro['memory_s'] * 1e3:.2f} "
+        f"| {ro['collective_s'] * 1e3:.2f} "
+        f"| {ro['useful_flops_ratio']:.2f} "
+        f"| {mem['peak_gb']:.2f} | |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | dominant | compute ms | memory ms "
+    "| collective ms | 6ND/HLO | peak GB/dev | note |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main(out_dir: str = "experiments/dryrun") -> str:
+    rows = load(out_dir)
+    # order: single-pod first, then multi-pod
+    rows.sort(key=lambda r: (r.get("mesh", ""), r.get("arch", ""),
+                             r.get("shape", "")))
+    table = HEADER + "\n" + "\n".join(fmt_row(r) for r in rows)
+    print(table)
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+Sections:
+  * kernel micro-benches (the TPU-kernel oracle paths, timed on CPU)
+  * Fig. 4a  — Anakin FPS vs device count   (anakin_scaling)
+  * Fig. 4b  — Sebulba FPS vs actor batch   (sebulba_batch)
+  * Fig. 4c  — MuZero FPS vs device count   (muzero_scaling)
+  * §Anakin  — grid-world steps/sec single-device (the "5M steps/s on 8
+    TPU cores" claim, CPU-scaled)
+  * roofline — aggregated dry-run table, if experiments/dryrun exists
+
+``python -m benchmarks.run --quick`` runs only the fast sections (used by
+CI); the full run takes ~10 minutes on this container.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _section(name: str, fn, lines: list[str]) -> None:
+    print(f"# --- {name} ---", flush=True)
+    try:
+        out = fn()
+        if out:
+            lines.extend(out)
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        lines.append(f"{name},nan,error={type(e).__name__}")
+
+
+def _anakin_single_device() -> list[str]:
+    import jax
+
+    from repro import optim
+    from repro.agents.actor_critic import MLPActorCritic
+    from repro.core.anakin import Anakin, AnakinConfig
+    from repro.envs import Catch
+
+    env = Catch()
+    net = MLPActorCritic(env.num_actions, (64, 64))
+    ank = Anakin(
+        env, net, optim.adam(3e-3, clip_norm=1.0),
+        AnakinConfig(unroll_length=10, batch_per_device=64,
+                     iterations_per_call=50),
+    )
+    state = ank.init_state(jax.random.key(0))
+    state, _ = ank.run(state)  # compile
+    jax.block_until_ready(state)
+    t0 = time.time()
+    for _ in range(3):
+        state, _ = ank.run(state)
+    jax.block_until_ready(state)
+    fps = 3 * ank.steps_per_call / (time.time() - t0)
+    return [
+        f"anakin_catch_1dev,{1e6 / fps:.3f},steps_per_s={fps:,.0f} "
+        f"(paper: 5M steps/s on free 8-core TPU)"
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fast sections only")
+    args = ap.parse_args()
+
+    lines: list[str] = []
+    print("name,us_per_call,derived")
+
+    from benchmarks import kernel_bench
+
+    _section("kernels", kernel_bench.main, lines)
+    _section("anakin single-device (paper §Anakin)", _anakin_single_device,
+             lines)
+
+    if not args.quick:
+        from benchmarks import anakin_scaling, muzero_scaling, sebulba_batch
+
+        _section("Fig 4a anakin scaling",
+                 lambda: anakin_scaling.main((1, 2, 4, 8)), lines)
+        _section("Fig 4b sebulba actor batch",
+                 lambda: sebulba_batch.main((12, 24, 48)), lines)
+        _section("Fig 4c muzero scaling",
+                 lambda: muzero_scaling.main((4, 8)), lines)
+
+    # roofline table from dry-run artifacts, if present
+    try:
+        import glob
+
+        if glob.glob("experiments/dryrun/*.json"):
+            from benchmarks import roofline_table
+
+            print("# --- roofline (from dry-run artifacts) ---")
+            roofline_table.main()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+
+    print("# --- summary CSV ---")
+    for line in lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

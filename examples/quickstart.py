@@ -1,0 +1,52 @@
+"""Quickstart: Anakin on Catch — the paper's Colab demo, reproduced.
+
+The whole agent-environment loop (env stepping, action selection, A2C
+update) compiles into ONE XLA program, replicated over every available
+device with explicit pmean gradient averaging (paper Fig. 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+
+from repro import optim
+from repro.agents.actor_critic import MLPActorCritic
+from repro.core.anakin import Anakin, AnakinConfig
+from repro.envs import Catch
+
+
+def main() -> None:
+    env = Catch()
+    net = MLPActorCritic(env.num_actions, hidden=(64, 64))
+    anakin = Anakin(
+        env,
+        net,
+        optim.adam(3e-3, clip_norm=1.0),
+        AnakinConfig(
+            unroll_length=10,  # N env steps per update
+            batch_per_device=64,  # vmap width (fill the core)
+            iterations_per_call=50,  # updates fused into one XLA call
+            mode="shard_map",  # paper-faithful explicit pmean
+        ),
+    )
+    print(f"devices: {jax.device_count()}  "
+          f"global env batch: {anakin.global_batch}")
+
+    state = anakin.init_state(jax.random.key(0))
+    t0 = time.time()
+    for call in range(10):
+        state, metrics = anakin.run(state)
+        fps = anakin.steps_per_call * (call + 1) / (time.time() - t0)
+        print(
+            f"call {call:2d}  reward/step {float(metrics['reward']):+.3f}  "
+            f"entropy {float(metrics['entropy']):.3f}  fps {fps:,.0f}"
+        )
+    reward = float(metrics["reward"])
+    print(f"\nfinal reward/step: {reward:+.3f} (optimal = +{1 / 9:.3f})")
+    assert reward > 0.08, "did not learn Catch"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Sebulba running MuZero with pure-JAX MCTS on the actor cores (paper
+§Sebulba / Fig. 4c), including the batch-splitting trick that decouples
+acting batch size from learning batch size (learner_microbatches).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/sebulba_muzero.py --frames 10000
+"""
+
+import argparse
+
+import jax
+
+from repro import optim
+from repro.agents.muzero import MuZeroAgent, MuZeroConfig
+from repro.core.sebulba import Sebulba, SebulbaConfig
+from repro.envs import BatchedHostEnv, HostPong
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=10_000)
+    ap.add_argument("--simulations", type=int, default=16)
+    ap.add_argument("--microbatches", type=int, default=2)
+    args = ap.parse_args()
+
+    agent = MuZeroAgent(
+        HostPong.num_actions,
+        MuZeroConfig(num_simulations=args.simulations, max_depth=6,
+                     unroll_steps=4),
+    )
+    seb = Sebulba(
+        env_factory=lambda seed: HostPong(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        optimizer=optim.adam(1e-3, clip_norm=1.0),
+        agent=agent,
+        config=SebulbaConfig(
+            num_actor_cores=2 if len(jax.devices()) > 1 else 1,
+            actor_batch_size=16,
+            trajectory_length=12,
+            learner_microbatches=args.microbatches,  # the paper's trick
+        ),
+    )
+    out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=args.frames,
+                  log_every=10)
+    print(
+        f"\n{out['frames']:,} frames, {out['fps']:,.0f} FPS "
+        f"(search-based acting), mean return {out['mean_return']:.2f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

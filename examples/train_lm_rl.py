@@ -1,0 +1,87 @@
+"""End-to-end driver: train a transformer policy with the Sebulba-learner
+objective (LM cross-entropy + V-trace actor-critic) on synthetic token
+trajectories, with checkpointing and a cosine schedule.
+
+Default config is a ~25M-parameter qwen2-family model sized for this CPU
+container; ``--preset 100m`` scales to ~100M params (the assignment's
+end-to-end target — run it on real hardware or be patient).
+
+    PYTHONPATH=src python examples/train_lm_rl.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import save
+from repro.configs.base import get_config
+from repro.launch.specs import make_batch
+from repro.launch.steps import TrainHParams, make_train_step
+from repro.models import make_model
+
+PRESETS = {
+    # ~25M params: CPU-friendly
+    "25m": dict(num_layers=4, d_model=384, num_heads=6, num_kv_heads=2,
+                head_dim=64, d_ff=1536, vocab_size=8192),
+    # ~100M params: the assignment's end-to-end scale
+    "100m": dict(num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=16384),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="25m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="experiments/train_lm_rl.npz")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"), **PRESETS[args.preset], qkv_bias=True,
+        remat="none",
+    )
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model})")
+
+    opt = optim.adam(
+        optim.warmup_cosine(args.lr, warmup=20, total_steps=args.steps),
+        clip_norm=1.0,
+    )
+    step = jax.jit(make_train_step(model, opt, TrainHParams(rl_weight=0.1)))
+    opt_state = opt.init(params)
+
+    # synthetic copy-task-ish data: structured tokens so CE can fall
+    def data_batch(i):
+        rng = jax.random.key(1000 + i % 37)
+        batch = make_batch(cfg, args.batch, args.seq, rng=rng)
+        t = jnp.arange(args.seq) % 97
+        batch["tokens"] = (batch["tokens"] % 13) * 97 + t[None, :]
+        batch["tokens"] = batch["tokens"] % cfg.vocab_size
+        return batch
+
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt_state, metrics = step(params, opt_state, data_batch(i))
+        if i % 20 == 0 or i == args.steps - 1:
+            toks = args.batch * args.seq * (i + 1)
+            print(
+                f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                f"ce {float(metrics['ce']):.4f}  rl {float(metrics['rl']):+.4f}  "
+                f"tok/s {toks / (time.time() - t0):,.0f}"
+            )
+    save(args.ckpt, params)
+    print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.agents.actor_critic import MLPActorCritic  # noqa: F401
+from repro.agents.impala import ConvActorCritic  # noqa: F401

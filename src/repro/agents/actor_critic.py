@@ -1,0 +1,47 @@
+"""Small MLP actor-critic network for Anakin (grid-world scale, as in the
+paper's Colab demo).  Operates on a SINGLE observation (no batch dim) —
+Anakin vmaps it across the per-core environment batch.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.param import ParamBuilder, fan_in_init, zeros_init
+
+
+class MLPActorCritic:
+    def __init__(self, num_actions: int, hidden: Sequence[int] = (128, 128)):
+        self.num_actions = num_actions
+        self.hidden = tuple(hidden)
+
+    def init(self, rng: jax.Array, obs_shape: tuple[int, ...]):
+        b = ParamBuilder(rng, dtype=jnp.float32)
+        in_dim = math.prod(obs_shape)
+        for i, h in enumerate(self.hidden):
+            with b.scope(f"dense_{i}"):
+                b.param("w", (in_dim, h), (None, None), fan_in_init())
+                b.param("b", (h,), (None,), zeros_init())
+            in_dim = h
+        with b.scope("policy"):
+            b.param("w", (in_dim, self.num_actions), (None, None), fan_in_init(0.01))
+            b.param("b", (self.num_actions,), (None,), zeros_init())
+        with b.scope("value"):
+            b.param("w", (in_dim, 1), (None, None), fan_in_init())
+            b.param("b", (1,), (None,), zeros_init())
+        params, _ = b.build()
+        return params
+
+    def apply(self, params, obs: jax.Array):
+        """obs (single observation) -> (logits (A,), value ())."""
+        x = obs.reshape(-1)
+        for i in range(len(self.hidden)):
+            p = params[f"dense_{i}"]
+            x = jax.nn.relu(x @ p["w"] + p["b"])
+        logits = x @ params["policy"]["w"] + params["policy"]["b"]
+        value = (x @ params["value"]["w"] + params["value"]["b"])[0]
+        return logits, value

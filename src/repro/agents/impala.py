@@ -1,0 +1,84 @@
+"""IMPALA-style conv actor-critic network for Sebulba.
+
+Batched apply (Sebulba actors do *batched* inference on an actor core —
+paper Fig. 3).  The torso is a small residual conv stack (the IMPALA
+"shallow" net scaled to HostPong frames); the paper's data-efficiency
+experiments scale channels/blocks, which `channels`/`blocks` expose.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.param import ParamBuilder, fan_in_init, zeros_init
+
+
+def _conv(params, x: jax.Array, stride: int = 1) -> jax.Array:
+    return (
+        jax.lax.conv_general_dilated(
+            x, params["w"], (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        + params["b"]
+    )
+
+
+class ConvActorCritic:
+    def __init__(self, num_actions: int, channels: Sequence[int] = (16, 32),
+                 blocks: int = 1, hidden: int = 256):
+        self.num_actions = num_actions
+        self.channels = tuple(channels)
+        self.blocks = blocks
+        self.hidden = hidden
+
+    def init(self, rng: jax.Array, obs_shape: tuple[int, ...]):
+        b = ParamBuilder(rng, dtype=jnp.float32)
+        h, w, c = obs_shape
+        for i, ch in enumerate(self.channels):
+            with b.scope(f"conv_{i}"):
+                b.param("w", (3, 3, c, ch), (None,) * 4, fan_in_init())
+                b.param("b", (ch,), (None,), zeros_init())
+            for j in range(self.blocks):
+                for k in (0, 1):
+                    with b.scope(f"res_{i}_{j}_{k}"):
+                        b.param("w", (3, 3, ch, ch), (None,) * 4, fan_in_init())
+                        b.param("b", (ch,), (None,), zeros_init())
+            c = ch
+            h, w = -(-h // 2), -(-w // 2)
+        flat = h * w * c
+        with b.scope("trunk"):
+            b.param("w", (flat, self.hidden), (None, None), fan_in_init())
+            b.param("b", (self.hidden,), (None,), zeros_init())
+        with b.scope("policy"):
+            b.param("w", (self.hidden, self.num_actions), (None, None),
+                    fan_in_init(0.01))
+            b.param("b", (self.num_actions,), (None,), zeros_init())
+        with b.scope("value"):
+            b.param("w", (self.hidden, 1), (None, None), fan_in_init())
+            b.param("b", (1,), (None,), zeros_init())
+        params, _ = b.build()
+        return params
+
+    def apply(self, params, obs: jax.Array):
+        """obs (B, H, W, C) -> (logits (B, A), values (B,))."""
+        x = obs
+        for i, ch in enumerate(self.channels):
+            x = _conv(params[f"conv_{i}"], x, stride=1)
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+            )
+            for j in range(self.blocks):
+                y = jax.nn.relu(x)
+                y = _conv(params[f"res_{i}_{j}_0"], y)
+                y = jax.nn.relu(y)
+                y = _conv(params[f"res_{i}_{j}_1"], y)
+                x = x + y
+        x = jax.nn.relu(x).reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["trunk"]["w"] + params["trunk"]["b"])
+        logits = x @ params["policy"]["w"] + params["policy"]["b"]
+        values = (x @ params["value"]["w"] + params["value"]["b"])[:, 0]
+        return logits, values

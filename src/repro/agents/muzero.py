@@ -1,0 +1,187 @@
+"""MuZero-lite agent for Sebulba (paper §Sebulba, Fig. 4c).
+
+Representation / dynamics / prediction MLPs + the pure-JAX MCTS
+(repro/rl/mcts.py) for acting, and the MuZero training objective (K-step
+unrolled value/reward/policy losses, no Reanalyse — matching the paper's
+"MuZero (no Reanalyse)") for learning.
+
+Implements the Sebulba *agent* interface (see repro/core/sebulba.py):
+    act(params, obs, rng)   -> (actions, extras)  [runs MCTS on actor cores]
+    loss(params, trajectory) -> (scalar, metrics)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.param import ParamBuilder, fan_in_init, zeros_init
+from repro.rl import returns as rets
+from repro.rl.mcts import mcts_search
+
+
+@dataclasses.dataclass(frozen=True)
+class MuZeroConfig:
+    hidden_dim: int = 64
+    num_simulations: int = 16
+    max_depth: int = 8
+    unroll_steps: int = 4
+    discount: float = 0.99
+    td_lambda: float = 0.9
+    value_cost: float = 0.25
+    reward_cost: float = 1.0
+    temperature: float = 1.0
+
+
+class MuZeroNets:
+    """repr: obs -> h; dynamics: (h, a) -> (h', r); prediction: h -> (pi, v)."""
+
+    def __init__(self, num_actions: int, hidden_dim: int = 64, torso: int = 128):
+        self.num_actions = num_actions
+        self.hidden_dim = hidden_dim
+        self.torso = torso
+
+    def init(self, rng: jax.Array, obs_shape):
+        b = ParamBuilder(rng, dtype=jnp.float32)
+        in_dim = math.prod(obs_shape)
+        H, A, T = self.hidden_dim, self.num_actions, self.torso
+        def dense(scope, i, o, scale=1.0):
+            with b.scope(scope):
+                b.param("w", (i, o), (None, None), fan_in_init(scale))
+                b.param("b", (o,), (None,), zeros_init())
+        dense("repr_1", in_dim, T)
+        dense("repr_2", T, H)
+        dense("dyn_1", H + A, T)
+        dense("dyn_2", T, H)
+        dense("dyn_r", T, 1)
+        dense("pred_1", H, T)
+        dense("pred_pi", T, A, 0.01)
+        dense("pred_v", T, 1)
+        params, _ = b.build()
+        return params
+
+    @staticmethod
+    def _ff(p, x):
+        return x @ p["w"] + p["b"]
+
+    def representation(self, params, obs):
+        x = obs.reshape(-1)
+        x = jax.nn.relu(self._ff(params["repr_1"], x))
+        h = self._ff(params["repr_2"], x)
+        # scale hidden to [0, 1] for stable dynamics (MuZero appendix)
+        h_min, h_max = h.min(), h.max()
+        return (h - h_min) / jnp.maximum(h_max - h_min, 1e-6)
+
+    def dynamics(self, params, h, action):
+        a = jax.nn.one_hot(action, self.num_actions, dtype=h.dtype)
+        x = jnp.concatenate([h, a], axis=-1)
+        x = jax.nn.relu(self._ff(params["dyn_1"], x))
+        h_new = self._ff(params["dyn_2"], x)
+        h_min, h_max = h_new.min(), h_new.max()
+        h_new = (h_new - h_min) / jnp.maximum(h_max - h_min, 1e-6)
+        reward = self._ff(params["dyn_r"], x)[0]
+        return h_new, reward
+
+    def prediction(self, params, h):
+        x = jax.nn.relu(self._ff(params["pred_1"], h))
+        logits = self._ff(params["pred_pi"], x)
+        value = self._ff(params["pred_v"], x)[0]
+        return logits, value
+
+
+class MuZeroAgent:
+    """Sebulba agent: MCTS acting + K-step unrolled MuZero loss."""
+
+    def __init__(self, num_actions: int, cfg: MuZeroConfig = MuZeroConfig()):
+        self.cfg = cfg
+        self.num_actions = num_actions
+        self.nets = MuZeroNets(num_actions, cfg.hidden_dim)
+
+    def init(self, rng: jax.Array, obs_shape):
+        return self.nets.init(rng, obs_shape)
+
+    # -- acting (runs on actor cores, batched) -------------------------------
+
+    def act(self, params, obs, rng):
+        out = mcts_search(
+            params, obs, rng,
+            representation=self.nets.representation,
+            dynamics=self.nets.dynamics,
+            prediction=self.nets.prediction,
+            num_simulations=self.cfg.num_simulations,
+            num_actions=self.num_actions,
+            max_depth=self.cfg.max_depth,
+            discount=self.cfg.discount,
+            temperature=self.cfg.temperature,
+        )
+        # behaviour logp under the search policy; extras = visit distribution
+        # (the MuZero policy target)
+        p = jnp.take_along_axis(out.visit_probs, out.action[:, None], axis=-1)
+        logp = jnp.log(jnp.maximum(p[:, 0], 1e-9))
+        return out.action, logp, out.visit_probs
+
+    # -- learning (runs on learner cores, per shard) -----------------------
+
+    def loss(self, params, traj):
+        """traj.extras holds the MCTS visit distributions (B, T, A)."""
+        cfg = self.cfg
+        B, T = traj.actions.shape
+        K = min(cfg.unroll_steps, T - 1)
+        nets = self.nets
+
+        obs_flat = traj.obs.reshape((B * T,) + traj.obs.shape[2:])
+        h0 = jax.vmap(nets.representation, in_axes=(None, 0))(params, obs_flat)
+        logits0, values = jax.vmap(nets.prediction, in_axes=(None, 0))(params, h0)
+        values = values.reshape(B, T)
+
+        # value targets: TD(lambda) over the real trajectory
+        boot = values[:, -1]
+        values_tp1 = jnp.concatenate([values[:, 1:], boot[:, None]], axis=1)
+        targets = jax.lax.stop_gradient(
+            rets.lambda_returns(traj.rewards, traj.discounts, values_tp1,
+                                cfg.td_lambda)
+        )
+
+        # K-step latent unroll from each of the first T-K positions
+        S = T - K
+        h = h0.reshape(B, T, -1)[:, :S].reshape(B * S, -1)
+        total_pi = jnp.float32(0.0)
+        total_v = jnp.float32(0.0)
+        total_r = jnp.float32(0.0)
+        for k in range(K):
+            logits, v = jax.vmap(nets.prediction, in_axes=(None, 0))(params, h)
+            pi_target = jax.lax.dynamic_slice_in_dim(
+                traj.extras, k, S, axis=1
+            ).reshape(B * S, -1)
+            v_target = jax.lax.dynamic_slice_in_dim(
+                targets, k, S, axis=1
+            ).reshape(B * S)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            total_pi += -jnp.mean(jnp.sum(pi_target * logp, axis=-1))
+            total_v += jnp.mean(jnp.square(v - v_target))
+            a_k = jax.lax.dynamic_slice_in_dim(
+                traj.actions, k, S, axis=1
+            ).reshape(B * S)
+            r_k = jax.lax.dynamic_slice_in_dim(
+                traj.rewards, k, S, axis=1
+            ).reshape(B * S)
+            h, r_pred = jax.vmap(nets.dynamics, in_axes=(None, 0, 0))(
+                params, h, a_k
+            )
+            h = jax.lax.stop_gradient(h) * 0.5 + h * 0.5  # gradient scaling
+            total_r += jnp.mean(jnp.square(r_pred - r_k))
+
+        total = (
+            total_pi / K
+            + cfg.value_cost * total_v / K
+            + cfg.reward_cost * total_r / K
+        )
+        metrics = {
+            "loss": total, "pi": total_pi / K, "value": total_v / K,
+            "reward_pred": total_r / K,
+        }
+        return total, metrics

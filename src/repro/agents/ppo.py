@@ -1,0 +1,63 @@
+"""PPO agent for Sebulba.
+
+Same actor path as IMPALA (batched inference on actor cores), but the
+learner uses the clipped-surrogate objective with GAE — the ratio clip
+against the actors' behaviour log-probs handles the same policy-lag that
+V-trace corrects with importance clipping, so the two agents are directly
+comparable on the same Sebulba harness (an ablation the paper's framing
+invites but does not run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.data.trajectory import Trajectory
+from repro.rl import losses
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    clip_eps: float = 0.2
+    gae_lambda: float = 0.95
+    entropy_cost: float = 0.01
+    value_cost: float = 0.5
+
+
+class PPOAgent:
+    def __init__(self, network, config: PPOConfig = PPOConfig()):
+        self.net = network
+        self.cfg = config
+
+    def init(self, rng, obs_shape):
+        return self.net.init(rng, obs_shape)
+
+    def act(self, params, obs, rng):
+        logits, _ = self.net.apply(params, obs)
+        actions = jax.random.categorical(rng, logits)
+        logp = losses.log_prob(logits, actions)
+        return actions, logp, ()
+
+    def loss(self, params, traj: Trajectory):
+        cfg = self.cfg
+        B, T = traj.actions.shape
+        obs_flat = jax.tree.map(
+            lambda o: o.reshape((B * T,) + o.shape[2:]), traj.obs
+        )
+        logits, values = self.net.apply(params, obs_flat)
+        logits = logits.reshape(B, T, -1)
+        values = values.reshape(B, T)
+        _, bootstrap = self.net.apply(params, traj.bootstrap_obs)
+        out = losses.ppo_loss(
+            logits, values, traj.actions, traj.behaviour_logp,
+            traj.rewards, traj.discounts, bootstrap,
+            clip_eps=cfg.clip_eps, gae_lambda=cfg.gae_lambda,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+        )
+        metrics = {
+            "loss": out.total, "pg": out.pg, "value": out.value,
+            "entropy": out.entropy, "clip_frac": out.clip_frac,
+        }
+        return out.total, metrics

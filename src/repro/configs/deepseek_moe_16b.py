@@ -1,0 +1,47 @@
+"""deepseek-moe-16b — 2 shared + 64 routed top-6, fine-grained [arXiv:2401.06066].
+
+28L d_model=2048 16H (MHA kv=16) expert d_ff=1408 vocab=102400.
+First layer uses a dense FFN (width 10944); remaining 27 are MoE.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    source="arXiv:2401.06066",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    d_ff_dense=10_944,
+    vocab_size=102_400,
+    head_dim=128,
+    num_experts=64,
+    num_experts_per_tok=6,
+    num_shared_experts=2,
+    layer_pattern="D" + "M" * 27,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=128,
+        d_ff_dense=512,
+        vocab_size=512,
+        num_experts=4,
+        num_experts_per_tok=2,
+        num_shared_experts=1,
+        layer_pattern="DM",
+    )

@@ -1,0 +1,43 @@
+"""gemma3-4b — 5:1 local:global attention, 128k context [hf:google/gemma-3-1b-pt family].
+
+34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144, head_dim=256,
+sliding window 1024 on local layers, attn pattern LLLLLG (5 local : 1 global).
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    source="hf:google/gemma-3-1b-pt (4b scaling per assignment)",
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    d_ff=10_240,
+    vocab_size=262_144,
+    head_dim=256,
+    sliding_window=1024,
+    layer_pattern="LLLLLG",
+    rope_theta=1_000_000.0,  # global layers; local layers use 10k (model code)
+    qk_norm=True,
+    attn_logit_softcap=0.0,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        sliding_window=64,
+        layer_pattern="LG",
+    )

@@ -1,0 +1,43 @@
+"""granite-moe-1b-a400m — 32 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512 (per expert) vocab=49155,
+MoE 32 experts top-8, fine-grained experts.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49_155,
+    head_dim=64,
+    num_experts=32,
+    num_experts_per_tok=8,
+    num_shared_experts=0,
+    layer_pattern="M",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=128,
+        vocab_size=512,
+        num_experts=4,
+        num_experts_per_tok=2,
+    )

@@ -1,0 +1,43 @@
+"""llama-3.2-vision-11b — cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision].
+
+Language backbone only (per assignment): 40L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=128256, a cross-attention layer inserted every 5th layer.
+The ViT vision encoder is a STUB — input_specs() provides precomputed patch
+embeddings (6404 = 4 tiles x 1601 patches) of width d_model.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=128_256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    num_image_tokens=6404,
+    tie_embeddings=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        cross_attn_every=2,
+        num_image_tokens=16,
+    )

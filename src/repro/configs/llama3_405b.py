@@ -1,0 +1,43 @@
+"""llama3-405b — GQA, 128k vocab [arXiv:2407.21783].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256, head_dim=128,
+rope theta 500k.  Uses FSDP sharding rules + microbatching so that params +
+optimizer state + activations fit the production mesh (DESIGN.md §5).
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    source="arXiv:2407.21783",
+    num_layers=126,
+    d_model=16_384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53_248,
+    vocab_size=128_256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    sharding_rules="fsdp",
+    remat="layer",
+    microbatches=16,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=1024,
+        vocab_size=512,
+        sharding_rules="default",
+        microbatches=1,
+    )

@@ -1,0 +1,38 @@
+"""qwen3-4b — qk-norm, GQA [hf:Qwen/Qwen3-8B family, 4b per assignment].
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936, head_dim=128,
+qk-norm (RMSNorm on q/k heads), rope theta 1e6.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b",
+    family="dense",
+    source="hf:Qwen/Qwen3-8B (4b per assignment)",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=9728,
+    vocab_size=151_936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+    )

@@ -1,0 +1,47 @@
+"""whisper-medium — encoder-decoder, conv frontend stubbed [arXiv:2212.04356].
+
+24L encoder + 24L decoder, d_model=1024 16H (MHA kv=16) d_ff=4096
+vocab=51865.  The mel-spectrogram + conv feature extractor is a STUB —
+input_specs() provides 1500 precomputed frame embeddings.  Positions are
+learned-absolute (as in the paper's decoder); the real decoder context is
+448, noted in DESIGN.md — decode shapes are applied mechanically per the
+assignment.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,  # decoder depth
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51_865,
+    head_dim=64,
+    num_audio_frames=1500,
+    pos_embed="learned",
+    max_position=524_288,  # sized for the assigned decode shapes
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        encoder_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        num_audio_frames=32,
+        max_position=4096,
+    )

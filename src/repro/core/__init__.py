@@ -1,0 +1,5 @@
+"""Podracer core: the paper's two architectures (Anakin, Sebulba)."""
+
+from repro.core.anakin import Anakin, AnakinConfig  # noqa: F401
+from repro.core.sebulba import Sebulba, SebulbaConfig  # noqa: F401
+from repro.core.topology import CoreSplit, split_devices  # noqa: F401

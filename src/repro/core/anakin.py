@@ -1,0 +1,247 @@
+"""Anakin — online learning with the environment ON the accelerator.
+
+Paper Fig. 2, reproduced exactly:
+
+    def step_and_update_fn(...):
+        # 1) step the agent and environment N times
+        # 2) compute the loss or other RL objective
+        # 3) differentiate back through the entire loop
+
+    batched_fn    = jax.vmap(step_and_update)     # fill a TPU core
+    iterated_fn   = jax.lax.fori_loop(batched_fn) # stay out of Python
+    replicated_fn = <replicate across cores>      # paper: jax.pmap
+
+Two replication paths are provided:
+
+  * ``mode="shard_map"`` (paper-faithful): explicit SPMD via jax.shard_map
+    over a 1-D device mesh with an explicit ``jax.lax.pmean`` on the
+    gradients — the modern spelling of the paper's ``pmap`` + ``pmean``.
+  * ``mode="jit"``: jit + NamedSharding on the batch dimension; XLA GSPMD
+    inserts the gradient all-reduce automatically.  Same program, modern
+    idiom — kept separate so EXPERIMENTS.md §Perf can compare both.
+
+Properties preserved from the paper: zero host<->device transfers inside
+the training loop (env state lives on device), zero Python in the hot loop
+(``iterations`` steps run inside one XLA program via lax.scan), and bitwise
+determinism given a seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.rl import losses
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AnakinConfig:
+    unroll_length: int = 16  # N env steps per update
+    batch_per_device: int = 32  # parallel envs per core (vmap width)
+    iterations_per_call: int = 16  # updates fused into one XLA program
+    entropy_cost: float = 0.01
+    value_cost: float = 0.5
+    td_lambda: float = 0.9
+    mode: str = "shard_map"  # "shard_map" (paper-faithful) | "jit"
+
+
+class AnakinState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    env_state: PyTree  # (num_devices * batch_per_device, ...)
+    obs: jax.Array
+    rng: jax.Array  # per-env keys
+    step: jax.Array
+
+
+class Anakin:
+    """env + network + optimizer -> a fully-on-device online learner."""
+
+    def __init__(
+        self,
+        env,
+        network,  # .init(rng, obs_shape) -> params; .apply(params, obs) -> (logits, value)
+        optimizer: optim.GradientTransformation,
+        config: AnakinConfig = AnakinConfig(),
+        devices=None,
+    ):
+        self.env = env
+        self.net = network
+        self.opt = optimizer
+        self.cfg = config
+        devices = list(devices if devices is not None else jax.devices())
+        self.mesh = Mesh(devices, ("batch",))
+        self.num_devices = len(devices)
+        self.global_batch = self.num_devices * config.batch_per_device
+        self._run = self._build()
+
+    # ------------------------------------------------------------------
+
+    def init_state(self, rng: jax.Array) -> AnakinState:
+        rng, net_rng = jax.random.split(rng)
+        params = self.net.init(net_rng, self.env.obs_shape)
+        opt_state = self.opt.init(params)
+        env_rngs = jax.random.split(rng, self.global_batch)
+        env_state = jax.vmap(self.env.init)(env_rngs)
+        obs = jax.vmap(self.env.observe)(env_state)
+        state = AnakinState(
+            params=params,
+            opt_state=opt_state,
+            env_state=env_state,
+            obs=obs,
+            rng=env_rngs,
+            step=jnp.zeros((), jnp.int32),
+        )
+        # place: params/opt replicated, env/obs/rng sharded over the batch axis
+        batch_sharded = NamedSharding(self.mesh, P("batch"))
+        replicated = NamedSharding(self.mesh, P())
+        return AnakinState(
+            params=jax.device_put(state.params, replicated),
+            opt_state=jax.device_put(state.opt_state, replicated),
+            env_state=jax.device_put(state.env_state, batch_sharded),
+            obs=jax.device_put(state.obs, batch_sharded),
+            rng=jax.device_put(state.rng, batch_sharded),
+            step=jax.device_put(state.step, replicated),
+        )
+
+    # ------------------------------------------------------------------
+
+    def _unroll_and_loss(self, params, env_state, obs, rng):
+        """The paper's minimal unit (top of Fig. 2), for ONE environment.
+
+        Steps the env ``unroll_length`` times and computes the A2C loss;
+        differentiating this function differentiates back through the whole
+        interaction loop.  Called under vmap (batch) and grad.
+        """
+        cfg = self.cfg
+
+        def one_step(carry, _):
+            env_state, obs, rng = carry
+            rng, a_rng = jax.random.split(rng)
+            logits, value = self.net.apply(params, obs)
+            action = jax.random.categorical(a_rng, logits)
+            env_state, ts = self.env.step(env_state, action)
+            out = (logits, value, action, ts.reward, ts.discount)
+            return (env_state, ts.obs, rng), out
+
+        (env_state, obs, rng), (logits, values, actions, rewards, discounts) = (
+            jax.lax.scan(one_step, (env_state, obs, rng), None, cfg.unroll_length)
+        )
+        _, bootstrap = self.net.apply(params, obs)
+        return (
+            (logits, values, actions, rewards, discounts, bootstrap),
+            (env_state, obs, rng),
+        )
+
+    def _loss_fn(self, params, env_state, obs, rng):
+        cfg = self.cfg
+        # vmap the minimal unit over this device's batch of environments
+        (logits, values, actions, rewards, discounts, bootstrap), carry = jax.vmap(
+            self._unroll_and_loss, in_axes=(None, 0, 0, 0)
+        )(params, env_state, obs, rng)
+        # vmap output is (B, T, ...) — exactly what the loss wants
+        out = losses.a2c_loss(
+            logits, values, actions, rewards, discounts, bootstrap,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+            td_lambda=cfg.td_lambda,
+        )
+        metrics = {
+            "loss": out.total, "pg": out.pg, "value": out.value,
+            "entropy": out.entropy, "reward": jnp.mean(rewards),
+            "episodes": jnp.sum(discounts == 0.0),
+        }
+        return out.total, (carry, metrics)
+
+    def _update_once(self, state: AnakinState, sync: Callable) -> tuple[AnakinState, dict]:
+        grads, (carry, metrics) = jax.grad(self._loss_fn, has_aux=True)(
+            state.params, state.env_state, state.obs, state.rng
+        )
+        grads = sync(grads)  # pmean across replicas (paper's psum/pmean)
+        metrics = sync(metrics)
+        env_state, obs, rng = carry
+        updates, opt_state = self.opt.update(grads, state.opt_state, state.params)
+        params = optim.apply_updates(state.params, updates)
+        return (
+            AnakinState(params, opt_state, env_state, obs, rng, state.step + 1),
+            metrics,
+        )
+
+    def _build(self):
+        cfg = self.cfg
+
+        def iterated(state: AnakinState, sync) -> tuple[AnakinState, dict]:
+            # fori_loop/scan over many updates: no Python in the hot loop
+            def body(state, _):
+                return self._update_once(state, sync)
+
+            return jax.lax.scan(body, state, None, cfg.iterations_per_call)
+
+        if cfg.mode == "shard_map":
+            def sync(tree):
+                return jax.lax.pmean(tree, "batch")
+
+            @jax.jit
+            def run(state):
+                fn = jax.shard_map(
+                    lambda s: iterated(s, sync),
+                    mesh=self.mesh,
+                    in_specs=(AnakinState(
+                        params=P(), opt_state=P(), env_state=P("batch"),
+                        obs=P("batch"), rng=P("batch"), step=P(),
+                    ),),
+                    out_specs=(
+                        AnakinState(
+                            params=P(), opt_state=P(), env_state=P("batch"),
+                            obs=P("batch"), rng=P("batch"), step=P(),
+                        ),
+                        P(),
+                    ),
+                    check_vma=False,
+                )
+                return fn(state)
+
+            return run
+
+        if cfg.mode == "jit":
+            batch_sharded = NamedSharding(self.mesh, P("batch"))
+            replicated = NamedSharding(self.mesh, P())
+            shardings = AnakinState(
+                params=replicated, opt_state=replicated,
+                env_state=batch_sharded, obs=batch_sharded, rng=batch_sharded,
+                step=replicated,
+            )
+
+            @jax.jit
+            def run(state):
+                state = jax.lax.with_sharding_constraint(state, shardings)
+                return iterated(state, lambda tree: tree)
+
+            return run
+
+        raise ValueError(f"unknown anakin mode {cfg.mode!r}")
+
+    # ------------------------------------------------------------------
+
+    def run(self, state: AnakinState, num_calls: int = 1):
+        """Run ``num_calls`` compiled blocks of ``iterations_per_call`` updates."""
+        metrics = None
+        for _ in range(num_calls):
+            state, metrics = self._run(state)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return state, metrics
+
+    @property
+    def steps_per_call(self) -> int:
+        """Env steps per compiled call (the FPS numerator)."""
+        return (
+            self.cfg.iterations_per_call
+            * self.cfg.unroll_length
+            * self.global_batch
+        )

@@ -1,0 +1,348 @@
+"""Sebulba — decomposed actors and learners on a single host (paper Fig. 3).
+
+Reproduces the paper's dataflow exactly:
+
+  * the host's devices are split into A actor cores + (n-A) learner cores;
+  * one-or-more Python threads per actor core each own a *batched host
+    environment* (repro/envs/batched_env.py) and alternate in using their
+    actor core, hiding env-stepping latency behind device inference;
+  * actors accumulate fixed-length trajectories ON DEVICE, split them along
+    the batch dimension, send each shard device-to-device to a learner core,
+    and put the (device-array) handles on a Python queue;
+  * a single learner thread assembles the shards into one globally-sharded
+    batch over the learner mesh and runs the same update on every learner
+    core (shard_map), averaging gradients with jax.lax.pmean;
+  * after each update the learner pushes fresh parameters device-to-device
+    to every actor core; actor threads pick them up before their next
+    inference step.
+
+The V-trace (IMPALA) objective corrects for the actor/learner policy lag.
+``learner_microbatches`` implements the paper's MuZero trick of splitting
+the learner batch into N sequential micro-updates to decouple acting batch
+size from learning batch size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.core.topology import CoreSplit, split_devices
+from repro.data.trajectory import Trajectory, TrajectoryAccumulator
+from repro.rl import losses
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SebulbaConfig:
+    num_actor_cores: int = 2  # paper default: 2 actor / 6 learner
+    threads_per_actor_core: int = 2  # hide env latency (paper)
+    actor_batch_size: int = 32  # envs per actor thread (paper: 32..128)
+    trajectory_length: int = 20  # paper: 20 (IMPALA) .. 60
+    queue_capacity: int = 4
+    discount: float = 0.99
+    entropy_cost: float = 0.01
+    value_cost: float = 0.5
+    clip_rho: float = 1.0
+    clip_c: float = 1.0
+    learner_microbatches: int = 1  # MuZero batch-splitting trick
+
+
+class ImpalaAgent:
+    """Default Sebulba agent: batched-inference actor + V-trace learner.
+
+    Any object with the same three methods (init / act / loss) plugs into
+    Sebulba — MuZeroAgent (repro/agents/muzero.py) is the search-based one.
+    """
+
+    def __init__(self, network, config: "SebulbaConfig"):
+        self.net = network
+        self.cfg = config
+
+    def init(self, rng, obs_shape):
+        return self.net.init(rng, obs_shape)
+
+    def act(self, params, obs, rng):
+        logits, _ = self.net.apply(params, obs)
+        actions = jax.random.categorical(rng, logits)
+        logp = losses.log_prob(logits, actions)
+        return actions, logp, ()
+
+    def loss(self, params, traj: Trajectory):
+        cfg = self.cfg
+        B, T = traj.actions.shape
+        obs_flat = jax.tree.map(
+            lambda o: o.reshape((B * T,) + o.shape[2:]), traj.obs
+        )
+        logits, values = self.net.apply(params, obs_flat)
+        logits = logits.reshape(B, T, -1)
+        values = values.reshape(B, T)
+        _, bootstrap = self.net.apply(params, traj.bootstrap_obs)
+        out = losses.impala_loss(
+            logits, values, traj.actions, traj.behaviour_logp,
+            traj.rewards, traj.discounts, bootstrap,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+            clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
+        )
+        metrics = {
+            "loss": out.total, "pg": out.pg, "value": out.value,
+            "entropy": out.entropy, "rho": out.mean_rho,
+        }
+        return out.total, metrics
+
+
+class Sebulba:
+    def __init__(
+        self,
+        env_factory: Callable[[int], object],  # seed -> batched-able host env
+        make_batched_env: Callable[[Callable, int], object],
+        network=None,
+        optimizer: optim.GradientTransformation = None,
+        config: SebulbaConfig = SebulbaConfig(),
+        devices=None,
+        agent=None,
+    ):
+        self.cfg = config
+        self.agent = agent if agent is not None else ImpalaAgent(network, config)
+        self.opt = optimizer
+        self.env_factory = env_factory
+        self.make_batched_env = make_batched_env
+        self.split: CoreSplit = split_devices(config.num_actor_cores, devices)
+        self.learner_mesh = Mesh(list(self.split.learner_devices), ("batch",))
+        self.L = self.split.num_learners
+        if (config.actor_batch_size % self.L) != 0:
+            raise ValueError("actor batch must divide evenly across learners")
+
+        self._inference = jax.jit(self._inference_fn)
+        self._update = jax.jit(self._build_update())
+
+        # host-side state shared between threads
+        self._param_lock = threading.Lock()
+        self._actor_params: list[PyTree] = [None] * self.split.num_actors
+        self._queue: queue.Queue = queue.Queue(maxsize=config.queue_capacity)
+        self._stop = threading.Event()
+        self._actor_errors: list[BaseException] = []
+        self.frames = 0
+        self._frames_lock = threading.Lock()
+        self.episode_returns: deque = deque(maxlen=256)
+
+    # -------------------------------------------------------------- setup
+
+    def init(self, rng: jax.Array, obs_shape):
+        params = self.agent.init(rng, obs_shape)
+        replicated = NamedSharding(self.learner_mesh, P())
+        params = jax.device_put(params, replicated)
+        opt_state = jax.device_put(self.opt.init(params), replicated)
+        self._publish_params(params)
+        return params, opt_state
+
+    def _publish_params(self, params: PyTree) -> None:
+        """Device-to-device transfer of fresh params to every actor core."""
+        with self._param_lock:
+            for i, dev in enumerate(self.split.actor_devices):
+                self._actor_params[i] = jax.device_put(params, dev)
+
+    # -------------------------------------------------------------- actor
+
+    def _inference_fn(self, params, obs, rng):
+        return self.agent.act(params, obs, rng)
+
+    def _actor_thread(self, thread_id: int, core_id: int, seed: int) -> None:
+        try:
+            self._actor_loop(thread_id, core_id, seed)
+        except BaseException as e:  # surface crashes to the learner loop
+            self._actor_errors.append(e)
+            self._stop.set()
+            raise
+
+    def _actor_loop(self, thread_id: int, core_id: int, seed: int) -> None:
+        cfg = self.cfg
+        device = self.split.actor_devices[core_id]
+        env = self.make_batched_env(
+            lambda i: self.env_factory(seed * 10_000 + i), cfg.actor_batch_size
+        )
+        obs = env.reset()
+        acc = TrajectoryAccumulator(cfg.trajectory_length)
+        rng = jax.random.key(seed)
+        running_return = np.zeros(cfg.actor_batch_size)
+
+        while not self._stop.is_set():
+            with self._param_lock:
+                params = self._actor_params[core_id]
+            rng, a_rng = jax.random.split(rng)
+            obs_dev = jax.device_put(obs, device)
+            actions, logp, extras = self._inference(params, obs_dev, a_rng)
+            actions_host = np.asarray(actions)
+            next_obs, rewards, dones = env.step(actions_host)
+
+            running_return += rewards
+            for r in running_return[dones]:
+                self.episode_returns.append(float(r))
+            running_return[dones] = 0.0
+
+            discounts = (~dones).astype(np.float32) * cfg.discount
+            acc.add(
+                obs_dev,
+                actions,
+                jax.device_put(rewards, device),
+                jax.device_put(discounts, device),
+                logp,
+                extras,
+            )
+            with self._frames_lock:
+                self.frames += cfg.actor_batch_size
+            obs = next_obs
+
+            if acc.full:
+                traj = acc.drain(bootstrap_obs=jax.device_put(obs, device))
+                shards = self._shard_for_learners(traj)
+                try:
+                    self._queue.put(shards, timeout=5.0)
+                except queue.Full:
+                    if self._stop.is_set():
+                        return
+
+    def _shard_for_learners(self, traj: Trajectory):
+        """Split along batch, device_put each shard onto its learner core
+        (the paper's direct device-to-device trajectory transfer), and
+        reassemble handles as one globally-sharded array per leaf."""
+        sharding = NamedSharding(self.learner_mesh, P("batch"))
+
+        def to_global(x):
+            pieces = np.split(np.asarray(x), self.L, axis=0) if self.L > 1 else None
+            if pieces is None:
+                return jax.device_put(x, sharding)
+            shards = [
+                jax.device_put(p, d)
+                for p, d in zip(pieces, self.split.learner_devices)
+            ]
+            return jax.make_array_from_single_device_arrays(
+                x.shape, sharding, shards
+            )
+
+        return jax.tree.map(to_global, traj)
+
+    # ------------------------------------------------------------- learner
+
+    def _build_update(self):
+        cfg = self.cfg
+
+        def shard_update(params, opt_state, traj):
+            def micro_step(carry, mb: Trajectory):
+                params, opt_state = carry
+                grads, metrics = jax.grad(self.agent.loss, has_aux=True)(params, mb)
+                grads = jax.lax.pmean(grads, "batch")
+                metrics = jax.lax.pmean(metrics, "batch")
+                updates, opt_state = self.opt.update(grads, opt_state, params)
+                params = optim.apply_updates(params, updates)
+                return (params, opt_state), metrics
+
+            if cfg.learner_microbatches > 1:
+                n = cfg.learner_microbatches
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), traj
+                )
+                (params, opt_state), metrics = jax.lax.scan(
+                    micro_step, (params, opt_state), mbs
+                )
+                metrics = jax.tree.map(jnp.mean, metrics)
+            else:
+                (params, opt_state), metrics = micro_step(
+                    (params, opt_state), traj
+                )
+            return params, opt_state, metrics
+
+        def update(params, opt_state, traj):
+            traj_spec = jax.tree.map(lambda _: P("batch"), traj)
+            fn = jax.shard_map(
+                shard_update,
+                mesh=self.learner_mesh,
+                in_specs=(P(), P(), traj_spec),
+                out_specs=(P(), P(), P()),
+                check_vma=False,
+            )
+            return fn(params, opt_state, traj)
+
+        return update
+
+    # ----------------------------------------------------------------- run
+
+    def run(
+        self,
+        rng: jax.Array,
+        obs_shape,
+        total_frames: int,
+        log_every: int = 0,
+    ) -> dict:
+        """Train until ``total_frames`` host env frames have been generated."""
+        cfg = self.cfg
+        params, opt_state = self.init(rng, obs_shape)
+
+        threads = []
+        tid = 0
+        for core in range(self.split.num_actors):
+            for _ in range(cfg.threads_per_actor_core):
+                t = threading.Thread(
+                    target=self._actor_thread, args=(tid, core, tid + 1),
+                    daemon=True, name=f"actor-{tid}",
+                )
+                t.start()
+                threads.append(t)
+                tid += 1
+
+        updates = 0
+        metrics = {}
+        t0 = time.time()
+        try:
+            while self.frames < total_frames:
+                if self._actor_errors:
+                    raise RuntimeError(
+                        "actor thread crashed"
+                    ) from self._actor_errors[0]
+                try:
+                    shards = self._queue.get(timeout=10.0)
+                except queue.Empty:
+                    continue
+                params, opt_state, metrics = self._update(params, opt_state, shards)
+                self._publish_params(params)
+                updates += 1
+                if log_every and updates % log_every == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    ret = (
+                        np.mean(self.episode_returns)
+                        if self.episode_returns else float("nan")
+                    )
+                    print(
+                        f"update {updates} frames {self.frames} "
+                        f"return {ret:.2f} " +
+                        " ".join(f"{k}={v:.3f}" for k, v in m.items())
+                    )
+        finally:
+            self._stop.set()
+            for t in threads:
+                t.join(timeout=10.0)
+
+        dt = time.time() - t0
+        return {
+            "params": params,
+            "updates": updates,
+            "frames": self.frames,
+            "fps": self.frames / dt,
+            "seconds": dt,
+            "mean_return": (
+                float(np.mean(self.episode_returns))
+                if self.episode_returns else float("nan")
+            ),
+            "metrics": {k: float(v) for k, v in metrics.items()},
+        }

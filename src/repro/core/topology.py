@@ -1,0 +1,48 @@
+"""Device topology bookkeeping for the Podracer architectures.
+
+Sebulba splits the cores attached to each host into disjoint actor and
+learner sets (paper Fig. 1c / Fig. 3); Anakin uses every core uniformly
+(paper Fig. 1b).  On real TPU hosts ``jax.local_devices()`` returns the 8
+cores of Fig. 1a; on this CPU container the same code runs against
+``--xla_force_host_platform_device_count`` placeholder devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSplit:
+    actor_devices: tuple
+    learner_devices: tuple
+
+    @property
+    def num_actors(self) -> int:
+        return len(self.actor_devices)
+
+    @property
+    def num_learners(self) -> int:
+        return len(self.learner_devices)
+
+
+def split_devices(num_actor_cores: int, devices=None) -> CoreSplit:
+    """Split local devices into A actor cores + (n - A) learner cores.
+
+    The paper's default for model-free agents is a 1:3 actor:learner split
+    (2 actor + 6 learner cores on an 8-core host).  With a single device
+    (CPU quickstart) the same device plays both roles.
+    """
+    devices = tuple(devices if devices is not None else jax.local_devices())
+    if len(devices) == 1:
+        return CoreSplit(actor_devices=devices, learner_devices=devices)
+    if not 0 < num_actor_cores < len(devices):
+        raise ValueError(
+            f"need 0 < actor cores < {len(devices)}, got {num_actor_cores}"
+        )
+    return CoreSplit(
+        actor_devices=devices[:num_actor_cores],
+        learner_devices=devices[num_actor_cores:],
+    )

@@ -1,0 +1,77 @@
+"""Trajectory containers shared by Anakin and Sebulba.
+
+``Trajectory`` is batch-major (B, T, ...).  Sebulba actors accumulate
+fixed-length trajectories *on device* (the paper: "each actor thread
+accumulates a batch of trajectories of fixed length on device") via
+``TrajectoryAccumulator`` — a list of per-step device slices that is stacked
+device-side only when the trajectory is complete, then split along the batch
+dimension for the learner shards.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Trajectory(NamedTuple):
+    obs: Any  # (B, T, ...)
+    actions: jax.Array  # (B, T) int32
+    rewards: jax.Array  # (B, T) float32
+    discounts: jax.Array  # (B, T) float32
+    behaviour_logp: jax.Array  # (B, T) float32
+    bootstrap_obs: Any  # (B, ...) obs at T (for the bootstrap value)
+    extras: Any = ()  # agent-specific per-step data (e.g. MCTS visit probs)
+
+
+class TrajectoryAccumulator:
+    """Accumulates T steps of (obs, action, reward, discount, logp, extras)."""
+
+    def __init__(self, length: int):
+        self.length = length
+        self._steps: list[tuple] = []
+
+    def add(self, obs, action, reward, discount, logp, extras=()) -> None:
+        self._steps.append((obs, action, reward, discount, logp, extras))
+
+    @property
+    def full(self) -> bool:
+        return len(self._steps) >= self.length
+
+    def drain(self, bootstrap_obs) -> Trajectory:
+        steps = self._steps[: self.length]
+        self._steps = self._steps[self.length :]
+        stack = lambda i: jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=1), *[s[i] for s in steps]
+        )
+        return Trajectory(
+            obs=stack(0),
+            actions=stack(1),
+            rewards=stack(2),
+            discounts=stack(3),
+            behaviour_logp=stack(4),
+            bootstrap_obs=bootstrap_obs,
+            extras=(
+                ()
+                if isinstance(steps[0][5], tuple) and not steps[0][5]
+                else stack(5)
+            ),
+        )
+
+
+def split_for_learners(traj: Trajectory, num_learners: int) -> list[Trajectory]:
+    """Split a trajectory batch along B into per-learner shards (paper:
+    "splits the batch of trajectories along the batch dimension, sends each
+    shard directly to one of the learners")."""
+
+    def split(x):
+        return jnp.split(x, num_learners, axis=0)
+
+    parts = jax.tree.map(split, traj)
+    return [
+        jax.tree.map(lambda p: p[i], parts, is_leaf=lambda x: isinstance(x, list))
+        for i in range(num_learners)
+    ]

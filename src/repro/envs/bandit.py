@@ -1,0 +1,49 @@
+"""Contextual bandit — the smallest pure-JAX Anakin environment (used for
+MCTS sanity checks and as the fastest smoke-test env)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.types import TimeStep
+
+
+class BanditState(NamedTuple):
+    best_arm: jax.Array
+    rng: jax.Array
+
+
+class Bandit:
+    def __init__(self, num_arms: int = 4, noise: float = 0.1):
+        self.num_actions = num_arms
+        self.noise = noise
+        self.obs_shape = (num_arms,)
+        self.discount = 0.0  # one-step episodes
+
+    def init(self, rng: jax.Array) -> BanditState:
+        rng, sub = jax.random.split(rng)
+        return BanditState(
+            best_arm=jax.random.randint(sub, (), 0, self.num_actions), rng=rng
+        )
+
+    def observe(self, s: BanditState) -> jax.Array:
+        # context reveals the best arm (a learnable but non-trivial mapping)
+        return jax.nn.one_hot(s.best_arm, self.num_actions)
+
+    def step(self, s: BanditState, action: jax.Array):
+        rng, k1, k2 = jax.random.split(s.rng, 3)
+        reward = jnp.where(action == s.best_arm, 1.0, 0.0)
+        reward = reward + self.noise * jax.random.normal(k1)
+        new_state = BanditState(
+            best_arm=jax.random.randint(k2, (), 0, self.num_actions), rng=rng
+        )
+        ts = TimeStep(
+            obs=self.observe(new_state),
+            reward=reward.astype(jnp.float32),
+            discount=jnp.float32(0.0),
+            first=jnp.bool_(True),
+        )
+        return new_state, ts

@@ -1,0 +1,64 @@
+"""The paper's "special batched environment".
+
+    "each Python actor-thread interacts with a special batched environment;
+     this is exposed to Python as a single environment that takes a batch of
+     actions and returns a batch of observations; behind the scenes it steps
+     each environment in the batch in parallel using a shared pool of C++
+     threads."
+
+Here the shared pool is a ``ThreadPoolExecutor`` (numpy releases the GIL for
+array work, and one pool is shared by all actor threads, as in the paper).
+Episodes auto-reset so actors never block on episode boundaries; ``done``
+flags mark boundaries for the learner's discount mask.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable
+
+import numpy as np
+
+
+class BatchedHostEnv:
+    _shared_pool: ThreadPoolExecutor | None = None
+
+    @classmethod
+    def shared_pool(cls, workers: int = 8) -> ThreadPoolExecutor:
+        if cls._shared_pool is None:
+            cls._shared_pool = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="env-pool"
+            )
+        return cls._shared_pool
+
+    def __init__(
+        self,
+        env_factory: Callable[[int], object],
+        num_envs: int,
+        pool: ThreadPoolExecutor | None = None,
+    ):
+        self.envs = [env_factory(i) for i in range(num_envs)]
+        self.num_envs = num_envs
+        self.num_actions = self.envs[0].num_actions
+        self.obs_shape = self.envs[0].obs_shape
+        self.pool = pool or self.shared_pool()
+
+    def reset(self) -> np.ndarray:
+        return np.stack([env.reset() for env in self.envs])
+
+    def _step_one(self, i: int, action: int):
+        env = self.envs[i]
+        obs, reward, done, _ = env.step(int(action))
+        if done:
+            obs = env.reset()
+        return obs, reward, done
+
+    def step(self, actions: np.ndarray):
+        """actions (N,) -> obs (N, ...), rewards (N,), dones (N,)."""
+        results = list(
+            self.pool.map(self._step_one, range(self.num_envs), actions)
+        )
+        obs = np.stack([r[0] for r in results])
+        rewards = np.array([r[1] for r in results], np.float32)
+        dones = np.array([r[2] for r in results], bool)
+        return obs, rewards, dones

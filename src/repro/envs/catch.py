@@ -1,0 +1,75 @@
+"""Catch — the bsuite grid environment used in the paper's Anakin Colab.
+
+A ball falls from the top of a (rows x cols) board; the agent moves a paddle
+on the bottom row (left / stay / right) and gets +1 for catching the ball,
+-1 for missing.  Written as pure JAX so the whole env lives on the
+accelerator (Anakin's requirement).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.types import TimeStep
+
+
+class CatchState(NamedTuple):
+    ball_y: jax.Array
+    ball_x: jax.Array
+    paddle_x: jax.Array
+    rng: jax.Array
+
+
+class Catch:
+    def __init__(self, rows: int = 10, cols: int = 5):
+        self.rows = rows
+        self.cols = cols
+        self.num_actions = 3
+        self.obs_shape = (rows, cols)
+        self.discount = 0.99
+
+    def _spawn(self, rng: jax.Array) -> CatchState:
+        rng, sub = jax.random.split(rng)
+        ball_x = jax.random.randint(sub, (), 0, self.cols)
+        return CatchState(
+            ball_y=jnp.int32(0),
+            ball_x=ball_x,
+            paddle_x=jnp.int32(self.cols // 2),
+            rng=rng,
+        )
+
+    def init(self, rng: jax.Array) -> CatchState:
+        return self._spawn(rng)
+
+    def observe(self, s: CatchState) -> jax.Array:
+        board = jnp.zeros((self.rows, self.cols), jnp.float32)
+        board = board.at[s.ball_y, s.ball_x].set(1.0)
+        board = board.at[self.rows - 1, s.paddle_x].set(1.0)
+        return board
+
+    def step(self, s: CatchState, action: jax.Array) -> tuple[CatchState, TimeStep]:
+        dx = action - 1  # {0,1,2} -> {-1,0,1}
+        paddle_x = jnp.clip(s.paddle_x + dx, 0, self.cols - 1)
+        ball_y = s.ball_y + 1
+        done = ball_y == self.rows - 1
+        caught = done & (s.ball_x == paddle_x)
+        reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+        discount = jnp.where(done, 0.0, self.discount)
+
+        moved = CatchState(ball_y=ball_y, ball_x=s.ball_x, paddle_x=paddle_x,
+                           rng=s.rng)
+        fresh = self._spawn(s.rng)
+        fresh = fresh._replace(paddle_x=paddle_x)
+        new_state = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), fresh, moved
+        )
+        ts = TimeStep(
+            obs=self.observe(new_state),
+            reward=reward.astype(jnp.float32),
+            discount=discount.astype(jnp.float32),
+            first=done,
+        )
+        return new_state, ts

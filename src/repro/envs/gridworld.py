@@ -1,0 +1,74 @@
+"""GridWorld — procedurally-placed goal navigation, pure JAX.
+
+The agent walks an N x N grid (4 actions); +1 and episode end at the goal,
+small step penalty otherwise, timeout after ``horizon`` steps.  Stands in
+for the "rich set of JAX environments" regime of Oh et al. (2021) that
+Anakin was built to drive.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.types import TimeStep
+
+
+class GridState(NamedTuple):
+    pos: jax.Array  # (2,) int32
+    goal: jax.Array  # (2,) int32
+    t: jax.Array  # steps so far
+    rng: jax.Array
+
+
+_MOVES = jnp.array([[-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+
+
+class GridWorld:
+    def __init__(self, size: int = 7, horizon: int = 50):
+        self.size = size
+        self.horizon = horizon
+        self.num_actions = 4
+        self.obs_shape = (size, size, 2)
+        self.discount = 0.99
+
+    def _spawn(self, rng: jax.Array) -> GridState:
+        rng, k1, k2 = jax.random.split(rng, 3)
+        pos = jax.random.randint(k1, (2,), 0, self.size)
+        goal = jax.random.randint(k2, (2,), 0, self.size)
+        # nudge goal off the agent deterministically if they collide
+        goal = jnp.where(
+            jnp.all(goal == pos), (goal + 1) % self.size, goal
+        )
+        return GridState(pos=pos, goal=goal, t=jnp.int32(0), rng=rng)
+
+    def init(self, rng: jax.Array) -> GridState:
+        return self._spawn(rng)
+
+    def observe(self, s: GridState) -> jax.Array:
+        obs = jnp.zeros(self.obs_shape, jnp.float32)
+        obs = obs.at[s.pos[0], s.pos[1], 0].set(1.0)
+        obs = obs.at[s.goal[0], s.goal[1], 1].set(1.0)
+        return obs
+
+    def step(self, s: GridState, action: jax.Array) -> tuple[GridState, TimeStep]:
+        pos = jnp.clip(s.pos + _MOVES[action], 0, self.size - 1)
+        t = s.t + 1
+        reached = jnp.all(pos == s.goal)
+        timeout = t >= self.horizon
+        done = reached | timeout
+        reward = jnp.where(reached, 1.0, -0.01)
+        discount = jnp.where(done, 0.0, self.discount)
+
+        moved = GridState(pos=pos, goal=s.goal, t=t, rng=s.rng)
+        fresh = self._spawn(s.rng)
+        new_state = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, moved)
+        ts = TimeStep(
+            obs=self.observe(new_state),
+            reward=reward.astype(jnp.float32),
+            discount=discount.astype(jnp.float32),
+            first=done,
+        )
+        return new_state, ts

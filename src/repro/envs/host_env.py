@@ -1,0 +1,76 @@
+"""Host-side (CPU, numpy) environment for Sebulba — the "arbitrary
+environment that cannot be compiled to TPU" of the paper (their Atari).
+
+``HostPong`` is a minimal Pong-like arcade game: a ball bounces around an
+(H x W) board, the agent moves a paddle on the bottom row; an episode is a
+rally of ``max_lives`` balls.  Observations are (H, W, 1) float32 frames.
+Deliberately implemented with numpy state mutation + a dm_env-style step
+API, so it exercises exactly the host<->device pipeline Sebulba exists for.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class HostPong:
+    num_actions = 3  # left / stay / right
+
+    def __init__(self, height: int = 16, width: int = 16, max_lives: int = 3,
+                 seed: int = 0):
+        self.h = height
+        self.w = width
+        self.max_lives = max_lives
+        self.obs_shape = (height, width, 1)
+        self._rng = np.random.RandomState(seed)
+        self._reset_ball()
+        self.paddle = self.w // 2
+        self.lives = self.max_lives
+        self.needs_reset = False
+
+    def _reset_ball(self) -> None:
+        self.ball_y = 0.0
+        self.ball_x = float(self._rng.randint(1, self.w - 1))
+        self.vy = 1.0
+        self.vx = float(self._rng.choice([-1, 1]))
+
+    def reset(self) -> np.ndarray:
+        self._reset_ball()
+        self.paddle = self.w // 2
+        self.lives = self.max_lives
+        self.needs_reset = False
+        return self._observe()
+
+    def _observe(self) -> np.ndarray:
+        obs = np.zeros(self.obs_shape, np.float32)
+        y = int(np.clip(round(self.ball_y), 0, self.h - 1))
+        x = int(np.clip(round(self.ball_x), 0, self.w - 1))
+        obs[y, x, 0] = 1.0
+        obs[self.h - 1, self.paddle, 0] = 1.0
+        return obs
+
+    def step(self, action: int):
+        """-> (obs, reward, done, info).  Auto-requires reset() after done."""
+        assert not self.needs_reset, "episode ended; call reset()"
+        self.paddle = int(np.clip(self.paddle + (action - 1), 0, self.w - 1))
+        self.ball_y += self.vy
+        self.ball_x += self.vx
+        if self.ball_x <= 0 or self.ball_x >= self.w - 1:
+            self.vx = -self.vx
+            self.ball_x = float(np.clip(self.ball_x, 0, self.w - 1))
+        reward = 0.0
+        if self.ball_y >= self.h - 1:
+            if abs(self.ball_x - self.paddle) <= 1:
+                reward = 1.0
+                self.vy = -1.0
+                self.ball_y = float(self.h - 2)
+            else:
+                reward = -1.0
+                self.lives -= 1
+                self._reset_ball()
+        elif self.ball_y <= 0:
+            self.vy = 1.0
+        done = self.lives <= 0
+        if done:
+            self.needs_reset = True
+        return self._observe(), reward, done, {}

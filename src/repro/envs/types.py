@@ -1,0 +1,23 @@
+"""Environment interfaces.
+
+Anakin environments are *pure JAX functions* (the paper's requirement):
+``init(rng) -> state`` and ``step(state, action) -> (state, TimeStep)``.
+Episode termination is signalled by ``discount == 0``; environments
+auto-reset inside ``step`` so that the agent-environment loop is a single
+unrollable XLA program (no Python between steps).
+
+Host environments (Sebulba) follow a dm_env-like imperative API in numpy.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+
+
+class TimeStep(NamedTuple):
+    obs: jax.Array
+    reward: jax.Array  # float32 scalar
+    discount: jax.Array  # float32 scalar; 0.0 = episode ended this step
+    first: jax.Array  # bool: this obs starts a new episode

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package is <name>/{<name>.py, ops.py, ref.py}:
+  * <name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  * ops.py    — jitted wrapper with backend dispatch (pallas on TPU,
+                equivalent jnp path elsewhere; interpret=True for CPU tests)
+  * ref.py    — pure-jnp oracle the kernel is validated against
+
+Kernels: flash_attention (prefill/training fwd; training bwd runs through
+the flash custom VJP in repro/models/attention.py), flash_decode
+(single-token decode over long KV caches), ssd_scan (Mamba-2 chunked SSD),
+rglru_scan (Griffin RG-LRU), vtrace (IMPALA reverse scan).
+"""

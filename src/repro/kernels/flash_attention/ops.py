@@ -1,0 +1,42 @@
+"""Jitted flash attention wrapper with backend dispatch.
+
+On TPU the Pallas kernel runs; elsewhere the chunked online-softmax jnp
+implementation (repro/models/attention.py) — same math, same O(T·block)
+memory — is used.  ``interpret=True`` exercises the Pallas kernel on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "impl", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "pallas" or interpret:
+        from repro.kernels.flash_attention.flash_attention import (
+            flash_attention_pallas,
+        )
+
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, interpret=interpret
+        )
+    from repro.models import attention
+
+    if window:
+        return attention.sliding_window_attention(q, k, v, window=window)
+    return attention.full_attention(q, k, v, causal=causal)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention: naive full-softmax attention.
+
+Only used at test shapes (the (T, S) matrix is materialized).  GQA via the
+(K, G) head grouping; optional causality and sliding window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, T, H, h)
+    k: jax.Array,  # (B, S, K, h)
+    v: jax.Array,  # (B, S, K, h)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, T, H, h = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, h).astype(jnp.float32) * (h**-0.5)
+    logits = jnp.einsum(
+        "btkgh,bskh->bkgts", qg, k.astype(jnp.float32)
+    )  # (B, K, G, T, S)
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, h).astype(q.dtype)

@@ -1,0 +1,129 @@
+"""Flash-decoding for TPU in Pallas: single-token attention over a long KV
+cache (the Sebulba-actor / serve_step hot loop).
+
+Grid: (B, K, num_s_blocks) — the cache-sequence dimension is the sequential
+TPU grid axis; the online-softmax state for the G grouped query heads lives
+in VMEM scratch and persists across cache blocks.  Each grid step streams
+one (block_s, h) tile of K and V through the MXU against the (G, h) query
+tile, so the kernel is purely HBM-bandwidth-bound — the roofline floor for
+decode.  Blocks whose positions are entirely masked (beyond ``pos`` or
+outside the sliding window) are skipped with pl.when, so decode cost tracks
+the *filled* cache length, not the allocated one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    pos_ref,  # scalar prefetch: (1,) int32
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,  # output
+    m_ref, l_ref, acc_ref,  # VMEM scratch
+    *,
+    block_s: int,
+    num_s_blocks: int,
+    window: int,
+    sm_scale: float,
+):
+    si = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s_start = si * block_s
+    run = s_start <= pos
+    if window:
+        run &= s_start + block_s - 1 > pos - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (G, h)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, h)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = q @ k.T  # (G, bs)
+        k_pos = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = k_pos <= pos
+        if window:
+            valid &= k_pos > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        scale = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * scale + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * scale[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(si == num_s_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_s", "interpret")
+)
+def flash_decode_pallas(
+    q: jax.Array,  # (B, 1, H, h)
+    k_cache: jax.Array,  # (B, S, K, h)
+    v_cache: jax.Array,  # (B, S, K, h)
+    pos: jax.Array,  # scalar int32
+    *,
+    window: int = 0,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, H, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"S={S} must divide block_s={block_s}")
+    ns = S // block_s
+
+    qh = q.reshape(B, K, G, h)  # (B, K, G, h)
+    grid = (B, K, ns)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel,
+            block_s=block_s, num_s_blocks=ns, window=window,
+            sm_scale=h**-0.5,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, h), lambda b, k, si, pos: (b, k, 0, 0)),
+                pl.BlockSpec(
+                    (1, block_s, 1, h), lambda b, k, si, pos: (b, si, k, 0)
+                ),
+                pl.BlockSpec(
+                    (1, block_s, 1, h), lambda b, k, si, pos: (b, si, k, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, G, h), lambda b, k, si, pos: (b, k, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, h), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, h), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray([pos], jnp.int32), qh, k_cache, v_cache)
+    return out.reshape(B, 1, H, h)

@@ -1,0 +1,31 @@
+"""Jitted flash-decoding wrapper: Pallas on TPU, jnp einsum elsewhere."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "interpret"))
+def flash_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "pallas" or interpret:
+        from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+
+        return flash_decode_pallas(
+            q, k_cache, v_cache, pos, window=window, interpret=interpret
+        )
+    from repro.models.attention import decode_attention
+
+    return decode_attention(q, k_cache, v_cache, pos, window=window)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for single-token decode attention against a KV cache.
+
+q: (B, 1, H, h); k_cache/v_cache: (B, S, K, h); pos: scalar — attend to
+cache entries <= pos (and > pos - window when window > 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    B, _, H, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, h).astype(jnp.float32) * (h**-0.5)
+    logits = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32)
+    )
+    k_pos = jnp.arange(S)
+    valid = k_pos <= pos
+    if window:
+        valid &= k_pos > pos - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, h).astype(q.dtype)

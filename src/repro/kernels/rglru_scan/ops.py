@@ -1,0 +1,114 @@
+"""Jitted RG-LRU wrapper.
+
+Default non-TPU path uses ``jax.lax.associative_scan`` (log-depth, XLA
+friendly — the TPU-native adaptation of Griffin's linear scan); on TPU the
+Pallas kernel (rglru_scan.py) runs the recurrence sequentially in VMEM,
+which is faster than the log-depth scan for the widths used here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _assoc_scan_fwd_impl(x, a, gate_i, h0):
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - af**2, 0.0))
+    u = beta * (gate_i.astype(jnp.float32) * xf)  # (B, T, W)
+    if h0 is not None:
+        # fold h0 into the first input: h_1 = a_1 h_0 + u_1
+        u = u.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (af, u), axis=1)
+    del a_cum
+    return h.astype(x.dtype), h
+
+
+@jax.custom_vjp
+def _assoc_scan_core(x, a, gate_i):
+    """RG-LRU scan (zero initial state) with a linear-cost custom VJP.
+
+    Autodiff through associative_scan saves O(log T) tree levels of (B,T,W)
+    intermediates — the dominant training-memory term for the hybrid arch
+    (EXPERIMENTS.md §Perf rollout).  The recurrence backward is itself a
+    reverse linear scan over the saved outputs:
+
+        g_t = dy_t + a_{t+1} g_{t+1}
+        dx_t = g_t β_t i_t;   di_t = g_t β_t x_t
+        da_t = g_t (h_{t-1} − (a_t/β_t) i_t x_t)
+    """
+    y, _ = _assoc_scan_fwd_impl(x, a, gate_i, None)
+    return y
+
+
+def _assoc_core_fwd(x, a, gate_i):
+    y, h = _assoc_scan_fwd_impl(x, a, gate_i, None)
+    return y, (x, a, gate_i, h)
+
+
+def _assoc_core_bwd(res, dy):
+    x, a, gate_i, h = res
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    gif = gate_i.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - af**2, 0.0))
+
+    # reverse scan: g_t = dy_t + a_{t+1} g_{t+1}  (A_t = a_{t+1}, B_t = dy_t;
+    # reverse=True flips, runs the standard first-order combine, flips back)
+    a_next = jnp.concatenate([af[:, 1:], jnp.zeros_like(af[:, :1])], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, g = jax.lax.associative_scan(
+        combine, (a_next, dyf), axis=1, reverse=True
+    )
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    dx = g * beta * gif
+    di = g * beta * xf
+    dbeta_da = -af / jnp.maximum(beta, 1e-6)
+    da = g * (h_prev + dbeta_da * gif * xf)
+    return dx.astype(x.dtype), da.astype(a.dtype), di.astype(gate_i.dtype)
+
+
+_assoc_scan_core.defvjp(_assoc_core_fwd, _assoc_core_bwd)
+
+
+def _assoc_scan(x, a, gate_i, h0):
+    if h0 is None:
+        y = _assoc_scan_core(x, a, gate_i)
+        return y, y[:, -1].astype(jnp.float32)
+    y, h = _assoc_scan_fwd_impl(x, a, gate_i, h0)
+    return y, h[:, -1]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def rglru_scan(
+    x: jax.Array,
+    a: jax.Array,
+    gate_i: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU scan.  x, a, gate_i: (B, T, W) -> y (B, T, W), h_T (B, W)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "pallas" or interpret:
+        from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+        return rglru_scan_pallas(x, a, gate_i, h0, interpret=interpret)
+    return _assoc_scan(x, a, gate_i, h0)

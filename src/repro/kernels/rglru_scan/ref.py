@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the RG-LRU recurrence (Griffin, arXiv:2402.19427).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+where ``a_t`` in (0, 1) is the state-decay gate and ``i_t`` the input gate
+(both already computed by the caller).  All elementwise, width-parallel.
+
+Shapes: x, a, i: (B, T, W);  h0: (B, W).  Returns y: (B, T, W), h_T: (B, W).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(
+    x: jax.Array, a: jax.Array, gate_i: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    B, T, W = x.shape
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    inf_ = gate_i.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    beta = jnp.sqrt(jnp.maximum(1.0 - af**2, 0.0))
+    u = beta * (inf_ * xf)  # (B, T, W)
+
+    def step(h, inp):
+        at, ut = inp
+        h = at * h + ut
+        return h, h
+
+    h_final, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32), (jnp.moveaxis(af, 1, 0), jnp.moveaxis(u, 1, 0))
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+def rglru_step_ref(
+    h: jax.Array, x: jax.Array, a: jax.Array, gate_i: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  h: (B, W); x, a, gate_i: (B, W)."""
+    af = a.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - af**2, 0.0))
+    h = af * h.astype(jnp.float32) + beta * (
+        gate_i.astype(jnp.float32) * x.astype(jnp.float32)
+    )
+    return h.astype(x.dtype), h

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan (naive sequential recurrence).
+
+Recurrence (per batch b, head h, with state S in R^{P x N}):
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * (x_t outer B_t)
+    y_t = S_t @ C_t
+
+Shapes:
+    x  : (B, T, H, P)   inputs per head
+    dt : (B, T, H)      positive step sizes (already softplus-ed)
+    A  : (H,)           negative per-head decay
+    Bm : (B, T, N)      input->state projection (single group)
+    Cm : (B, T, N)      state->output projection
+Returns:
+    y  : (B, T, H, P)
+    S  : (B, H, P, N)   final state
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * Af)  # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        S = S * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", S, Ct)
+        return S, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    S, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, T, H, P)
+    return y, S
+
+
+def ssd_step_ref(
+    S: jax.Array,
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  S: (B,H,P,N); x: (B,H,P); dt: (B,H); Bm/Cm: (B,N)."""
+    decay = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))
+    upd = jnp.einsum(
+        "bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None], Bm.astype(jnp.float32)
+    )
+    S = S * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), S

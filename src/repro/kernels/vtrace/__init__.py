@@ -1,0 +1,1 @@
+from repro.kernels.vtrace.ops import vtrace  # noqa: F401

@@ -1,0 +1,79 @@
+"""Pure-jnp oracle for V-trace (IMPALA, Espeholt et al. 2018).
+
+Given a trajectory of length T (time-major here is avoided; we use
+batch-major (B, T) throughout, matching the rest of the code base):
+
+    rho_t = min(rho_bar, exp(log pi - log mu))
+    c_t   = lambda * min(c_bar, exp(log pi - log mu))
+    delta_t = rho_t * (r_t + gamma_t * V_{t+1} - V_t)
+    vs_t  = V_t + delta_t + gamma_t * c_t * (vs_{t+1} - V_{t+1})
+    adv_t = rho_t * (r_t + gamma_t * vs_{t+1} - V_t)
+
+The reverse recursion over t is the RL hot loop the Pallas kernel
+(vtrace.py) implements; this oracle uses a reverse lax.scan.
+
+Inputs (all (B, T) float32 except bootstrap (B,)):
+    log_rhos    log pi - log mu
+    discounts   gamma_t (0 at episode ends)
+    rewards     r_t
+    values      V(s_t)
+    bootstrap   V(s_T)
+Returns:
+    vs (B, T), pg_advantages (B, T)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VTraceOutput(NamedTuple):
+    vs: jax.Array
+    pg_advantages: jax.Array
+
+
+def vtrace_ref(
+    log_rhos: jax.Array,
+    discounts: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    bootstrap_value: jax.Array,
+    *,
+    clip_rho: float = 1.0,
+    clip_c: float = 1.0,
+    lambda_: float = 1.0,
+) -> VTraceOutput:
+    rhos = jnp.exp(log_rhos.astype(jnp.float32))
+    clipped_rhos = jnp.minimum(clip_rho, rhos)
+    cs = lambda_ * jnp.minimum(clip_c, rhos)
+    values = values.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    discounts = discounts.astype(jnp.float32)
+
+    values_tp1 = jnp.concatenate(
+        [values[:, 1:], bootstrap_value[:, None].astype(jnp.float32)], axis=1
+    )
+    deltas = clipped_rhos * (rewards + discounts * values_tp1 - values)
+
+    def body(acc, xs):
+        delta, disc, c = xs  # (B,)
+        acc = delta + disc * c * acc
+        return acc, acc
+
+    xs = (
+        jnp.moveaxis(deltas, 1, 0)[::-1],
+        jnp.moveaxis(discounts, 1, 0)[::-1],
+        jnp.moveaxis(cs, 1, 0)[::-1],
+    )
+    _, errs_rev = jax.lax.scan(body, jnp.zeros_like(bootstrap_value, jnp.float32), xs)
+    errs = jnp.moveaxis(errs_rev[::-1], 0, 1)  # (B, T): vs_t - V_t
+    vs = values + errs
+
+    vs_tp1 = jnp.concatenate(
+        [vs[:, 1:], bootstrap_value[:, None].astype(jnp.float32)], axis=1
+    )
+    pg_adv = clipped_rhos * (rewards + discounts * vs_tp1 - values)
+    return VTraceOutput(vs=vs, pg_advantages=pg_adv)

@@ -1,0 +1,100 @@
+"""V-trace reverse recursion as a Pallas TPU kernel.
+
+Grid: (num_batch_blocks,).  A block of trajectory rows (block_b, T) is
+resident in VMEM; the reverse time recursion runs as a fori_loop with the
+accumulator held in registers/VMEM, fully parallel across the batch rows in
+the VPU lanes.  One kernel launch computes both vs and pg_advantages —
+fusing what would otherwise be two XLA while-loops over T.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vtrace_kernel(
+    logr_ref, disc_ref, rew_ref, val_ref, boot_ref,
+    vs_ref, adv_ref,
+    *,
+    clip_rho: float,
+    clip_c: float,
+    lambda_: float,
+    T: int,
+):
+    rhos = jnp.exp(logr_ref[...].astype(jnp.float32))  # (bb, T)
+    clipped = jnp.minimum(clip_rho, rhos)
+    cs = lambda_ * jnp.minimum(clip_c, rhos)
+    disc = disc_ref[...].astype(jnp.float32)
+    rew = rew_ref[...].astype(jnp.float32)
+    val = val_ref[...].astype(jnp.float32)
+    boot = boot_ref[...].astype(jnp.float32)  # (bb,)
+
+    v_tp1 = jnp.concatenate([val[:, 1:], boot[:, None]], axis=1)
+    deltas = clipped * (rew + disc * v_tp1 - val)
+
+    def step(i, carry):
+        acc, errs = carry  # acc (bb,), errs (bb, T)
+        t = T - 1 - i
+        acc = deltas[:, t] + disc[:, t] * cs[:, t] * acc
+        errs = jax.lax.dynamic_update_index_in_dim(errs, acc, t, 1)
+        return (acc, errs)
+
+    _, errs = jax.lax.fori_loop(
+        0, T, step, (jnp.zeros_like(boot), jnp.zeros_like(val))
+    )
+    vs = val + errs
+    vs_tp1 = jnp.concatenate([vs[:, 1:], boot[:, None]], axis=1)
+    adv = clipped * (rew + disc * vs_tp1 - val)
+    vs_ref[...] = vs
+    adv_ref[...] = adv
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("clip_rho", "clip_c", "lambda_", "block_b", "interpret"),
+)
+def vtrace_pallas(
+    log_rhos: jax.Array,  # (B, T)
+    discounts: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    bootstrap_value: jax.Array,  # (B,)
+    *,
+    clip_rho: float = 1.0,
+    clip_c: float = 1.0,
+    lambda_: float = 1.0,
+    block_b: int = 128,
+    interpret: bool = False,
+):
+    from repro.kernels.vtrace.ref import VTraceOutput
+
+    B, T = log_rhos.shape
+    bb = min(block_b, B)
+    if B % bb:
+        raise ValueError(f"B={B} must divide block_b={bb}")
+    grid = (B // bb,)
+    spec2 = pl.BlockSpec((bb, T), lambda i: (i, 0))
+    spec1 = pl.BlockSpec((bb,), lambda i: (i,))
+    to_f32 = lambda x: x.astype(jnp.float32)
+    vs, adv = pl.pallas_call(
+        functools.partial(
+            _vtrace_kernel, clip_rho=clip_rho, clip_c=clip_c,
+            lambda_=lambda_, T=T,
+        ),
+        grid=grid,
+        in_specs=[spec2, spec2, spec2, spec2, spec1],
+        out_specs=[spec2, spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        to_f32(log_rhos), to_f32(discounts), to_f32(rewards), to_f32(values),
+        to_f32(bootstrap_value),
+    )
+    return VTraceOutput(vs=vs, pg_advantages=adv)

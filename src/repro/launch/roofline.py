@@ -1,0 +1,210 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+parsed from the optimized HLO text (``compiled.as_text()``): we sum the
+output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.  Hardware constants are the
+assigned TPU v5e numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e (assigned constants)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,128,2048]{2,1,0}" -> dtype + dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes per collective kind over the optimized HLO."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the op name, e.g. "bf16[...] all-gather(...)"
+            if re.search(rf"\b{kind}(?:-start|-done)?\(", rhs):
+                if kind + "-done(" in rhs:
+                    break  # bytes already counted at the -start op
+                # bytes: the shape(s) before the op name
+                head = rhs.split(kind)[0]
+                out[kind] += _shape_bytes(head)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All raw quantities are PER DEVICE: under SPMD partitioning,
+    ``compiled.cost_analysis()`` describes the per-device program (verified
+    empirically — see EXPERIMENTS.md §Dry-run methodology), and the HLO text
+    we parse collectives from is likewise the per-device module.  The roofline
+    time for a step is therefore quantity / per-chip rate, no chip division.
+    """
+
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    coll_bytes: float  # per-device collective bytes
+    coll_breakdown: dict
+    chips: int
+    model_flops: float  # 6*N*D analytic (GLOBAL, whole step)
+    per_device_memory_bytes: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def total_flops(self) -> float:
+        return self.flops * self.chips
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs — catches remat/redundancy waste.
+        > 1 would mean the compiled program does LESS than the analytic
+        model (e.g. replicated compute not actually sharded); < 1 means
+        overhead (remat recompute, attention quadratic terms, dispatch)."""
+        return self.model_flops / max(self.total_flops, 1.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "flops_total": self.total_flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "collective_breakdown": self.coll_breakdown,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "per_device_memory_gb": self.per_device_memory_bytes / 1e9,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    per_dev = 0.0
+    if mem is not None:
+        per_dev = (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        )
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        chips=chips,
+        model_flops=model_flops,
+        per_device_memory_bytes=per_dev,
+    )
+
+
+def extrapolate_layers(
+    r2: Roofline, r4: Roofline, depths: tuple[int, int], target: int
+) -> Roofline:
+    """Linear-in-depth extrapolation for uniform layer stacks.
+
+    For a uniform stack, per-device flops/bytes/collective bytes are exactly
+    affine in layer count: base (embedding, head, optimizer epilogue) +
+    per-layer slope.  Two shallow unrolled points determine both terms.
+    """
+    d2, d4 = depths
+
+    def extra(a, b):
+        slope = (b - a) / (d4 - d2)
+        return a + slope * (target - d2)
+
+    coll = {
+        k: extra(r2.coll_breakdown[k], r4.coll_breakdown[k])
+        for k in r2.coll_breakdown
+    }
+    return Roofline(
+        flops=extra(r2.flops, r4.flops),
+        hbm_bytes=extra(r2.hbm_bytes, r4.hbm_bytes),
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        chips=r2.chips,
+        model_flops=r2.model_flops,
+        per_device_memory_bytes=extra(
+            r2.per_device_memory_bytes, r4.per_device_memory_bytes
+        ),
+    )
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """6*N*D (train) / 2*N*D (inference) analytic model FLOPs."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) workload.
+
+Train/prefill batches: token trajectories + V-trace fields (+ stub modality
+embeddings for vlm/audio).  Decode: one new token + the seq_len cache.
+No device memory is ever allocated here.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> tuple[dict, dict]:
+    """(specs, logical_axes) for a train/prefill batch."""
+    B, T = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {
+        "tokens": SDS((B, T), jnp.int32),
+        "rewards": SDS((B, T), jnp.float32),
+        "discounts": SDS((B, T), jnp.float32),
+        "behaviour_logp": SDS((B, T), jnp.float32),
+    }
+    axes: dict[str, Any] = {k: ("batch", "seq") for k in specs}
+    if cfg.family == "vlm":
+        specs["images"] = SDS((B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        axes["images"] = ("batch", "patches", "act_embed")
+    if cfg.family == "audio":
+        specs["frames"] = SDS((B, cfg.num_audio_frames, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ("batch", "frames", "act_embed")
+    return specs, axes
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape) -> tuple[dict, dict]:
+    """(specs, logical_axes) for one serve_step call (token + position)."""
+    B = shape.global_batch
+    specs = {
+        "tokens": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+    axes = {"tokens": ("batch", None), "pos": ()}
+    return specs, axes
+
+
+def make_batch(cfg: ArchConfig, batch_size: int, seq_len: int, rng=None) -> dict:
+    """A REAL (allocated) random batch at reduced scale, for smoke tests."""
+    rng = rng if rng is not None else jax.random.key(0)
+    ks = jax.random.split(rng, 4)
+    batch = {
+        "tokens": jax.random.randint(
+            ks[0], (batch_size, seq_len), 0, cfg.vocab_size
+        ),
+        "rewards": jax.random.normal(ks[1], (batch_size, seq_len)) * 0.1,
+        "discounts": jnp.full((batch_size, seq_len), 0.99, jnp.float32),
+        "behaviour_logp": -jnp.abs(
+            jax.random.normal(ks[2], (batch_size, seq_len))
+        ),
+    }
+    if cfg.family == "vlm":
+        batch["images"] = jax.random.normal(
+            ks[3], (batch_size, cfg.num_image_tokens, cfg.d_model)
+        ).astype(jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[3], (batch_size, cfg.num_audio_frames, cfg.d_model)
+        ).astype(jnp.bfloat16)
+    return batch

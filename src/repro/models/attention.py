@@ -1,0 +1,403 @@
+"""GQA attention: parameter init + forward (train/prefill) + decode paths.
+
+Three compute paths, chosen by workload:
+
+  * ``full_attention`` — flash-style *chunked* online-softmax in pure jnp
+    (lax.scan over KV chunks) with a flash-attention custom VJP.  Never
+    materializes the (T, S) matrix, so prefill_32k lowers with bounded
+    memory on any backend, and training memory is O(T·chunk).  The Pallas
+    forward kernel (repro/kernels/flash_attention, same blocking) is the
+    TPU inference/prefill fast path exposed via its ops.py wrapper; this
+    jnp path is its oracle-structure twin and the training path.
+  * ``sliding_window_attention`` — blocked local attention (each query block
+    attends to its own + previous KV block), O(T·2W) compute.
+  * ``decode_attention`` — single-token query against a (possibly very long)
+    KV cache; O(S) einsum, no materialization issue.
+
+All paths support GQA via the (K, G) head grouping, optional qk-norm
+(RMSNorm per head, qwen3/gemma3), optional QKV bias (qwen2), and RoPE.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.param import ParamBuilder, fan_in_init, ones_init, zeros_init
+
+NEG_INF = layers.NEG_INF
+
+
+class AttnDims(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(
+    b: ParamBuilder,
+    name: str,
+    dims: AttnDims,
+    *,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+) -> None:
+    d, H, K, h = dims
+    with b.scope(name):
+        b.param("wq", (d, H, h), ("embed", "heads", "head_dim"), fan_in_init())
+        b.param("wk", (d, K, h), ("embed", "kv_heads", "head_dim"), fan_in_init())
+        b.param("wv", (d, K, h), ("embed", "kv_heads", "head_dim"), fan_in_init())
+        b.param("wo", (H, h, d), ("heads", "head_dim", "embed"), fan_in_init())
+        if qkv_bias:
+            b.param("bq", (H, h), ("heads", "head_dim"), zeros_init(), dtype=jnp.float32)
+            b.param("bk", (K, h), ("kv_heads", "head_dim"), zeros_init(), dtype=jnp.float32)
+            b.param("bv", (K, h), ("kv_heads", "head_dim"), zeros_init(), dtype=jnp.float32)
+        if qk_norm:
+            b.param("q_norm", (h,), ("head_dim",), ones_init(), dtype=jnp.float32)
+            b.param("k_norm", (h,), ("head_dim",), ones_init(), dtype=jnp.float32)
+
+
+def _head_rms(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def qkv_project(
+    params,
+    x: jax.Array,
+    *,
+    positions: jax.Array | None,
+    rope_theta: float,
+    eps: float = 1e-6,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, T, D) -> q (B,T,H,h), k/v (B,T,K,h), RoPE applied."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if "q_norm" in params:
+        q = _head_rms(q, params["q_norm"], eps)
+        k = _head_rms(k, params["k_norm"], eps)
+    if positions is not None:
+        q = layers.apply_rope(q, positions, rope_theta)
+        k = layers.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def output_project(params, out: jax.Array) -> jax.Array:
+    """out: (B, T, H, h) -> (B, T, D)."""
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(out.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) full attention
+# ---------------------------------------------------------------------------
+
+
+def _group_heads(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, T, H, h) -> (B, T, K, G, h)."""
+    b, t, H, h = q.shape
+    return q.reshape(b, t, num_kv, H // num_kv, h)
+
+
+def _chunk_kv(x: jax.Array, n_chunks: int, chunk: int):
+    """(B, S, K, h) -> (n, B, chunk, K, h)."""
+    B, S, K, h = x.shape
+    return x.reshape(B, n_chunks, chunk, K, h).transpose(1, 0, 2, 3, 4)
+
+
+def _fa_forward(q, k, v, causal, chunk, softcap):
+    """Chunked online-softmax forward.  Returns (out, lse) with
+    out: (B, T, H, h) and lse: (B, K, G, T) log-sum-exp (for the VJP)."""
+    B, T, H, h = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = _group_heads(q, K) * (h**-0.5)
+    kc = _chunk_kv(k, n_chunks, chunk)
+    vc = _chunk_kv(v, n_chunks, chunk)
+    q_pos = jnp.arange(T)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs
+        logits = jnp.einsum("btkgh,bskh->bkgts", qg, kb).astype(jnp.float32)
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        valid = k_pos < S
+        if causal:
+            valid = valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+            logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        else:
+            logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, T), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, T), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, T, h), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc)
+    )
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, h)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fa(q, k, v, causal, chunk, softcap):
+    out, _ = _fa_forward(q, k, v, causal, chunk, softcap)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, chunk, softcap):
+    out, lse = _fa_forward(q, k, v, causal, chunk, softcap)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, chunk, softcap, res, do):
+    """Flash-attention backward: recompute p per KV chunk from (q, k, lse)
+    instead of saving the (T, S) probabilities — O(T·chunk) live memory.
+
+        p    = exp(q k^T · s − lse)
+        dv   = p^T do
+        dp   = do v^T
+        ds   = p ⊙ (dp − Δ),  Δ_t = Σ_h do_t ⊙ out_t
+        dq  += ds k · s ;  dk  = ds^T q · s
+    """
+    q, k, v, out, lse = res
+    B, T, H, h = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    sm = h**-0.5
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = _group_heads(q, K).astype(jnp.float32)  # (B,T,K,G,h), unscaled
+    dog = _group_heads(do, K).astype(jnp.float32)
+    outg = _group_heads(out, K).astype(jnp.float32)
+    delta = jnp.einsum("btkgh,btkgh->bkgt", dog, outg)  # (B,K,G,T)
+    kc = _chunk_kv(k, n_chunks, chunk)
+    vc = _chunk_kv(v, n_chunks, chunk)
+    q_pos = jnp.arange(T)
+
+    def body(dq_acc, inputs):
+        idx, kb, vb = inputs
+        kbf = kb.astype(jnp.float32)
+        logits = sm * jnp.einsum("btkgh,bskh->bkgts", qg, kbf)
+        if softcap > 0:
+            tanh_arg = logits / softcap
+            logits_capped = softcap * jnp.tanh(tanh_arg)
+        else:
+            logits_capped = logits
+        k_pos = idx * chunk + jnp.arange(chunk)
+        valid = k_pos < S
+        if causal:
+            valid = valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+            mask = valid[None, None, None]
+        else:
+            mask = valid[None, None, None, None]
+        p = jnp.where(mask, jnp.exp(logits_capped - lse[..., None]), 0.0)
+        dv = jnp.einsum("bkgts,btkgh->bskh", p, dog)  # (B,chunk,K,h)
+        dp = jnp.einsum("btkgh,bskh->bkgts", dog, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if softcap > 0:  # chain rule through the softcap tanh
+            ds = ds * (1.0 - jnp.tanh(tanh_arg) ** 2)
+        dq_acc = dq_acc + sm * jnp.einsum("bkgts,bskh->btkgh", ds, kbf)
+        dk = sm * jnp.einsum("bkgts,btkgh->bskh", ds, qg)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, T, K, G, h), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (jnp.arange(n_chunks), kc, vc)
+    )
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, K, h)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, K, h)
+    if pad:
+        dk, dv = dk[:, :S], dv[:, :S]
+    return (
+        dq.reshape(B, T, H, h).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "chunk", "softcap"))
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    chunk: int = 1024,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks with a flash-attention
+    custom VJP (backward recomputes probabilities blockwise — O(T·chunk)
+    memory instead of O(T·S); see EXPERIMENTS.md §Perf).
+
+    q: (B, T, H, h); k, v: (B, S, K, h).  Returns (B, T, H, h).
+    """
+    return _fa(q, k, v, causal, chunk, softcap)
+
+
+# ---------------------------------------------------------------------------
+# Blocked sliding-window attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap"))
+def sliding_window_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Causal local attention with window W, blocked O(T·2W).
+
+    Each query block of size W attends to its own and the previous KV block;
+    the causal + window mask inside that 2W slab is exact.
+    """
+    B, T, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    W = min(window, T)
+    nb = -(-T // W)
+    pad = nb * W - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nb, W, H, h) * (h**-0.5)
+    kb = k.reshape(B, nb, W, K, h)
+    vb = v.reshape(B, nb, W, K, h)
+    # previous block (zeros for block 0)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2W, K, h)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    qg = qb.reshape(B, nb, W, K, G, h)
+    logits = jnp.einsum("bnwkgh,bnskh->bnkgws", qg, k2).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    # mask: query index (global) i = n*W + w; key index j = (n-1)*W + s
+    w_idx = jnp.arange(W)[:, None]
+    s_idx = jnp.arange(2 * W)[None, :]
+    rel = (w_idx + W) - s_idx  # = i - j, independent of block n
+    mask = (rel >= 0) & (rel < window)
+    # block 0 has no previous block: forbid s < W there
+    blk = jnp.arange(nb)
+    first = (blk == 0)[:, None, None]  # (nb,1,1)
+    mask = mask[None] & ~(first & (s_idx < W)[None])
+    logits = jnp.where(mask[None, :, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnkgws,bnskh->bnwkgh", p.astype(v2.dtype), v2)
+    out = out.reshape(B, nb * W, H, h)[:, :T]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """q: (B, 1, H, h); caches: (B, S, K, h); pos: scalar current position.
+
+    Attends to cache entries <= pos (and > pos - window when local).
+    """
+    B, _, H, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    if k_cache.dtype.itemsize == 1:  # fp8-quantized cache: compute in bf16
+        k_cache = k_cache.astype(jnp.bfloat16)
+        v_cache = v_cache.astype(jnp.bfloat16)
+    qg = q.reshape(B, K, G, h) * (h**-0.5)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    k_pos = jnp.arange(S)
+    valid = k_pos <= pos
+    if window:
+        valid &= k_pos > pos - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, h).astype(q.dtype)
+
+
+def update_kv_cache(
+    k_cache: jax.Array, v_cache: jax.Array, k: jax.Array, v: jax.Array, pos
+) -> tuple[jax.Array, jax.Array]:
+    """Write the new (B, 1, K, h) kv at position ``pos``."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM image layers / whisper encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_kv(params, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Project encoder/vision memory (B, S, D) to cross-attn K/V."""
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dkh->bskh", memory, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkh->bskh", memory, params["wv"].astype(dt))
+    return k, v
+
+
+def cross_attention(params, x: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Full (non-causal) attention from x (B,T,D) onto precomputed memory K/V."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    if "q_norm" in params:
+        q = _head_rms(q, params["q_norm"], 1e-6)
+    out = full_attention(q, k, v, causal=False)
+    return output_project(params, out)

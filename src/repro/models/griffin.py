@@ -1,0 +1,151 @@
+"""Griffin / RecurrentGemma blocks [arXiv:2402.19427].
+
+Layer pattern "RRA": two recurrent blocks then one local-MQA attention
+block, each followed by a gated-MLP block (two residual connections per
+layer, as in the paper).
+
+Recurrent block: RMSNorm -> two branches
+  (1) linear d->W, causal depthwise conv(4), RG-LRU
+  (2) linear d->W, GeLU
+  merged multiplicatively -> linear W->d.
+
+RG-LRU: r_t = sigmoid(W_a x_t + b_a); i_t = sigmoid(W_x x_t + b_x);
+        a_t = exp(-c * softplus(Lambda) * r_t)  with c = 8;
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t).
+
+Decode state per recurrent layer: rg-lru hidden (B, W) + conv window
+(B, conv_width-1, W).  Attention layers keep a *ring-buffer* KV cache of
+size min(seq, window) — O(window) memory, which is what makes long_500k
+decode architecturally cheap for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_step_ref
+from repro.models import attention, layers
+from repro.param import ParamBuilder, constant_init, fan_in_init, normal_init, zeros_init
+
+RGLRU_C = 8.0
+
+
+def init_recurrent_block(b: ParamBuilder, name: str, cfg: ArchConfig) -> None:
+    d, W = cfg.d_model, cfg.rnn_width
+    with b.scope(name):
+        layers.init_rms_norm(b, "norm", d)
+        b.param("w_branch1", (d, W), ("embed", "rnn_width"), fan_in_init())
+        b.param("w_branch2", (d, W), ("embed", "rnn_width"), fan_in_init())
+        b.param(
+            "conv_w",
+            (cfg.rnn_conv_width, W),
+            ("conv_width", "rnn_width"),
+            normal_init(0.1),
+        )
+        b.param("conv_b", (W,), ("rnn_width",), zeros_init(), dtype=jnp.float32)
+        # RG-LRU gates
+        b.param("w_a", (W, W), ("rnn_width", "rnn_width"), fan_in_init())
+        b.param("b_a", (W,), ("rnn_width",), zeros_init(), dtype=jnp.float32)
+        b.param("w_x", (W, W), ("rnn_width", "rnn_width"), fan_in_init())
+        b.param("b_x", (W,), ("rnn_width",), zeros_init(), dtype=jnp.float32)
+        # Lambda init so that a^(1/c) ~ U[0.9, 0.999] as in the paper
+        b.param("lam", (W,), ("rnn_width",), constant_init(0.7), dtype=jnp.float32)
+        b.param("w_out", (W, d), ("rnn_width", "embed"), fan_in_init())
+
+
+def _rglru_gates(params, u: jax.Array):
+    """u: (..., W) conv output.  Returns (a, i) gates, float32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    gi = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    return jnp.exp(log_a), gi
+
+
+def _conv1d(params, u: jax.Array, width: int) -> jax.Array:
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1]] * params["conv_w"][i].astype(u.dtype)
+        for i in range(width)
+    )
+    return out + params["conv_b"].astype(u.dtype)
+
+
+def recurrent_block(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D)."""
+    h = layers.rms_norm(params["norm"], x, cfg.rms_norm_eps)
+    u = h @ params["w_branch1"].astype(h.dtype)  # (B, T, W)
+    g = jax.nn.gelu(
+        (h @ params["w_branch2"].astype(h.dtype)).astype(jnp.float32)
+    ).astype(h.dtype)
+    u = _conv1d(params, u, cfg.rnn_conv_width)
+    a, gi = _rglru_gates(params, u)
+    y, _ = rglru_scan(u, a, gi)
+    y = y.astype(h.dtype) * g
+    return y @ params["w_out"].astype(y.dtype)
+
+
+def init_recurrent_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rnn_conv_width - 1, cfg.rnn_width), dtype),
+    }
+
+
+def recurrent_decode_step(
+    params, cache: dict, x: jax.Array, cfg: ArchConfig
+) -> tuple[jax.Array, dict]:
+    """x: (B, 1, D) -> (out (B, 1, D), cache)."""
+    h = layers.rms_norm(params["norm"], x, cfg.rms_norm_eps)[:, 0]  # (B, D)
+    u = h @ params["w_branch1"].astype(h.dtype)  # (B, W)
+    g = jax.nn.gelu(
+        (h @ params["w_branch2"].astype(h.dtype)).astype(jnp.float32)
+    ).astype(h.dtype)
+    window = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B, cw, W)
+    w = params["conv_w"].astype(u.dtype)
+    u = jnp.einsum("bwc,wc->bc", window, w) + params["conv_b"].astype(u.dtype)
+    a, gi = _rglru_gates(params, u)
+    y, h_new = rglru_step_ref(cache["h"], u, a, gi)
+    y = y.astype(g.dtype) * g
+    out = (y @ params["w_out"].astype(y.dtype))[:, None]
+    return out, {"h": h_new, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer decode for sliding-window attention layers
+# ---------------------------------------------------------------------------
+
+
+def ring_cache_update(k_cache, v_cache, k, v, pos, window: int):
+    """Write kv (B,1,K,h) at slot pos % window."""
+    slot = jnp.mod(pos, window)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, 1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, 1
+    )
+    return k_cache, v_cache
+
+
+def ring_decode_attention(q, k_cache, v_cache, pos, window: int):
+    """Decode attention over a ring buffer; validity = slot already written.
+
+    With the window mask implicit in the ring (slots hold the last `window`
+    positions), only unwritten slots need masking.
+    """
+    B, _, H, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, h) * (h**-0.5)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32)
+    slot_idx = jnp.arange(S)
+    written = slot_idx <= jnp.minimum(pos, S - 1)
+    # slots beyond pos (when pos < window-1) were never written
+    logits = jnp.where(written[None, None, None, :], logits, layers.NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, h).astype(q.dtype)

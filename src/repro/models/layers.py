@@ -1,0 +1,170 @@
+"""Shared neural-net building blocks (pure JAX, no NN library).
+
+Conventions:
+  * params are nested dicts built by :class:`repro.param.ParamBuilder`
+  * activations compute in bfloat16, reductions (softmax, norms) in float32
+  * einsum subscripts annotate logical axes: B batch, T query seq, S kv seq,
+    D d_model, H heads, K kv heads, G q-per-kv group, h head_dim, F d_ff
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.param import ParamBuilder, fan_in_init, normal_init, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rms_norm(b: ParamBuilder, name: str, dim: int) -> None:
+    with b.scope(name):
+        b.param("scale", (dim,), ("act_embed",), ones_init(), dtype=jnp.float32)
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies, float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """Apply RoPE. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (h/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, h/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, h/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Learned absolute positions (whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_learned_pos(b: ParamBuilder, name: str, max_position: int, dim: int):
+    with b.scope(name):
+        b.param("table", (max_position, dim), ("kv_seq", "embed"), normal_init(0.01))
+
+
+def learned_pos(params, positions: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], positions, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(b: ParamBuilder, name: str, vocab: int, dim: int, tie: bool):
+    with b.scope(name):
+        b.param("table", (vocab, dim), ("vocab", "embed"), normal_init(0.02))
+        if not tie:
+            b.param("unembed", (dim, vocab), ("embed", "vocab"), normal_init(0.02))
+
+
+def embed(params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Returns float32 logits (B, T, V)."""
+    if "unembed" in params:
+        w = params["unembed"]
+        return jnp.einsum("btd,dv->btv", x, w.astype(x.dtype)).astype(jnp.float32)
+    w = params["table"]
+    return jnp.einsum("btd,vd->btv", x, w.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(b: ParamBuilder, name: str, d_model: int, d_ff: int) -> None:
+    with b.scope(name):
+        b.param("w_gate", (d_model, d_ff), ("embed", "mlp"))
+        b.param("w_up", (d_model, d_ff), ("embed", "mlp"))
+        b.param("w_down", (d_ff, d_model), ("mlp", "embed"))
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jnp.einsum("btd,df->btf", x, params["w_gate"].astype(dt))
+    up = jnp.einsum("btd,df->btf", x, params["w_up"].astype(dt))
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    return jnp.einsum("btf,fd->btd", hidden, params["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Linear helpers
+# ---------------------------------------------------------------------------
+
+
+def init_linear(
+    b: ParamBuilder,
+    name: str,
+    in_dim: int,
+    out_dim: int,
+    axes=("embed", "act_embed"),
+    bias: bool = False,
+    scale: float = 1.0,
+) -> None:
+    with b.scope(name):
+        b.param("w", (in_dim, out_dim), axes, fan_in_init(scale))
+        if bias:
+            b.param("b", (out_dim,), (axes[1],), zeros_init(), dtype=jnp.float32)
+
+
+def linear(params, x: jax.Array) -> jax.Array:
+    out = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        out = out + params["b"].astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def causal_mask(t: int, s: int | None = None, offset: int = 0) -> jax.Array:
+    """(t, s) boolean mask, True = attend.  offset = kv positions before q0."""
+    s = s or t
+    q = jnp.arange(t)[:, None] + offset
+    k = jnp.arange(s)[None, :]
+    return k <= q
+
+
+def sliding_window_mask(t: int, s: int, window: int, offset: int = 0) -> jax.Array:
+    q = jnp.arange(t)[:, None] + offset
+    k = jnp.arange(s)[None, :]
+    return (k <= q) & (k > q - window)
+
+
+def segment_mask(q_seg: jax.Array, kv_seg: jax.Array) -> jax.Array:
+    """(B, T, S) mask allowing attention only within matching segments."""
+    return q_seg[:, :, None] == kv_seg[:, None, :]

@@ -1,0 +1,261 @@
+"""Minimal optax-style gradient transformation library (optax is not
+installed in this environment; this implements the subset the framework
+needs, with the same (init, update) contract so it is drop-in swappable).
+
+Optimizer *state* dtype policy: Adam moments default to the parameter dtype
+of the tree passed at init — the launch configs for the very large
+architectures pass bf16 params so moments are bf16 (a deliberate memory/
+precision trade recorded in EXPERIMENTS.md §Perf); small-model RL training
+uses f32 params and hence f32 moments.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree | None], tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = global_norm(grads)
+        scale_ = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree.map(lambda g: g * scale_.astype(g.dtype), grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]):
+    def init(params):
+        del params
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params=None):
+        del params
+        s = schedule(count)
+        return jax.tree.map(lambda g: g * s.astype(g.dtype), grads), count + 1
+
+    return GradientTransformation(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
+    def init(params):
+        return AdamState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(jnp.zeros_like, params),
+            nu=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+            state.mu, grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+            state.nu, grads,
+        )
+        bc1 = 1 - b1**count.astype(jnp.float32)
+        bc2 = 1 - b2**count.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: (
+                (m.astype(jnp.float32) / bc1)
+                / (jnp.sqrt(v.astype(jnp.float32) / bc2) + eps)
+            ),
+            mu, nu,
+        )
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+class RMSPropState(NamedTuple):
+    nu: PyTree
+
+
+def scale_by_rms(decay=0.99, eps=1e-8) -> GradientTransformation:
+    def init(params):
+        return RMSPropState(nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        del params
+        nu = jax.tree.map(
+            lambda v, g: decay * v + (1 - decay) * jnp.square(g.astype(v.dtype)),
+            state.nu, grads,
+        )
+        updates = jax.tree.map(
+            lambda g, v: g.astype(jnp.float32)
+            / (jnp.sqrt(v.astype(jnp.float32)) + eps),
+            grads, nu,
+        )
+        return updates, RMSPropState(nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        assert params is not None, "weight decay needs params"
+        return (
+            jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+            ),
+            state,
+        )
+
+    return GradientTransformation(init, update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s2 = t.update(grads, s, params)
+            new_state.append(s2)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+# -- canned optimizers ------------------------------------------------------
+
+
+def sgd(lr: float, momentum: float = 0.0) -> GradientTransformation:
+    if momentum == 0.0:
+        return chain(scale(-lr))
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        del params
+        state = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), state, grads)
+        return jax.tree.map(lambda m: -lr * m, state), state
+
+    return GradientTransformation(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, clip_norm: float = 0.0):
+    parts = []
+    if clip_norm:
+        parts.append(clip_by_global_norm(clip_norm))
+    parts.append(scale_by_adam(b1, b2, eps))
+    if callable(lr):
+        parts.append(scale_by_schedule(lambda c: -lr(c)))
+    else:
+        parts.append(scale(-lr))
+    return chain(*parts)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, clip_norm=1.0):
+    parts = [clip_by_global_norm(clip_norm), scale_by_adam(b1, b2, eps),
+             add_decayed_weights(weight_decay)]
+    if callable(lr):
+        parts.append(scale_by_schedule(lambda c: -lr(c)))
+    else:
+        parts.append(scale(-lr))
+    return chain(*parts)
+
+
+def rmsprop(lr, decay=0.99, eps=1e-8, clip_norm: float = 0.0):
+    parts = []
+    if clip_norm:
+        parts.append(clip_by_global_norm(clip_norm))
+    parts.extend([scale_by_rms(decay, eps), scale(-lr)])
+    return chain(*parts)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates,
+    )
+
+
+def state_shardings(opt_state, param_shardings, replicated):
+    """Shardings for a chain(...)-built optimizer state.
+
+    Adam/RMSProp moments mirror the parameter tree and inherit the parameter
+    shardings; step counters and empty states are replicated.  Works on real
+    states and on eval_shape ShapeDtypeStruct trees.
+    """
+
+    def one(s):
+        if isinstance(s, AdamState):
+            return AdamState(count=replicated, mu=param_shardings,
+                             nu=param_shardings)
+        if isinstance(s, RMSPropState):
+            return RMSPropState(nu=param_shardings)
+        return jax.tree.map(lambda _: replicated, s)
+
+    return tuple(one(s) for s in opt_state)
+
+
+# -- schedules ---------------------------------------------------------------
+
+
+def cosine_schedule(base: float, total_steps: int, final_frac: float = 0.1):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base * (final_frac + (1 - final_frac) * cos)
+
+    return schedule
+
+
+def warmup_cosine(base: float, warmup: int, total_steps: int):
+    def schedule(count):
+        c = count.astype(jnp.float32)
+        warm = c / max(warmup, 1)
+        frac = jnp.clip((c - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base * jnp.where(c < warmup, warm, cos)
+
+    return schedule

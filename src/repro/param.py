@@ -1,0 +1,211 @@
+"""Parameter containers and initialization utilities.
+
+We deliberately avoid external NN libraries (flax/haiku are not available in
+this environment); instead a small ``ParamBuilder`` collects a nested dict of
+arrays *and* a parallel tree of logical-axis annotations.  The logical axes
+feed the sharding rules in :mod:`repro.sharding`, MaxText-style.
+
+Everything here supports *abstract* instantiation via ``jax.eval_shape`` so
+that the multi-pod dry-run can build ShapeDtypeStructs for a 405B parameter
+model without ever allocating memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Axes = tuple[str | None, ...]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(stddev: float = 0.02) -> Callable[..., jax.Array]:
+    def init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def fan_in_init(scale: float = 1.0) -> Callable[..., jax.Array]:
+    """LeCun-normal style init: stddev = scale / sqrt(fan_in).
+
+    fan_in is taken to be the product of all but the last dimension, which is
+    correct for the ``(in, out)``-shaped matrices used throughout this code
+    base (einsum contractions contract the leading dims).
+    """
+
+    def init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        fan_in = max(1, math.prod(shape[:-1]))
+        stddev = scale / math.sqrt(fan_in)
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> Callable[..., jax.Array]:
+    def init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        del key
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init() -> Callable[..., jax.Array]:
+    def init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        del key
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+def constant_init(value: float) -> Callable[..., jax.Array]:
+    def init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        del key
+        return jnp.full(shape, value, dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# ParamBuilder
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Collects parameters (nested dict) and their logical axis names.
+
+    Usage::
+
+        b = ParamBuilder(rng, dtype=jnp.bfloat16)
+        with b.scope("attn"):
+            wq = b.param("wq", (d, h, hd), ("embed", "heads", "head_dim"))
+        params, axes = b.build()
+
+    ``axes`` mirrors ``params`` structurally, with an ``Axes`` tuple per leaf.
+    The builder hands out a fresh fold of the RNG per parameter so that
+    parameter values do not depend on creation order of *other* scopes.
+    """
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self._rng = rng
+        self._dtype = dtype
+        self._params: dict[str, Any] = {}
+        self._axes: dict[str, Any] = {}
+        self._path: list[str] = []
+        self._counter = 0
+
+    # -- scoping ------------------------------------------------------------
+
+    def scope(self, name: str) -> "_Scope":
+        return _Scope(self, name)
+
+    def _subdict(self, root: dict) -> dict:
+        d = root
+        for p in self._path:
+            d = d.setdefault(p, {})
+        return d
+
+    # -- parameters ----------------------------------------------------------
+
+    def param(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: Axes,
+        init: Callable[..., jax.Array] | None = None,
+        dtype=None,
+    ) -> jax.Array:
+        if len(axes) != len(shape):
+            raise ValueError(
+                f"param {'/'.join(self._path + [name])}: shape {shape} has "
+                f"{len(shape)} dims but axes {axes} has {len(axes)}"
+            )
+        init = init or fan_in_init()
+        dtype = dtype or self._dtype
+        # Fold in a deterministic per-parameter key: hash of path + counter.
+        key = jax.random.fold_in(self._rng, self._counter)
+        self._counter += 1
+        value = init(key, shape, dtype)
+        self._subdict(self._params)[name] = value
+        self._subdict(self._axes)[name] = axes
+        return value
+
+    def build(self) -> tuple[dict, dict]:
+        return self._params, self._axes
+
+
+class _Scope:
+    def __init__(self, builder: ParamBuilder, name: str):
+        self._builder = builder
+        self._name = name
+
+    def __enter__(self) -> ParamBuilder:
+        self._builder._path.append(self._name)
+        return self._builder
+
+    def __exit__(self, *exc) -> None:
+        self._builder._path.pop()
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of elements across all leaves (works on SDS too)."""
+    leaves = jax.tree.leaves(tree)
+    return sum(math.prod(leaf.shape) for leaf in leaves)
+
+
+def tree_bytes(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(math.prod(l.shape) * jnp.dtype(l.dtype).itemsize for l in leaves)
+
+
+def abstract_init(init_fn: Callable[[jax.Array], PyTree]) -> PyTree:
+    """Shape-infer an init function without allocating memory."""
+    rng = jax.random.key(0)
+    return jax.eval_shape(init_fn, rng)
+
+
+def tree_paths(tree: PyTree) -> Iterator[tuple[str, Any]]:
+    """Yield ('a/b/c', leaf) pairs for a nested-dict pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        name = "/".join(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        )
+        yield name, leaf
+
+
+def assert_trees_match(a: PyTree, b: PyTree, msg: str = "") -> None:
+    """Structural equality check used by checkpoint restore."""
+    sa = jax.tree_util.tree_structure(a)
+    sb = jax.tree_util.tree_structure(b)
+    if sa != sb:
+        raise ValueError(f"tree structure mismatch {msg}: {sa} vs {sb}")
+
+
+@dataclasses.dataclass
+class ParamInfo:
+    """Summary of a parameter tree (used by launch/train logging)."""
+
+    count: int
+    bytes: int
+
+    @classmethod
+    def of(cls, tree: PyTree) -> "ParamInfo":
+        return cls(count=tree_size(tree), bytes=tree_bytes(tree))
+
+    def __str__(self) -> str:
+        return f"{self.count / 1e6:.1f}M params, {self.bytes / 1e9:.2f} GB"

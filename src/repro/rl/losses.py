@@ -1,0 +1,157 @@
+"""RL losses: policy gradient, entropy, value, and the composed IMPALA
+(V-trace actor-critic) and A2C objectives used by the Podracer agents.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vtrace.ops import vtrace
+from repro.rl import returns as rets
+
+
+def log_prob(logits: jax.Array, actions: jax.Array) -> jax.Array:
+    """logits (..., A), actions (...) -> log pi(a|s).
+
+    Computed as logit[a] - logsumexp(logits): avoids materializing the full
+    log_softmax array, which matters when A = an LLM vocabulary (§Perf).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    chosen = jnp.take_along_axis(logits, actions[..., None], axis=-1)[..., 0]
+    return chosen - lse
+
+
+def entropy(logits: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def policy_gradient_loss(
+    logits: jax.Array, actions: jax.Array, advantages: jax.Array
+) -> jax.Array:
+    adv = jax.lax.stop_gradient(advantages)
+    return -jnp.mean(log_prob(logits, actions) * adv)
+
+
+class ImpalaLossOut(NamedTuple):
+    total: jax.Array
+    pg: jax.Array
+    value: jax.Array
+    entropy: jax.Array
+    mean_rho: jax.Array
+
+
+def impala_loss(
+    logits: jax.Array,  # (B, T, A) learner policy
+    values: jax.Array,  # (B, T)
+    actions: jax.Array,  # (B, T)
+    behaviour_logp: jax.Array,  # (B, T) log mu(a|s) from the actor
+    rewards: jax.Array,  # (B, T)
+    discounts: jax.Array,  # (B, T)
+    bootstrap_value: jax.Array,  # (B,)
+    *,
+    entropy_cost: float = 0.01,
+    value_cost: float = 0.5,
+    clip_rho: float = 1.0,
+    clip_c: float = 1.0,
+) -> ImpalaLossOut:
+    """The V-trace actor-critic loss (Espeholt et al. 2018, eq. 1-4)."""
+    target_logp = log_prob(logits, actions)
+    log_rhos = target_logp - behaviour_logp
+    vt = vtrace(
+        log_rhos, discounts, rewards, values, bootstrap_value,
+        clip_rho=clip_rho, clip_c=clip_c,
+    )
+    pg = -jnp.mean(target_logp * vt.pg_advantages)
+    value = 0.5 * jnp.mean(jnp.square(vt.vs - values))
+    ent = jnp.mean(entropy(logits))
+    total = pg + value_cost * value - entropy_cost * ent
+    return ImpalaLossOut(
+        total=total, pg=pg, value=value, entropy=ent,
+        mean_rho=jnp.mean(jnp.exp(log_rhos)),
+    )
+
+
+class PPOLossOut(NamedTuple):
+    total: jax.Array
+    pg: jax.Array
+    value: jax.Array
+    entropy: jax.Array
+    clip_frac: jax.Array
+
+
+def ppo_loss(
+    logits: jax.Array,  # (B, T, A)
+    values: jax.Array,  # (B, T)
+    actions: jax.Array,  # (B, T)
+    behaviour_logp: jax.Array,  # (B, T)
+    rewards: jax.Array,
+    discounts: jax.Array,
+    bootstrap_value: jax.Array,
+    *,
+    clip_eps: float = 0.2,
+    gae_lambda: float = 0.95,
+    entropy_cost: float = 0.01,
+    value_cost: float = 0.5,
+) -> PPOLossOut:
+    """Clipped-surrogate PPO with GAE advantages (Schulman et al. 2017).
+
+    In Anakin's fused loop this runs one epoch per on-policy batch; in
+    Sebulba the behaviour_logp comes from the (slightly stale) actor
+    policy, so the ratio clip doubles as off-policy protection.
+    """
+    from repro.rl import returns as rets
+
+    adv, targets = rets.gae(
+        rewards, discounts, values, bootstrap_value, lambda_=gae_lambda
+    )
+    adv = jax.lax.stop_gradient(
+        (adv - adv.mean()) / jnp.maximum(adv.std(), 1e-6)
+    )
+    targets = jax.lax.stop_gradient(targets)
+    logp = log_prob(logits, actions)
+    ratio = jnp.exp(logp - behaviour_logp)
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps)
+    pg = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    value = 0.5 * jnp.mean(jnp.square(targets - values))
+    ent = jnp.mean(entropy(logits))
+    total = pg + value_cost * value - entropy_cost * ent
+    return PPOLossOut(
+        total=total, pg=pg, value=value, entropy=ent,
+        clip_frac=jnp.mean((jnp.abs(ratio - 1) > clip_eps).astype(jnp.float32)),
+    )
+
+
+class A2CLossOut(NamedTuple):
+    total: jax.Array
+    pg: jax.Array
+    value: jax.Array
+    entropy: jax.Array
+
+
+def a2c_loss(
+    logits: jax.Array,
+    values: jax.Array,
+    actions: jax.Array,
+    rewards: jax.Array,
+    discounts: jax.Array,
+    bootstrap_value: jax.Array,
+    *,
+    entropy_cost: float = 0.01,
+    value_cost: float = 0.5,
+    td_lambda: float = 1.0,
+) -> A2CLossOut:
+    """On-policy advantage actor-critic (the Anakin agent objective)."""
+    values_tp1 = jnp.concatenate([values[:, 1:], bootstrap_value[:, None]], axis=1)
+    targets = rets.lambda_returns(rewards, discounts, values_tp1, td_lambda)
+    targets = jax.lax.stop_gradient(targets)
+    adv = targets - values
+    pg = policy_gradient_loss(logits, actions, adv)
+    value = 0.5 * jnp.mean(jnp.square(targets - values))
+    ent = jnp.mean(entropy(logits))
+    total = pg + value_cost * value - entropy_cost * ent
+    return A2CLossOut(total=total, pg=pg, value=value, entropy=ent)

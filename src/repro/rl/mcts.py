@@ -1,0 +1,205 @@
+"""Batched pure-JAX Monte-Carlo Tree Search (mctx-style).
+
+The paper: "We could reproduce results from MuZero (no Reanalyse) ... using
+Sebulba and a pure JAX implementation of MCTS."  This is that component:
+the whole search is jit-able array code (vmapped over the batch), so it
+runs *on the actor TPU cores* with no Python in the loop.
+
+Tree layout (per batch element), with N = num_simulations + 1 nodes:
+    hidden    (N, H)    latent state per node
+    visits    (N,)      visit counts
+    value_sum (N,)      sum of backed-up values
+    prior     (N, A)    policy prior per node
+    reward    (N,)      reward obtained on the edge INTO the node
+    children  (N, A)    child node index or -1
+    parent    (N,)      parent index (-1 at root)
+    action    (N,)      action taken from parent
+
+Selection uses PUCT; expansion adds exactly one node per simulation;
+backup propagates discounted returns to the root.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MCTSOutput(NamedTuple):
+    action: jax.Array  # (B,) selected action
+    visit_probs: jax.Array  # (B, A) normalized root visit distribution
+    root_value: jax.Array  # (B,)
+
+
+class _Tree(NamedTuple):
+    hidden: jax.Array
+    visits: jax.Array
+    value_sum: jax.Array
+    prior: jax.Array
+    reward: jax.Array
+    children: jax.Array
+    parent: jax.Array
+    action: jax.Array
+
+
+def _puct(
+    tree: _Tree, node: jax.Array, discount: float, c1: float = 1.25
+) -> jax.Array:
+    """PUCT scores over actions at ``node``.
+
+    Q(s, a) = r(s, a) + gamma * V(child) — the edge reward lives on the
+    child node (``tree.reward``), the state value in its visit statistics.
+    """
+    child = tree.children[node]  # (A,)
+    expanded = child >= 0
+    cidx = jnp.maximum(child, 0)
+    v_child = tree.value_sum[cidx] / jnp.maximum(tree.visits[cidx], 1)
+    q = jnp.where(
+        expanded & (tree.visits[cidx] > 0),
+        tree.reward[cidx] + discount * v_child,
+        0.0,
+    )
+    n_parent = tree.visits[node]
+    n_child = jnp.where(expanded, tree.visits[cidx], 0)
+    u = tree.prior[node] * jnp.sqrt(n_parent + 1e-8) / (1.0 + n_child)
+    return q + c1 * u
+
+
+def _simulate(
+    tree: _Tree,
+    dynamics: Callable,
+    prediction: Callable,
+    params,
+    sim: jax.Array,
+    discount: float,
+    max_depth: int,
+):
+    """One MCTS simulation for ONE batch element (vmapped by caller)."""
+    new_node = sim + 1
+
+    # --- selection: walk down until an unexpanded edge ---------------------
+    def sel_cond(carry):
+        node, action, depth, done = carry
+        return ~done & (depth < max_depth)
+
+    def sel_body(carry):
+        node, action, depth, _ = carry
+        scores = _puct(tree, node, discount)
+        a = jnp.argmax(scores)
+        child = tree.children[node, a]
+        done = child < 0
+        next_node = jnp.where(done, node, child)
+        return (next_node, a, depth + 1, done)
+
+    node, action, depth, _ = jax.lax.while_loop(
+        sel_cond, sel_body, (jnp.int32(0), jnp.int32(0), jnp.int32(0), False)
+    )
+
+    # --- expansion ----------------------------------------------------------
+    h_parent = tree.hidden[node]
+    h_new, r_new = dynamics(params, h_parent, action)
+    logits, v_new = prediction(params, h_new)
+    p_new = jax.nn.softmax(logits)
+
+    tree = tree._replace(
+        hidden=tree.hidden.at[new_node].set(h_new),
+        prior=tree.prior.at[new_node].set(p_new),
+        reward=tree.reward.at[new_node].set(r_new),
+        children=tree.children.at[node, action].set(new_node),
+        parent=tree.parent.at[new_node].set(node),
+        action=tree.action.at[new_node].set(action),
+    )
+
+    # --- backup --------------------------------------------------------------
+    def back_cond(carry):
+        node, g, tree = carry
+        return node >= 0
+
+    def back_body(carry):
+        node, g, tree = carry
+        tree = tree._replace(
+            visits=tree.visits.at[node].add(1),
+            value_sum=tree.value_sum.at[node].add(g),
+        )
+        g = tree.reward[node] + discount * g
+        return (tree.parent[node], g, tree)
+
+    _, _, tree = jax.lax.while_loop(back_cond, back_body, (new_node, v_new, tree))
+    return tree
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "representation", "dynamics", "prediction",
+        "num_simulations", "num_actions", "max_depth", "temperature",
+        "discount", "dirichlet_alpha", "exploration_frac",
+    ),
+)
+def mcts_search(
+    params,
+    obs: jax.Array,  # (B, ...) observations
+    rng: jax.Array,
+    *,
+    representation: Callable,  # (params, obs_single) -> hidden (H,)
+    dynamics: Callable,  # (params, hidden, action) -> (hidden, reward)
+    prediction: Callable,  # (params, hidden) -> (logits (A,), value ())
+    num_simulations: int = 16,
+    num_actions: int,
+    max_depth: int = 8,
+    discount: float = 0.99,
+    temperature: float = 1.0,
+    dirichlet_alpha: float = 0.3,
+    exploration_frac: float = 0.25,
+) -> MCTSOutput:
+    B = obs.shape[0]
+    N = num_simulations + 1
+
+    def search_one(ob, key):
+        h0 = representation(params, ob)
+        logits0, v0 = prediction(params, h0)
+        p0 = jax.nn.softmax(logits0)
+        noise = jax.random.dirichlet(key, jnp.full((num_actions,), dirichlet_alpha))
+        p0 = (1 - exploration_frac) * p0 + exploration_frac * noise
+
+        H = h0.shape[-1]
+        tree = _Tree(
+            hidden=jnp.zeros((N, H), h0.dtype).at[0].set(h0),
+            visits=jnp.zeros((N,), jnp.float32),
+            value_sum=jnp.zeros((N,), jnp.float32),
+            prior=jnp.zeros((N, num_actions), jnp.float32).at[0].set(p0),
+            reward=jnp.zeros((N,), jnp.float32),
+            children=jnp.full((N, num_actions), -1, jnp.int32),
+            parent=jnp.full((N,), -1, jnp.int32),
+            action=jnp.zeros((N,), jnp.int32),
+        )
+        tree = tree._replace(
+            visits=tree.visits.at[0].set(1.0),
+            value_sum=tree.value_sum.at[0].set(v0),
+        )
+
+        def body(sim, tree):
+            return _simulate(
+                tree, dynamics, prediction, params, sim, discount, max_depth
+            )
+
+        tree = jax.lax.fori_loop(0, num_simulations, body, tree)
+        root_children = tree.children[0]
+        counts = jnp.where(
+            root_children >= 0, tree.visits[jnp.maximum(root_children, 0)], 0.0
+        )
+        probs = counts / jnp.maximum(counts.sum(), 1e-8)
+        root_value = tree.value_sum[0] / jnp.maximum(tree.visits[0], 1.0)
+        return probs, root_value
+
+    keys = jax.random.split(rng, B + 1)
+    probs, root_values = jax.vmap(search_one)(obs, keys[1:])
+    if temperature == 0.0:
+        actions = jnp.argmax(probs, axis=-1)
+    else:
+        logits = jnp.log(jnp.maximum(probs, 1e-9)) / temperature
+        actions = jax.random.categorical(keys[0], logits)
+    return MCTSOutput(action=actions, visit_probs=probs, root_value=root_values)

@@ -1,0 +1,66 @@
+"""Return / advantage estimators: n-step, lambda-returns, GAE.
+
+All batch-major (B, T); discounts are per-step gammas (0 at terminal).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def discounted_returns(
+    rewards: jax.Array, discounts: jax.Array, bootstrap: jax.Array
+) -> jax.Array:
+    """G_t = r_t + gamma_t * G_{t+1}; (B, T)."""
+
+    def body(acc, xs):
+        r, d = xs
+        acc = r + d * acc
+        return acc, acc
+
+    xs = (jnp.moveaxis(rewards, 1, 0)[::-1], jnp.moveaxis(discounts, 1, 0)[::-1])
+    _, out = jax.lax.scan(body, bootstrap.astype(jnp.float32), xs)
+    return jnp.moveaxis(out[::-1], 0, 1)
+
+
+def lambda_returns(
+    rewards: jax.Array,
+    discounts: jax.Array,
+    values_tp1: jax.Array,
+    lambda_: float = 0.95,
+) -> jax.Array:
+    """TD(lambda) targets.  values_tp1: V(s_{t+1}) incl. bootstrap at t=T-1."""
+
+    def body(acc, xs):
+        r, d, v1 = xs
+        acc = r + d * ((1 - lambda_) * v1 + lambda_ * acc)
+        return acc, acc
+
+    xs = jax.tree.map(
+        lambda x: jnp.moveaxis(x, 1, 0)[::-1], (rewards, discounts, values_tp1)
+    )
+    _, out = jax.lax.scan(body, values_tp1[:, -1].astype(jnp.float32), xs)
+    return jnp.moveaxis(out[::-1], 0, 1)
+
+
+def gae(
+    rewards: jax.Array,
+    discounts: jax.Array,
+    values: jax.Array,
+    bootstrap: jax.Array,
+    lambda_: float = 0.95,
+) -> tuple[jax.Array, jax.Array]:
+    """Generalized advantage estimation -> (advantages, value targets)."""
+    values_tp1 = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
+    deltas = rewards + discounts * values_tp1 - values
+
+    def body(acc, xs):
+        delta, d = xs
+        acc = delta + d * lambda_ * acc
+        return acc, acc
+
+    xs = (jnp.moveaxis(deltas, 1, 0)[::-1], jnp.moveaxis(discounts, 1, 0)[::-1])
+    _, adv = jax.lax.scan(body, jnp.zeros_like(bootstrap), xs)
+    adv = jnp.moveaxis(adv[::-1], 0, 1)
+    return adv, adv + values

@@ -1,0 +1,208 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Every parameter and activation dimension in the model stack is annotated with
+a *logical* axis name ("embed", "vocab", "heads", ...).  A rules table maps
+logical names to (tuples of) mesh axis names.  This file is pure metadata —
+it never touches jax device state, so it is safe to import anywhere.
+
+Mesh axes (see repro/launch/mesh.py):
+  single pod : ("data", "model")            16 x 16 = 256 chips
+  multi pod  : ("pod", "data", "model")     2 x 16 x 16 = 512 chips
+
+The default rules implement the scheme described in DESIGN.md §5:
+  * batch is data-parallel over ("pod", "data")
+  * model-parallel dims (vocab, heads, mlp, experts) shard over "model"
+  * "embed" is left replicated by default; the FSDP rule set (used by the
+    very large architectures) additionally shards embed/mlp-stacked params
+    over "data" so that optimizer state fits.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Logical axis -> mesh axes.  None means replicated along that dim.
+# Entries may be a single mesh axis name, a tuple of names, or None.
+Rules = Mapping[str, Any]
+
+# Baseline (paper-faithful data-parallel + model-parallel) rules.
+DEFAULT_RULES: Rules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "kv_seq": None,
+    # parameters
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "conv_width": None,
+    "rnn_width": "model",
+    "layers": None,  # stacked-layer leading dim from scan-over-layers
+    "frames": None,
+    "patches": None,
+}
+
+# FSDP rules: additionally shard the "embed" param dim over "data" so that
+# params + Adam state of the 100B+ configs fit in HBM.  Activations keep the
+# same layout as DEFAULT_RULES.
+FSDP_RULES: Rules = dict(
+    DEFAULT_RULES,
+    embed=("pod", "data"),
+)
+
+# Long-context decode rules: batch=1 cannot use the data axis, so the KV
+# cache / recurrent state sequence dim is sharded over "data" instead
+# (flash-decoding style).  See DESIGN.md §5.
+LONG_CONTEXT_RULES: Rules = dict(
+    DEFAULT_RULES,
+    batch=None,
+    kv_seq="data",
+)
+
+
+def _normalize(entry: Any) -> Any:
+    """Return a PartitionSpec element for a rules entry."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry
+    return tuple(entry)
+
+
+def spec_for_axes(axes: Sequence[str | None], rules: Rules, mesh: Mesh) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for ``mesh``.
+
+    Mesh axes that do not exist on the mesh (e.g. "pod" on a single-pod mesh)
+    are silently dropped.  A logical name missing from the rules table is an
+    error — sharding must be explicit.
+    """
+    mesh_axes = set(mesh.axis_names)
+    used: set[str] = set()
+    out = []
+    for name in axes:
+        if name is None:
+            out.append(None)
+            continue
+        if name not in rules:
+            raise KeyError(f"no sharding rule for logical axis {name!r}")
+        entry = _normalize(rules[name])
+        if entry is None:
+            out.append(None)
+            continue
+        if isinstance(entry, str):
+            entry = (entry,)
+        filtered = tuple(a for a in entry if a in mesh_axes and a not in used)
+        used.update(filtered)
+        if not filtered:
+            out.append(None)
+        elif len(filtered) == 1:
+            out.append(filtered[0])
+        else:
+            out.append(filtered)
+    return P(*out)
+
+
+def spec_for_shape(
+    shape: Sequence[int], axes: Sequence[str | None], rules: Rules, mesh: Mesh
+) -> P:
+    """Like spec_for_axes, but drops mesh axes that do not divide the dim.
+
+    This is what makes one rules table serve every architecture: qwen2 has
+    12 heads (not divisible by model=16) so its attention params stay
+    replicated, while its 8960-wide MLP shards 16 ways.
+    """
+    base = spec_for_axes(axes, rules, mesh)
+    out = []
+    for dim, entry in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept: list[str] = []
+        size = dim
+        for a in names:
+            n = mesh.shape[a]
+            if size % n == 0:
+                kept.append(a)
+                size //= n
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def tree_shardings(
+    axes_tree: PyTree,
+    mesh: Mesh,
+    rules: Rules = DEFAULT_RULES,
+    shapes_tree: PyTree | None = None,
+) -> PyTree:
+    """Build a NamedSharding pytree from a logical-axes pytree.
+
+    If ``shapes_tree`` (a matching pytree of arrays / ShapeDtypeStructs) is
+    given, shardings are divisibility-checked per leaf dim and non-dividing
+    mesh axes dropped (replicated) — see spec_for_shape.
+    """
+    is_axes = lambda x: isinstance(x, tuple)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, spec_for_axes(axes, rules, mesh)),
+            axes_tree,
+            is_leaf=is_axes,
+        )
+    return jax.tree.map(
+        lambda axes, leaf: NamedSharding(
+            mesh, spec_for_shape(leaf.shape, axes, rules, mesh)
+        ),
+        axes_tree,
+        shapes_tree,
+        is_leaf=is_axes,
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def data_parallel(mesh: Mesh, rules: Rules = DEFAULT_RULES) -> NamedSharding:
+    """Sharding for a (batch, ...) activation: batch over data axes."""
+    return NamedSharding(mesh, spec_for_axes(("batch",), rules, mesh))
+
+
+def batch_axes(mesh: Mesh, rules: Rules = DEFAULT_RULES) -> tuple[str, ...]:
+    """The concrete mesh axes the batch is sharded over (for psum/pmean)."""
+    spec = spec_for_axes(("batch",), rules, mesh)
+    entry = spec[0]
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def divisible_batch(global_batch: int, mesh: Mesh, rules: Rules) -> bool:
+    """Check the batch can actually be laid out over its assigned axes."""
+    n = 1
+    for a in batch_axes(mesh, rules):
+        n *= mesh.shape[a]
+    return global_batch % n == 0

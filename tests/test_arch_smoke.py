@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(2-3 layers, d_model <= 512, <= 4 experts), run one forward and one full
+train step on CPU, assert output shapes and absence of NaNs; run one decode
+step against a cache and check it agrees with the teacher-forced forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs.base import ARCH_IDS, get_config, get_reduced_config
+from repro.launch.specs import make_batch
+from repro.launch.steps import TrainHParams, make_serve_step, make_train_step
+from repro.models import make_model
+from repro.models import attention as attn
+
+ASSIGNED = {
+    "mamba2_1p3b": dict(num_layers=48, d_model=2048, vocab_size=50_280,
+                        ssm_state=128),
+    "gemma3_4b": dict(num_layers=34, d_model=2560, num_heads=8,
+                      num_kv_heads=4, d_ff=10_240, vocab_size=262_144),
+    "recurrentgemma_2b": dict(num_layers=26, d_model=2560, num_heads=10,
+                              num_kv_heads=1, d_ff=7680, vocab_size=256_000),
+    "granite_moe_1b": dict(num_layers=24, d_model=1024, num_heads=16,
+                           num_kv_heads=8, d_ff=512, vocab_size=49_155,
+                           num_experts=32, num_experts_per_tok=8),
+    "llama3_405b": dict(num_layers=126, d_model=16_384, num_heads=128,
+                        num_kv_heads=8, d_ff=53_248, vocab_size=128_256),
+    "deepseek_moe_16b": dict(num_layers=28, d_model=2048, num_heads=16,
+                             num_kv_heads=16, d_ff=1408, vocab_size=102_400,
+                             num_experts=64, num_experts_per_tok=6,
+                             num_shared_experts=2),
+    "qwen2_1p5b": dict(num_layers=28, d_model=1536, num_heads=12,
+                       num_kv_heads=2, d_ff=8960, vocab_size=151_936,
+                       qkv_bias=True),
+    "llama32_vision_11b": dict(num_layers=40, d_model=4096, num_heads=32,
+                               num_kv_heads=8, d_ff=14_336,
+                               vocab_size=128_256, cross_attn_every=5),
+    "whisper_medium": dict(num_layers=24, d_model=1024, num_heads=16,
+                           num_kv_heads=16, d_ff=4096, vocab_size=51_865,
+                           encoder_layers=24),
+    "qwen3_4b": dict(num_layers=36, d_model=2560, num_heads=32,
+                     num_kv_heads=8, d_ff=9728, vocab_size=151_936,
+                     qk_norm=True),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for field, expect in ASSIGNED[arch].items():
+        assert getattr(cfg, field) == expect, (arch, field)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_bounds(arch):
+    cfg = get_reduced_config(arch)
+    assert cfg.num_layers <= 3
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_reduced_config(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 32
+    batch = make_batch(cfg, B, T)
+    logits, values, aux = model.forward(params, batch)
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert values.shape == (B, T)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(values).all())
+
+    opt = optim.adam(1e-3, clip_norm=1.0)
+    step = jax.jit(make_train_step(model, opt, TrainHParams()))
+    opt_state = opt.init(params)
+    params2, opt_state, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # parameters actually changed
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, params2,
+    )
+    assert max(jax.tree.leaves(diffs)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = get_reduced_config(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 16
+    batch = make_batch(cfg, B, T, rng=jax.random.key(7))
+    logits_f, _, _ = model.forward(params, batch)
+    cache, _ = model.init_cache(B, T)
+
+    # populate cross-modal memory the way prefill would
+    if cfg.family == "vlm":
+        mem = batch["images"].astype(jnp.bfloat16) @ params["projector"][
+            "w"
+        ].astype(jnp.bfloat16)
+        for i in range(cfg.num_layers):
+            if model._is_cross(i):
+                mk, mv = attn.cross_kv(params[f"layer_{i}"]["cross"], mem)
+                cache[f"layer_{i}"]["mem_k"] = mk
+                cache[f"layer_{i}"]["mem_v"] = mv
+    if cfg.family == "audio":
+        enc = model._encode_audio(params, batch["frames"])
+        mks, mvs = [], []
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda x: x[i], params["blocks"])
+            mk, mv = attn.cross_kv(p_i["cross"], enc)
+            mks.append(mk)
+            mvs.append(mv)
+        cache["blocks"]["mem_k"] = jnp.stack(mks)
+        cache["blocks"]["mem_v"] = jnp.stack(mvs)
+
+    step = jax.jit(model.decode_step)
+    errs = []
+    toks = batch["tokens"]
+    for t in range(T):
+        lg, _, cache = step(params, cache, toks[:, t : t + 1], jnp.int32(t))
+        errs.append(float(jnp.abs(lg[:, 0] - logits_f[:, t]).max()))
+    assert max(errs) < 0.15, errs  # bf16 accumulation tolerance
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "granite_moe_1b", "mamba2_1p3b"])
+def test_serve_step_shapes(arch):
+    cfg = get_reduced_config(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 64
+    cache, _ = model.init_cache(B, S)
+    serve = jax.jit(make_serve_step(model))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    tok2, cache = serve(params, cache, tok, jnp.int32(0))
+    assert tok2.shape == (B, 1)
+    assert tok2.dtype == jnp.int32

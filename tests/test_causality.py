@@ -1,0 +1,62 @@
+"""Causality property test: for EVERY autoregressive architecture, the
+logits at position t must be invariant to tokens after t.  This catches
+mask bugs, scan off-by-ones, conv leakage, and ring-cache errors in one
+sweep across the whole zoo."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_reduced_config
+from repro.launch.specs import make_batch
+from repro.models import make_model
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_causal_invariance(arch):
+    cfg = get_reduced_config(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T, t_cut = 2, 24, 11
+    batch = make_batch(cfg, B, T, rng=jax.random.key(3))
+    logits_a, _, _ = model.forward(params, batch)
+
+    # perturb everything strictly after t_cut
+    tokens_b = batch["tokens"].at[:, t_cut + 1 :].set(
+        (batch["tokens"][:, t_cut + 1 :] + 7) % cfg.vocab_size
+    )
+    batch_b = dict(batch, tokens=tokens_b)
+    logits_b, _, _ = model.forward(params, batch_b)
+
+    prefix_diff = float(
+        jnp.abs(logits_a[:, : t_cut + 1] - logits_b[:, : t_cut + 1]).max()
+    )
+    suffix_diff = float(
+        jnp.abs(logits_a[:, t_cut + 1 :] - logits_b[:, t_cut + 1 :]).max()
+    )
+    assert prefix_diff == 0.0, f"{arch}: future tokens leaked into the past"
+    assert suffix_diff > 0.0, f"{arch}: suffix insensitive (degenerate test)"
+
+
+def test_sliding_window_variant_locality():
+    """Beyond-paper long-context variant: a uniform-local ('L') pattern must
+    route through the looped path (windows applied), making influence
+    strictly local — the property that licenses long_500k for dense archs."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_reduced_config("qwen2_1p5b"), sliding_window=16, layer_pattern="L"
+    )
+    model = make_model(cfg)
+    assert not model.stacked
+    params = model.init(jax.random.key(0))
+    B, T = 2, 48
+    batch = make_batch(cfg, B, T, rng=jax.random.key(3))
+    la, _, _ = model.forward(params, batch)
+    tokens_b = batch["tokens"].at[:, 0].set(
+        (batch["tokens"][:, 0] + 3) % cfg.vocab_size
+    )
+    lb, _, _ = model.forward(params, dict(batch, tokens=tokens_b))
+    # with 2 layers x window 16, influence cannot reach past ~2*16 tokens
+    assert float(jnp.abs(la[:, 40] - lb[:, 40]).max()) == 0.0
+    assert float(jnp.abs(la[:, 5] - lb[:, 5]).max()) > 0.0

@@ -1,0 +1,57 @@
+"""Checkpoint save/restore roundtrips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {
+            "b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+            "c": jnp.array(3, jnp.int32),
+        },
+    }
+    path = str(tmp_path / "ckpt.npz")
+    save(path, tree)
+    out = restore(path, jax.tree.map(lambda x: jnp.zeros_like(x), tree))
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_allclose(
+        np.asarray(out["nested"]["b"], np.float32),
+        np.asarray(tree["nested"]["b"], np.float32),
+    )
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save(path, {"w": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        restore(path, {"w": jnp.zeros((4,))})
+
+
+def test_restore_missing_key_raises(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save(path, {"w": jnp.zeros((3,))})
+    with pytest.raises(KeyError):
+        restore(path, {"w": jnp.zeros((3,)), "extra": jnp.zeros((1,))})
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs.base import get_reduced_config
+    from repro.models import make_model
+
+    cfg = get_reduced_config("qwen3_4b")
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    path = str(tmp_path / "model.npz")
+    save(path, params)
+    out = restore(path, params)
+    same = jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()), params, out
+    )
+    assert all(jax.tree.leaves(same))

@@ -1,0 +1,90 @@
+"""Dry-run machinery integration tests.
+
+The full 512-device sweep lives in experiments/; here a single light
+(arch, shape) pair runs end-to-end in a subprocess (the dry-run must own
+jax initialization because of XLA_FLAGS), plus in-process tests of the
+pieces that don't need 512 devices.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.roofline import model_flops_for
+from repro.launch.specs import batch_specs, decode_specs
+
+
+def test_input_specs_cover_all_archs():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            if shape.kind in ("train", "prefill"):
+                specs, axes = batch_specs(cfg, shape)
+                assert specs["tokens"].shape == (shape.global_batch,
+                                                 shape.seq_len)
+                assert set(axes) == set(specs)
+            else:
+                specs, axes = decode_specs(cfg, shape)
+                assert specs["tokens"].shape == (shape.global_batch, 1)
+
+
+def test_model_flops_scaling():
+    cfg = get_config("qwen2_1p5b")
+    train = model_flops_for(cfg, INPUT_SHAPES["train_4k"], "train")
+    prefill = model_flops_for(cfg, INPUT_SHAPES["prefill_32k"], "prefill")
+    decode = model_flops_for(cfg, INPUT_SHAPES["decode_32k"], "decode")
+    # train does 3x the flops per token of inference; decode is per-token
+    tokens_train = 256 * 4096
+    tokens_prefill = 32 * 32768
+    assert train / tokens_train == pytest.approx(
+        3 * prefill / tokens_prefill, rel=1e-6
+    )
+    assert decode == pytest.approx(2 * cfg.active_param_count() * 128, rel=1e-6)
+
+
+def test_moe_active_flops_smaller_than_total():
+    cfg = get_config("deepseek_moe_16b")
+    assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+@pytest.mark.slow
+def test_dryrun_single_pair_subprocess(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out_dir = str(tmp_path / "dryrun")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-1.3b", "--shape", "long_500k", "--out", out_dir],
+        capture_output=True, text=True, timeout=560, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    path = os.path.join(out_dir, "mamba2_1p3b_long_500k_16x16.json")
+    with open(path) as f:
+        res = json.load(f)
+    assert res["memory"]["fits_16gb"]
+    assert res["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert res["roofline"]["chips"] == 256
+
+
+@pytest.mark.slow
+def test_dryrun_skips_full_attention_long_context(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out_dir = str(tmp_path / "dryrun")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-4b", "--shape", "long_500k", "--out", out_dir],
+        capture_output=True, text=True, timeout=300, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    with open(os.path.join(out_dir, "qwen3_4b_long_500k_16x16.json")) as f:
+        res = json.load(f)
+    assert "skipped" in res

@@ -1,0 +1,96 @@
+"""Environment invariants (JAX envs + host envs), partly hypothesis-driven."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.envs import BatchedHostEnv, Catch, GridWorld, HostPong
+
+
+@given(st.integers(0, 2**31 - 1), st.lists(st.integers(0, 2), min_size=30, max_size=30))
+@settings(max_examples=20, deadline=None)
+def test_catch_invariants(seed, actions):
+    env = Catch()
+    state = env.init(jax.random.key(seed))
+    step = jax.jit(env.step)
+    for a in actions:
+        state, ts = step(state, jnp.int32(a))
+        obs = np.asarray(ts.obs)
+        assert obs.sum() in (1.0, 2.0)  # ball + paddle (may overlap)
+        assert obs[-1].sum() >= 1.0  # paddle always on bottom row
+        assert float(ts.reward) in (-1.0, 0.0, 1.0)
+        if float(ts.reward) != 0.0:
+            assert float(ts.discount) == 0.0  # reward only at episode end
+        assert 0 <= int(state.ball_y) < env.rows
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_catch_episode_length(seed):
+    """Every episode lasts exactly rows-1 steps."""
+    env = Catch()
+    state = env.init(jax.random.key(seed))
+    step = jax.jit(env.step)
+    count, done_steps = 0, []
+    for t in range(36):
+        state, ts = step(state, jnp.int32(1))
+        count += 1
+        if float(ts.discount) == 0.0:
+            done_steps.append(count)
+            count = 0
+    assert all(d == env.rows - 1 for d in done_steps)
+    assert len(done_steps) == 4
+
+
+@given(st.integers(0, 2**31 - 1), st.lists(st.integers(0, 3), min_size=60, max_size=60))
+@settings(max_examples=15, deadline=None)
+def test_gridworld_invariants(seed, actions):
+    env = GridWorld(size=5, horizon=20)
+    state = env.init(jax.random.key(seed))
+    step = jax.jit(env.step)
+    for a in actions:
+        state, ts = step(state, jnp.int32(a))
+        obs = np.asarray(ts.obs)
+        assert obs[..., 0].sum() == 1.0  # exactly one agent
+        assert obs[..., 1].sum() == 1.0  # exactly one goal
+        # agent and goal never coincide right after (re)spawn
+        if bool(ts.first):
+            assert not np.all(state.pos == state.goal)
+
+
+def test_hostpong_api():
+    env = HostPong(seed=3)
+    obs = env.reset()
+    assert obs.shape == env.obs_shape
+    total_done = 0
+    for t in range(500):
+        obs, r, done, _ = env.step(np.random.randint(0, 3))
+        assert obs.shape == env.obs_shape
+        assert obs.sum() in (1.0, 2.0)
+        if done:
+            total_done += 1
+            obs = env.reset()
+    assert total_done >= 1
+
+
+def test_batched_env_parallel_step():
+    benv = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=6)
+    obs = benv.reset()
+    assert obs.shape == (6,) + benv.obs_shape
+    for _ in range(50):
+        obs, rew, dones = benv.step(np.random.randint(0, 3, size=6))
+    assert obs.shape == (6,) + benv.obs_shape
+    assert rew.dtype == np.float32
+    assert dones.dtype == bool
+
+
+def test_batched_env_autoreset():
+    """Batched env auto-resets sub-episodes; lives never go negative."""
+    benv = BatchedHostEnv(lambda i: HostPong(max_lives=1, seed=i), num_envs=4)
+    benv.reset()
+    for _ in range(200):
+        benv.step(np.zeros(4, np.int64))
+    for env in benv.envs:
+        assert env.lives >= 0
+        assert not env.needs_reset

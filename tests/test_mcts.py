@@ -1,0 +1,64 @@
+"""Pure-JAX MCTS tests: the search must find the better arm of a known MDP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.mcts import mcts_search
+
+
+def _bandit_fns(best_arm=2, num_actions=4):
+    """A depth-1 bandit hidden in the MuZero interface: dynamics reward is
+    +1 for the best arm, 0 otherwise; values are 0."""
+
+    def representation(params, obs):
+        return jnp.zeros((4,))
+
+    def dynamics(params, h, action):
+        reward = jnp.where(action == best_arm, 1.0, 0.0)
+        return h + 0.01, reward  # slight drift to make nodes distinct
+
+    def prediction(params, h):
+        return jnp.zeros((num_actions,)), jnp.float32(0.0)
+
+    return representation, dynamics, prediction
+
+
+def test_mcts_finds_best_arm():
+    rep, dyn, pred = _bandit_fns(best_arm=2)
+    obs = jnp.zeros((3, 5))
+    out = mcts_search(
+        {}, obs, jax.random.key(0),
+        representation=rep, dynamics=dyn, prediction=pred,
+        num_simulations=32, num_actions=4, max_depth=2,
+        temperature=0.0, exploration_frac=0.0,
+    )
+    np.testing.assert_array_equal(np.asarray(out.action), [2, 2, 2])
+    assert (np.asarray(out.visit_probs)[:, 2] > 0.5).all()
+
+
+def test_mcts_visit_probs_normalized():
+    rep, dyn, pred = _bandit_fns()
+    out = mcts_search(
+        {}, jnp.zeros((2, 5)), jax.random.key(1),
+        representation=rep, dynamics=dyn, prediction=pred,
+        num_simulations=16, num_actions=4, max_depth=3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.visit_probs).sum(-1), 1.0, rtol=1e-5
+    )
+    assert np.isfinite(np.asarray(out.root_value)).all()
+
+
+def test_mcts_root_value_reflects_reward():
+    """With a +1 reward on every path (all arms good), root value -> ~1."""
+    def dyn_all_good(params, h, action):
+        return h + 0.01, jnp.float32(1.0)
+
+    rep, _, pred = _bandit_fns()
+    out = mcts_search(
+        {}, jnp.zeros((1, 5)), jax.random.key(2),
+        representation=rep, dynamics=dyn_all_good, prediction=pred,
+        num_simulations=32, num_actions=4, max_depth=2, discount=0.0,
+    )
+    assert float(out.root_value[0]) > 0.5

@@ -1,0 +1,77 @@
+"""Optimizer library tests (unit + hypothesis properties)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+
+
+def test_adam_converges_quadratic():
+    opt = optim.adam(0.1)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = optim.apply_updates(params, updates)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+@settings(max_examples=25, deadline=None)
+def test_clip_by_global_norm_property(seed, max_norm):
+    rng = np.random.RandomState(seed)
+    grads = {"a": jnp.asarray(rng.randn(7)), "b": jnp.asarray(rng.randn(3, 2))}
+    clip = optim.clip_by_global_norm(max_norm)
+    out, _ = clip.update(grads, clip.init(grads))
+    norm = float(optim.global_norm(out))
+    assert norm <= max_norm * (1 + 1e-4)
+    # direction preserved
+    ratio = float(out["a"][0] / grads["a"][0]) if abs(grads["a"][0]) > 1e-6 else 1.0
+    assert ratio >= 0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_sgd_matches_manual(seed):
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(5))
+    opt = optim.sgd(0.5)
+    state = opt.init({"w": g})
+    updates, _ = opt.update({"w": g}, state)
+    np.testing.assert_allclose(updates["w"], -0.5 * g, rtol=1e-6)
+
+
+def test_adam_moments_dtype_follows_params():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = optim.adam(1e-3)
+    state = opt.init(params)
+    adam_state = state[0]
+    assert adam_state.mu["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_warmup_cosine():
+    sched = optim.warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert abs(float(sched(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(sched(jnp.int32(110))) < 1e-6
+
+
+def test_rmsprop_step_finite():
+    opt = optim.rmsprop(1e-2, clip_norm=1.0)
+    params = {"w": jnp.ones((3,))}
+    state = opt.init(params)
+    updates, state = opt.update({"w": jnp.ones((3,))}, state, params)
+    assert bool(jnp.isfinite(updates["w"]).all())
+
+
+def test_state_shardings_structure():
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    opt = optim.adam(1e-3, clip_norm=1.0)
+    state = opt.init(params)
+    p_shard = {"w": "WSHARD", "b": "BSHARD"}
+    s = optim.state_shardings(state, p_shard, "REP")
+    flat = jax.tree.leaves(s, is_leaf=lambda x: isinstance(x, str))
+    assert "WSHARD" in flat and "REP" in flat

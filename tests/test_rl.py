@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for the RL math: V-trace, returns,
+losses.  These are the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.vtrace.ref import vtrace_ref
+from repro.rl import losses, returns as rets
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _traj(draw, B=2, T=8):
+    shape = (B, T)
+    rng = np.random.RandomState(draw(st.integers(0, 2**31 - 1)))
+    return (
+        jnp.asarray(rng.randn(*shape) * 0.5, jnp.float32),  # log_rhos
+        jnp.asarray((rng.rand(*shape) > 0.2) * 0.95, jnp.float32),  # discounts
+        jnp.asarray(rng.randn(*shape), jnp.float32),  # rewards
+        jnp.asarray(rng.randn(*shape), jnp.float32),  # values
+        jnp.asarray(rng.randn(B), jnp.float32),  # bootstrap
+    )
+
+
+@st.composite
+def traj_strategy(draw):
+    return _traj(draw)
+
+
+@given(traj_strategy())
+@settings(max_examples=25, deadline=None)
+def test_vtrace_on_policy_equals_td_lambda(t):
+    """With log_rhos == 0 and no clipping, vs == TD(lambda=1) returns
+    (V-trace reduces to n-step bootstrapped targets on-policy)."""
+    _, disc, rew, val, boot = t
+    out = vtrace_ref(jnp.zeros_like(rew), disc, rew, val, boot)
+    v_tp1 = jnp.concatenate([val[:, 1:], boot[:, None]], axis=1)
+    lam = rets.lambda_returns(rew, disc, v_tp1, lambda_=1.0)
+    np.testing.assert_allclose(out.vs, lam, rtol=1e-4, atol=1e-4)
+
+
+@given(traj_strategy())
+@settings(max_examples=25, deadline=None)
+def test_vtrace_clipping_monotone(t):
+    """rho clipping only shrinks |vs - V| row-wise vs the unclipped trace."""
+    lr, disc, rew, val, boot = t
+    tight = vtrace_ref(lr, disc, rew, val, boot, clip_rho=1e-6, clip_c=1e-6)
+    # with clip -> 0, corrections vanish: vs -> values
+    np.testing.assert_allclose(tight.vs, val, rtol=1e-3, atol=1e-3)
+
+
+@given(traj_strategy())
+@settings(max_examples=25, deadline=None)
+def test_vtrace_zero_discount_resets(t):
+    """Where discount == 0 everywhere, vs_t = V_t + rho*(r_t - V_t)."""
+    lr, _, rew, val, boot = t
+    out = vtrace_ref(lr, jnp.zeros_like(rew), rew, val, boot)
+    rho = jnp.minimum(1.0, jnp.exp(lr))
+    expect = val + rho * (rew - val)
+    np.testing.assert_allclose(out.vs, expect, rtol=1e-4, atol=1e-4)
+
+
+@given(traj_strategy())
+@settings(max_examples=25, deadline=None)
+def test_gae_lambda1_equals_full_returns(t):
+    _, disc, rew, val, boot = t
+    adv, targets = rets.gae(rew, disc, val, boot, lambda_=1.0)
+    full = rets.discounted_returns(
+        rew, disc, boot
+    )  # G_t with bootstrap at the tail
+    np.testing.assert_allclose(targets, full, rtol=1e-4, atol=1e-4)
+
+
+def test_discounted_returns_simple():
+    rew = jnp.array([[1.0, 1.0, 1.0]])
+    disc = jnp.array([[0.5, 0.5, 0.5]])
+    out = rets.discounted_returns(rew, disc, jnp.array([0.0]))
+    np.testing.assert_allclose(out, [[1.75, 1.5, 1.0]])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_entropy_bounds(seed):
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(4, 7) * 3)
+    ent = losses.entropy(logits)
+    assert (ent >= -1e-5).all()
+    assert (ent <= np.log(7) + 1e-5).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_log_prob_consistency(seed):
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(5, 4))
+    actions = jnp.asarray(rng.randint(0, 4, 5))
+    lp = losses.log_prob(logits, actions)
+    full = jax.nn.log_softmax(logits, -1)
+    np.testing.assert_allclose(
+        lp, jnp.take_along_axis(full, actions[:, None], 1)[:, 0], rtol=1e-5
+    )
+
+
+def test_impala_loss_gradient_direction():
+    """Positive advantage -> gradient increases action log-prob."""
+    logits = jnp.zeros((1, 1, 3))
+    values = jnp.zeros((1, 1))
+    actions = jnp.array([[1]])
+    behaviour_logp = jnp.log(jnp.array([[1 / 3]]))
+    rewards = jnp.array([[10.0]])  # big positive reward -> positive adv
+    discounts = jnp.array([[0.0]])
+    boot = jnp.array([0.0])
+
+    def pg_only(lg):
+        out = losses.impala_loss(
+            lg, values, actions, behaviour_logp, rewards, discounts, boot,
+            entropy_cost=0.0, value_cost=0.0,
+        )
+        return out.pg
+
+    g = jax.grad(pg_only)(logits)
+    # decreasing loss means increasing logit of action 1
+    assert g[0, 0, 1] < 0

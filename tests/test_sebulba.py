@@ -1,0 +1,100 @@
+"""Sebulba integration tests.
+
+The actor/learner core split needs multiple devices, so the full test runs
+in a subprocess with ``--xla_force_host_platform_device_count=8`` (2 actor +
+6 learner cores, true device-to-device transfers).  In-process tests cover
+the single-device degenerate topology and the data plumbing.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import split_devices
+from repro.data.trajectory import Trajectory, TrajectoryAccumulator, split_for_learners
+
+
+def test_split_devices_single():
+    split = split_devices(2, devices=jax.devices())
+    if len(jax.devices()) == 1:
+        assert split.actor_devices == split.learner_devices
+
+
+def test_trajectory_accumulator_shapes():
+    acc = TrajectoryAccumulator(4)
+    for t in range(4):
+        acc.add(
+            jnp.zeros((3, 5)), jnp.zeros((3,), jnp.int32),
+            jnp.zeros((3,)), jnp.ones((3,)), jnp.zeros((3,)),
+        )
+    assert acc.full
+    traj = acc.drain(bootstrap_obs=jnp.zeros((3, 5)))
+    assert traj.obs.shape == (3, 4, 5)
+    assert traj.actions.shape == (3, 4)
+    assert not acc.full
+
+
+def test_split_for_learners():
+    traj = Trajectory(
+        obs=jnp.arange(24).reshape(6, 2, 2).astype(jnp.float32),
+        actions=jnp.zeros((6, 2), jnp.int32),
+        rewards=jnp.zeros((6, 2)),
+        discounts=jnp.ones((6, 2)),
+        behaviour_logp=jnp.zeros((6, 2)),
+        bootstrap_obs=jnp.zeros((6, 2)),
+    )
+    parts = split_for_learners(traj, 3)
+    assert len(parts) == 3
+    assert parts[0].obs.shape == (2, 2, 2)
+    np.testing.assert_allclose(parts[1].obs, traj.obs[2:4])
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, {src!r})
+    import jax
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.agents.impala import ConvActorCritic
+    from repro.envs import HostPong, BatchedHostEnv
+    from repro import optim
+
+    assert len(jax.devices()) == 8
+    net = ConvActorCritic(HostPong.num_actions, channels=(8,), blocks=1, hidden=64)
+    seb = Sebulba(
+        env_factory=lambda seed: HostPong(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=net,
+        optimizer=optim.rmsprop(2e-4, clip_norm=1.0),
+        config=SebulbaConfig(num_actor_cores=2, threads_per_actor_core=2,
+                             actor_batch_size=12, trajectory_length=10),
+    )
+    assert seb.split.num_actors == 2 and seb.split.num_learners == 6
+    out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=4000)
+    assert out["updates"] > 0, out
+    assert out["frames"] >= 4000
+    import math
+    assert math.isfinite(out["metrics"]["loss"])
+    print("SEBULBA_OK", out["updates"], out["frames"])
+    """
+)
+
+
+@pytest.mark.slow
+def test_sebulba_8core_subprocess():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=480, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SEBULBA_OK" in proc.stdout
