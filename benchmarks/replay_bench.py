@@ -1,0 +1,119 @@
+"""Replay-ring throughput: insert + sample rates vs buffer capacity.
+
+Measures the device-resident paths (donated-jit insert, categorical
+sample) on trajectory slots shaped like the Sebulba HostPong workload
+(T=20 steps of 16x16x1 frames, ~20KB/slot).  Reported as microseconds per
+call and slots/second; ``--json`` (or ``benchmarks/run.py --suite replay``)
+additionally writes ``BENCH_replay.json`` so future PRs can regress against
+the trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._timing import csv_line, time_call
+from repro.data.trajectory import Trajectory
+from repro.replay import ReplayBuffer
+
+INSERT_BATCH = 32
+SAMPLE_BATCH = 64
+SIZES = (1024, 8192, 65536)
+
+
+def _traj(B: int, T: int = 20, hw: int = 16) -> Trajectory:
+    return Trajectory(
+        obs=jnp.zeros((B, T, hw, hw, 1), jnp.float32),
+        actions=jnp.zeros((B, T), jnp.int32),
+        rewards=jnp.zeros((B, T), jnp.float32),
+        discounts=jnp.ones((B, T), jnp.float32),
+        behaviour_logp=jnp.zeros((B, T), jnp.float32),
+        bootstrap_obs=jnp.zeros((B, hw, hw, 1), jnp.float32),
+    )
+
+
+def bench(sizes=SIZES, prioritized: bool = True) -> dict:
+    """-> {capacity: {insert_us, sample_us, insert_slots_per_s, ...}}"""
+    results: dict[str, dict] = {}
+    traj = _traj(INSERT_BATCH)
+    for capacity in sizes:
+        buf = ReplayBuffer(capacity, prioritized=prioritized)
+        state = buf.init(traj)
+        # fill the ring so sampling sees a full valid range; statically
+        # counted — a size() loop condition would block on a device->host
+        # sync after every donated insert
+        for _ in range(-(-capacity // INSERT_BATCH)):
+            state = buf.insert(state, traj)
+
+        # insert path: donation consumes the state, so thread it through
+        # the timing loop instead of using time_call's repeated-args shape
+        st = state
+        insert_us = []
+        for _ in range(12):
+            t0 = time.perf_counter()
+            st = buf.insert(st, traj)
+            jax.block_until_ready(st.priorities)
+            insert_us.append((time.perf_counter() - t0) * 1e6)
+        insert_us.sort()
+        ins = insert_us[len(insert_us) // 2]
+
+        key = jax.random.key(0)
+        sam = time_call(
+            lambda: buf.sample(st, key, SAMPLE_BATCH), warmup=2, iters=10
+        )
+        results[str(capacity)] = {
+            "insert_us": round(ins, 1),
+            "sample_us": round(sam, 1),
+            "insert_slots_per_s": round(INSERT_BATCH / (ins * 1e-6)),
+            "sample_slots_per_s": round(SAMPLE_BATCH / (sam * 1e-6)),
+        }
+    return results
+
+
+def csv_lines(results: dict) -> list[str]:
+    lines = []
+    for capacity, r in results.items():
+        lines.append(csv_line(
+            f"replay_insert_cap{capacity}", r["insert_us"],
+            f"slots_per_s={r['insert_slots_per_s']:,}",
+        ))
+        lines.append(csv_line(
+            f"replay_sample_cap{capacity}", r["sample_us"],
+            f"slots_per_s={r['sample_slots_per_s']:,}",
+        ))
+    return lines
+
+
+def write_json(results: dict, path: str = "BENCH_replay.json") -> None:
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+def main(sizes=SIZES, json_path: str | None = None,
+         prioritized: bool = True) -> list[str]:
+    results = bench(sizes, prioritized=prioritized)
+    if json_path:
+        write_json(results, json_path)
+    return csv_lines(results)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_replay.json")
+    ap.add_argument("--sizes", type=int, nargs="+", default=list(SIZES))
+    ap.add_argument("--uniform", action="store_true",
+                    help="measure the uniform-sampling path instead of PER")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(tuple(args.sizes),
+                     json_path="BENCH_replay.json" if args.json else None,
+                     prioritized=not args.uniform):
+        print(line)
+    if args.json:
+        print("wrote BENCH_replay.json")

@@ -63,14 +63,36 @@ def _anakin_single_device() -> list[str]:
     ]
 
 
+def _replay_suite(lines: list[str]) -> None:
+    """--suite replay: insert/sample throughput -> BENCH_replay.json (the
+    perf trajectory future replay PRs regress against)."""
+    from benchmarks import replay_bench
+
+    _section(
+        "replay insert/sample throughput",
+        lambda: replay_bench.main(json_path="BENCH_replay.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
+    ap.add_argument("--suite", choices=["all", "replay"], default="all",
+                    help="'replay' runs only the replay bench and writes "
+                         "BENCH_replay.json")
     args = ap.parse_args()
 
     lines: list[str] = []
     print("name,us_per_call,derived")
+
+    if args.suite == "replay":
+        _replay_suite(lines)
+        print("# --- summary CSV ---")
+        for line in lines:
+            print(line)
+        return
 
     from benchmarks import kernel_bench
 
@@ -87,6 +109,8 @@ def main() -> None:
                  lambda: sebulba_batch.main((12, 24, 48)), lines)
         _section("Fig 4c muzero scaling",
                  lambda: muzero_scaling.main((4, 8)), lines)
+        # keep BENCH_replay.json fresh on full runs, not just --suite replay
+        _replay_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

@@ -1,0 +1,103 @@
+"""Off-policy Sebulba: R2D2-style replay IMPALA on host environments.
+
+"R2D2-style" refers to the *dataflow* (prioritized sequence replay feeding
+the learner, Kapturowski et al. 2019) — the agent here is a feed-forward
+replay IMPALA, not R2D2 itself; the recurrent network, stored LSTM state,
+and burn-in are still-open ROADMAP work on top of this subsystem.
+
+The paper notes Sebulba hosts replay-based agents (MuZero) as well as the
+on-policy ones; this example runs that dataflow end to end.  Actor cores
+stream trajectory shards into a device-resident prioritized replay ring
+sharded across the learner cores; every learner update trains on a mixed
+batch — the fresh online shard plus ``sample_batch_size`` replayed
+trajectories — with V-trace correcting the policy lag and PER importance
+weights correcting the sampling bias.
+
+Run with placeholder devices to exercise the full actor/learner/replay
+split (real TPU hosts expose their 8 cores automatically):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/sebulba_r2d2.py --frames 50000
+"""
+
+import argparse
+
+import jax
+
+from repro import optim
+from repro.agents.impala import ConvActorCritic
+from repro.configs.base import ReplayConfig
+from repro.core.sebulba import Sebulba, SebulbaConfig
+from repro.envs import BatchedHostEnv, HostPong
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=50_000)
+    ap.add_argument("--actor-cores", type=int, default=2)
+    ap.add_argument("--actor-batch", type=int, default=24)
+    ap.add_argument("--trajectory", type=int, default=20)
+    ap.add_argument("--capacity", type=int, default=2048,
+                    help="replay slots (global, sharded over learner cores)")
+    ap.add_argument("--replay-batch", type=int, default=24,
+                    help="replay trajectories sampled per learner update")
+    ap.add_argument("--min-size", type=int, default=96,
+                    help="warmup inserts before learning starts")
+    ap.add_argument("--uniform", action="store_true",
+                    help="uniform instead of prioritized sampling")
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    actor_cores = min(args.actor_cores, max(1, n_dev - 1)) if n_dev > 1 else 1
+    learners = max(n_dev - actor_cores, 1)
+
+    # Sebulba shards the batch and the replay ring over the learner cores,
+    # so round the requested sizes up to the nearest multiple of that count
+    # (the CLI defaults assume powers of two; a 6-learner split would
+    # otherwise be rejected).
+    def _round_up(x: int, m: int) -> int:
+        return -(-x // m) * m
+
+    actor_batch = _round_up(args.actor_batch, learners)
+    capacity = _round_up(args.capacity, learners)
+    replay_batch = _round_up(args.replay_batch, learners)
+    if (actor_batch, capacity, replay_batch) != (
+            args.actor_batch, args.capacity, args.replay_batch):
+        print(f"rounded to learner multiple of {learners}: "
+              f"actor_batch={actor_batch} capacity={capacity} "
+              f"replay_batch={replay_batch}")
+    print(f"devices: {n_dev} -> {actor_cores} actor / {learners} learner "
+          f"cores, replay ring {capacity} slots "
+          f"({capacity // learners}/core)")
+
+    net = ConvActorCritic(HostPong.num_actions, channels=(16, 32), blocks=1)
+    seb = Sebulba(
+        env_factory=lambda seed: HostPong(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=net,
+        optimizer=optim.rmsprop(3e-4, clip_norm=1.0),
+        config=SebulbaConfig(
+            num_actor_cores=actor_cores,
+            threads_per_actor_core=2,
+            actor_batch_size=actor_batch,
+            trajectory_length=args.trajectory,
+            replay=ReplayConfig(
+                capacity=capacity,
+                sample_batch_size=replay_batch,
+                min_size=min(args.min_size, capacity),
+                prioritized=not args.uniform,
+            ),
+        ),
+    )
+    out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=args.frames,
+                  log_every=25)
+    print(
+        f"\n{out['frames']:,} frames in {out['seconds']:.1f}s "
+        f"-> {out['fps']:,.0f} FPS, {out['updates']} updates, "
+        f"replay size {out['replay_size']}, "
+        f"mean return {out['mean_return']:.2f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,6 @@
-from repro.agents.actor_critic import MLPActorCritic  # noqa: F401
+from repro.agents.actor_critic import (  # noqa: F401
+    BatchedMLPActorCritic,
+    MLPActorCritic,
+)
 from repro.agents.impala import ConvActorCritic  # noqa: F401
+from repro.agents.replay_impala import ReplayImpalaAgent  # noqa: F401

@@ -45,3 +45,17 @@ class MLPActorCritic:
         logits = x @ params["policy"]["w"] + params["policy"]["b"]
         value = (x @ params["value"]["w"] + params["value"]["b"])[0]
         return logits, value
+
+
+class BatchedMLPActorCritic(MLPActorCritic):
+    """Batch-first MLP actor-critic for Sebulba's batched-inference actors.
+
+    Anakin vmaps the single-observation ``MLPActorCritic`` across its
+    per-core env batch; Sebulba agents instead call ``apply`` on an explicit
+    (B, ...) batch, so this variant vmaps internally.  Used by the vector-obs
+    host envs (HostBandit) where a conv torso would be overkill.
+    """
+
+    def apply(self, params, obs: jax.Array):
+        """obs (B, ...) -> (logits (B, A), values (B,))."""
+        return jax.vmap(lambda o: MLPActorCritic.apply(self, params, o))(obs)

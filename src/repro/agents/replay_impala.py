@@ -1,0 +1,33 @@
+"""Replay-based IMPALA agent for off-policy Sebulba (R2D2-style recipe).
+
+Same actor as ``ImpalaAgent`` (batched device inference, categorical
+sampling), but the learner consumes *mixed* online/replay batches: V-trace
+corrects the policy lag of replayed trajectories via its rho/c clipping
+(exactly why the paper pairs Sebulba with V-trace), and PER importance
+weights correct the prioritized-sampling bias.  The loss additionally
+returns per-sequence TD magnitudes, which Sebulba writes back into the
+replay ring as fresh priorities.
+
+The off-policy learner protocol is ``loss(params, traj, weights) ->
+(total, (metrics, per_seq_priority))`` — any agent implementing it (e.g. a
+future MuZero-with-reanalyze) plugs into ``Sebulba`` replay mode unchanged.
+"""
+
+from __future__ import annotations
+
+from repro.core.sebulba import ImpalaAgent
+from repro.rl import losses
+
+
+class ReplayImpalaAgent(ImpalaAgent):
+    def loss(self, params, traj, weights=None):
+        cfg = self.cfg
+        logits, values, bootstrap = self._forward(params, traj)
+        out = losses.weighted_impala_loss(
+            logits, values, traj.actions, traj.behaviour_logp,
+            traj.rewards, traj.discounts, bootstrap,
+            importance_weights=weights,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+            clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
+        )
+        return out.total, (self._metrics(out), out.per_seq_td)

@@ -1,0 +1,34 @@
+"""Version compatibility shims for the pinned container toolchain."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across the API move.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=...)``; the pinned
+    0.4.x container only has ``jax.experimental.shard_map.shard_map`` with
+    the older ``check_rep`` keyword.  Both checks are disabled: the Podracer
+    updates rely on ``lax.pmean`` for the replicated outputs, which the
+    strict checkers reject.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False,
+            )
+        except TypeError:
+            # intermediate versions promoted jax.shard_map before the
+            # check_rep -> check_vma rename
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=False,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

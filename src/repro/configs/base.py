@@ -162,6 +162,37 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    """Device-resident trajectory replay (repro/replay/).
+
+    ``capacity`` and ``sample_batch_size`` are *global* counts; the Sebulba
+    learner mesh shards both evenly across its cores, so each must divide by
+    the learner count.  ``prioritized`` switches uniform -> PER sampling
+    (Schaul et al. 2016): draws proportional to ``p^priority_exponent``,
+    bias-corrected by ``(size * P(i))^-importance_exponent`` weights.
+    """
+
+    capacity: int = 4096  # trajectory slots across all learner shards
+    sample_batch_size: int = 32  # replay trajectories drawn per update
+    min_size: int = 256  # warmup: inserts only until this many slots filled
+    prioritized: bool = True
+    priority_exponent: float = 0.6  # PER alpha
+    importance_exponent: float = 0.4  # PER beta
+    priority_epsilon: float = 1e-3  # floor so no slot starves
+
+    def __post_init__(self):
+        if self.capacity < self.sample_batch_size:
+            raise ValueError("replay capacity must cover one sample batch")
+        if self.min_size > self.capacity:
+            raise ValueError("replay min_size cannot exceed capacity")
+        if self.min_size < 1:
+            raise ValueError(
+                "replay min_size must be >= 1: warmup must insert at least "
+                "once before sampling (an empty ring samples NaN probs)"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
 class InputShape:
     name: str
     seq_len: int

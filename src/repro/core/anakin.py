@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import optim
+from repro.compat import shard_map
 from repro.rl import losses
 
 PyTree = Any
@@ -189,7 +190,7 @@ class Anakin:
 
             @jax.jit
             def run(state):
-                fn = jax.shard_map(
+                fn = shard_map(
                     lambda s: iterated(s, sync),
                     mesh=self.mesh,
                     in_specs=(AnakinState(
@@ -203,7 +204,6 @@ class Anakin:
                         ),
                         P(),
                     ),
-                    check_vma=False,
                 )
                 return fn(state)
 

@@ -20,11 +20,21 @@ The V-trace (IMPALA) objective corrects for the actor/learner policy lag.
 ``learner_microbatches`` implements the paper's MuZero trick of splitting
 the learner batch into N sequential micro-updates to decouple acting batch
 size from learning batch size.
+
+Off-policy mode (``SebulbaConfig.replay``): the paper's MuZero recipe keeps
+a replay buffer between actors and learner.  Actor trajectory shards are
+written into a device-resident replay ring sharded across the learner mesh
+(repro/replay/), and each learner update trains on a *mixed* batch — the
+fresh online shard concatenated with trajectories sampled from replay —
+inside one fused ``shard_map`` step: insert -> sample -> weighted V-trace
+update -> priority write-back, with the ring buffers donated so nothing
+round-trips through the host.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import queue
 import threading
 import time
@@ -37,8 +47,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import optim
+from repro.compat import shard_map
+from repro.configs.base import ReplayConfig
 from repro.core.topology import CoreSplit, split_devices
 from repro.data.trajectory import Trajectory, TrajectoryAccumulator
+from repro.replay import buffer as replay_buffer
+from repro.replay.sharded import ShardedReplay
 from repro.rl import losses
 
 PyTree = Any
@@ -57,6 +71,7 @@ class SebulbaConfig:
     clip_rho: float = 1.0
     clip_c: float = 1.0
     learner_microbatches: int = 1  # MuZero batch-splitting trick
+    replay: ReplayConfig | None = None  # set -> off-policy (replay) mode
 
 
 class ImpalaAgent:
@@ -79,8 +94,10 @@ class ImpalaAgent:
         logp = losses.log_prob(logits, actions)
         return actions, logp, ()
 
-    def loss(self, params, traj: Trajectory):
-        cfg = self.cfg
+    def _forward(self, params, traj: Trajectory):
+        """Run the net over a trajectory batch -> (logits (B,T,A),
+        values (B,T), bootstrap values (B,)).  Shared by the on-policy and
+        replay losses so the flatten/bootstrap plumbing exists once."""
         B, T = traj.actions.shape
         obs_flat = jax.tree.map(
             lambda o: o.reshape((B * T,) + o.shape[2:]), traj.obs
@@ -89,17 +106,25 @@ class ImpalaAgent:
         logits = logits.reshape(B, T, -1)
         values = values.reshape(B, T)
         _, bootstrap = self.net.apply(params, traj.bootstrap_obs)
+        return logits, values, bootstrap
+
+    @staticmethod
+    def _metrics(out) -> dict:
+        return {
+            "loss": out.total, "pg": out.pg, "value": out.value,
+            "entropy": out.entropy, "rho": out.mean_rho,
+        }
+
+    def loss(self, params, traj: Trajectory):
+        cfg = self.cfg
+        logits, values, bootstrap = self._forward(params, traj)
         out = losses.impala_loss(
             logits, values, traj.actions, traj.behaviour_logp,
             traj.rewards, traj.discounts, bootstrap,
             entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
             clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
         )
-        metrics = {
-            "loss": out.total, "pg": out.pg, "value": out.value,
-            "entropy": out.entropy, "rho": out.mean_rho,
-        }
-        return out.total, metrics
+        return out.total, self._metrics(out)
 
 
 class Sebulba:
@@ -114,7 +139,14 @@ class Sebulba:
         agent=None,
     ):
         self.cfg = config
-        self.agent = agent if agent is not None else ImpalaAgent(network, config)
+        if agent is None:
+            if config.replay is not None:
+                from repro.agents.replay_impala import ReplayImpalaAgent
+
+                agent = ReplayImpalaAgent(network, config)
+            else:
+                agent = ImpalaAgent(network, config)
+        self.agent = agent
         self.opt = optimizer
         self.env_factory = env_factory
         self.make_batched_env = make_batched_env
@@ -124,8 +156,68 @@ class Sebulba:
         if (config.actor_batch_size % self.L) != 0:
             raise ValueError("actor batch must divide evenly across learners")
 
+        self._replay: ShardedReplay | None = None
+        if config.replay is not None:
+            rcfg = config.replay
+            if config.learner_microbatches != 1:
+                raise ValueError(
+                    "learner_microbatches is an on-policy feature; replay "
+                    "mode decouples batch sizes via sample_batch_size"
+                )
+            if rcfg.capacity % self.L or rcfg.sample_batch_size % self.L:
+                raise ValueError(
+                    "replay capacity and sample_batch_size must divide "
+                    f"across {self.L} learner cores"
+                )
+            if config.actor_batch_size > rcfg.capacity:
+                raise ValueError(
+                    "replay capacity must be >= actor_batch_size: each "
+                    "update inserts the full online shard, and a ring "
+                    "smaller than one insert would write duplicate slots"
+                )
+            # fail here, not in a jit trace on the first learner update.
+            # The fused step calls loss positionally, so only
+            # positional-capable parameters count (a keyword-only
+            # `*, weights` would still blow up inside the trace).
+            sig_params = inspect.signature(self.agent.loss).parameters
+            has_var_pos = any(
+                p.kind is inspect.Parameter.VAR_POSITIONAL
+                for p in sig_params.values()
+            )
+            n_pos = sum(
+                p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                           inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                for p in sig_params.values()
+            )
+            if not has_var_pos and n_pos < 3:
+                raise ValueError(
+                    "replay mode needs agent.loss(params, trajectory, "
+                    "importance_weights) callable with three positional "
+                    f"arguments; {type(self.agent).__name__}.loss accepts "
+                    f"{n_pos}"
+                )
+            self._replay = ShardedReplay(
+                self.learner_mesh, rcfg.capacity,
+                prioritized=rcfg.prioritized,
+                priority_exponent=rcfg.priority_exponent,
+            )
+        else:
+            from repro.agents.replay_impala import ReplayImpalaAgent
+
+            if isinstance(self.agent, ReplayImpalaAgent):
+                raise ValueError(
+                    "ReplayImpalaAgent requires SebulbaConfig.replay: its "
+                    "loss aux is (metrics, td_priorities), which the "
+                    "on-policy learner would mis-treat as the metrics dict"
+                )
+        self._update_off = None  # built lazily (needs trajectory structure)
+
         self._inference = jax.jit(self._inference_fn)
-        self._update = jax.jit(self._build_update())
+        # replay mode never calls the on-policy update, and its agent's
+        # loss aux shape is incompatible with it — don't leave it loaded
+        self._update = (
+            jax.jit(self._build_update()) if config.replay is None else None
+        )
 
         # host-side state shared between threads
         self._param_lock = threading.Lock()
@@ -235,17 +327,27 @@ class Sebulba:
 
     # ------------------------------------------------------------- learner
 
+    def _sgd_step(self, params, opt_state, loss_fn):
+        """One synchronized step inside shard_map: grad -> cross-shard
+        pmean -> optimizer update.  Shared by the on-policy and replay
+        learners so the gradient-step sequence exists once.
+        """
+        grads, aux = jax.grad(loss_fn, has_aux=True)(params)
+        grads = jax.lax.pmean(grads, "batch")
+        updates, opt_state = self.opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, aux
+
     def _build_update(self):
         cfg = self.cfg
 
         def shard_update(params, opt_state, traj):
             def micro_step(carry, mb: Trajectory):
                 params, opt_state = carry
-                grads, metrics = jax.grad(self.agent.loss, has_aux=True)(params, mb)
-                grads = jax.lax.pmean(grads, "batch")
+                params, opt_state, metrics = self._sgd_step(
+                    params, opt_state, lambda p: self.agent.loss(p, mb)
+                )
                 metrics = jax.lax.pmean(metrics, "batch")
-                updates, opt_state = self.opt.update(grads, opt_state, params)
-                params = optim.apply_updates(params, updates)
                 return (params, opt_state), metrics
 
             if cfg.learner_microbatches > 1:
@@ -265,16 +367,89 @@ class Sebulba:
 
         def update(params, opt_state, traj):
             traj_spec = jax.tree.map(lambda _: P("batch"), traj)
-            fn = jax.shard_map(
+            fn = shard_map(
                 shard_update,
                 mesh=self.learner_mesh,
                 in_specs=(P(), P(), traj_spec),
                 out_specs=(P(), P(), P()),
-                check_vma=False,
             )
             return fn(params, opt_state, traj)
 
         return update
+
+    # ------------------------------------------------- learner (off-policy)
+
+    def _build_offpolicy_update(self, example: Trajectory):
+        """One fused device step: insert the online shard into the local
+        replay ring, sample a replay shard, train on the concatenated mixed
+        batch with PER importance weights, write TD priorities back.  The
+        replay state is donated, so the ring never leaves the learner cores.
+        """
+        cfg = self.cfg
+        rcfg = cfg.replay
+        local_sample = rcfg.sample_batch_size // self.L
+
+        def shard_update(params, opt_state, rstate, traj, key):
+            key = jax.random.fold_in(key, jax.lax.axis_index("batch"))
+            B_on = traj.actions.shape[0]
+            # sample from the PRE-insert ring: the online shard already sits
+            # in the mixed batch at weight 1.0, and inserting first would
+            # put it at max priority and have the sample double-draw it
+            sampled, idx, probs = replay_buffer.sample(
+                rstate, key, local_sample,
+                prioritized=rcfg.prioritized,
+                priority_exponent=rcfg.priority_exponent,
+            )
+            if rcfg.prioritized:
+                w_replay = losses.per_importance_weights(
+                    probs, replay_buffer.size(rstate),
+                    rcfg.importance_exponent, axis_name="batch",
+                )
+                ins_slots = replay_buffer.insert_slots(rstate, B_on)
+                rstate = replay_buffer.insert(
+                    rstate, traj, axis_name="batch"
+                )
+            else:
+                w_replay = jnp.ones((local_sample,), jnp.float32)
+                ins_slots = None
+                rstate = replay_buffer.insert(rstate, traj)
+            mixed = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), traj, sampled
+            )
+            weights = jnp.concatenate(
+                [jnp.ones((B_on,), jnp.float32), w_replay]
+            )
+
+            params, opt_state, (metrics, td) = self._sgd_step(
+                params, opt_state,
+                lambda p: self.agent.loss(p, mixed, weights),
+            )
+            metrics = jax.lax.pmean(metrics, "batch")
+            if rcfg.prioritized:
+                # fresh TD priorities for the sampled replay slots, then the
+                # just-inserted online slots (uniform mode never reads
+                # priorities — skip the dead scatters on the hot path).  Two
+                # sequential scatters, replay first: where the insert
+                # overwrote a sampled slot, the slot now holds the fresh
+                # trajectory, so its TD must deterministically win
+                eps = rcfg.priority_epsilon
+                rstate = replay_buffer.update_priorities(
+                    rstate, idx, td[B_on:] + eps
+                )
+                rstate = replay_buffer.update_priorities(
+                    rstate, ins_slots, td[:B_on] + eps
+                )
+            return params, opt_state, rstate, metrics
+
+        rspec = self._replay.state_spec(example)
+        tspec = self._replay.batch_spec(example)
+        fn = shard_map(
+            shard_update,
+            mesh=self.learner_mesh,
+            in_specs=(P(), P(), rspec, tspec, P()),
+            out_specs=(P(), P(), rspec, P()),
+        )
+        return jax.jit(fn, donate_argnums=2)
 
     # ----------------------------------------------------------------- run
 
@@ -303,6 +478,9 @@ class Sebulba:
 
         updates = 0
         metrics = {}
+        replay_state = None
+        replay_warmed = False  # size() is monotone: check device once, latch
+        replay_rng = jax.random.fold_in(rng, 0x5EB)  # decorrelate from init
         t0 = time.time()
         try:
             while self.frames < total_frames:
@@ -314,7 +492,29 @@ class Sebulba:
                     shards = self._queue.get(timeout=10.0)
                 except queue.Empty:
                     continue
-                params, opt_state, metrics = self._update(params, opt_state, shards)
+                if self._replay is not None:
+                    if replay_state is None:
+                        replay_state = self._replay.init(shards)
+                        self._update_off = self._build_offpolicy_update(shards)
+                    if not replay_warmed:
+                        # warmup: fill the ring before learning starts.  The
+                        # size() read syncs device->host, so latch the result
+                        # rather than re-reading it in the steady-state loop
+                        # (it would serialize every donated async update).
+                        if self._replay.size(replay_state) < cfg.replay.min_size:
+                            replay_state = self._replay.insert(
+                                replay_state, shards
+                            )
+                            continue
+                        replay_warmed = True
+                    key = jax.random.fold_in(replay_rng, updates)
+                    params, opt_state, replay_state, metrics = self._update_off(
+                        params, opt_state, replay_state, shards, key
+                    )
+                else:
+                    params, opt_state, metrics = self._update(
+                        params, opt_state, shards
+                    )
                 self._publish_params(params)
                 updates += 1
                 if log_every and updates % log_every == 0:
@@ -337,6 +537,11 @@ class Sebulba:
         return {
             "params": params,
             "updates": updates,
+            "replay_size": (
+                self._replay.size(replay_state)
+                if self._replay is not None and replay_state is not None
+                else 0
+            ),
             "frames": self.frames,
             "fps": self.frames / dt,
             "seconds": dt,

@@ -2,4 +2,4 @@ from repro.envs.catch import Catch  # noqa: F401
 from repro.envs.gridworld import GridWorld  # noqa: F401
 from repro.envs.host_env import HostPong  # noqa: F401
 from repro.envs.batched_env import BatchedHostEnv  # noqa: F401
-from repro.envs.bandit import Bandit  # noqa: F401
+from repro.envs.bandit import Bandit, HostBandit  # noqa: F401

@@ -1,5 +1,6 @@
 """Contextual bandit — the smallest pure-JAX Anakin environment (used for
-MCTS sanity checks and as the fastest smoke-test env)."""
+MCTS sanity checks and as the fastest smoke-test env), plus ``HostBandit``,
+its host-side (numpy, dm_env-style) twin for Sebulba smoke tests."""
 
 from __future__ import annotations
 
@@ -7,6 +8,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.envs.types import TimeStep
 
@@ -47,3 +49,37 @@ class Bandit:
             first=jnp.bool_(True),
         )
         return new_state, ts
+
+
+class HostBandit:
+    """Host-side contextual bandit with the HostPong step API.
+
+    One-step episodes: the context (a one-hot of the best arm) is shown,
+    the agent picks an arm, reward lands, the episode ends and the arm is
+    re-drawn.  The cheapest possible Sebulba workload — every millisecond
+    not spent here exercises the actor/replay/learner pipeline instead.
+    """
+
+    def __init__(self, num_arms: int = 4, noise: float = 0.1, seed: int = 0):
+        self.num_actions = num_arms
+        self.noise = noise
+        self.obs_shape = (num_arms,)
+        self._rng = np.random.RandomState(seed)
+        self._best = 0
+
+    def _observe(self) -> np.ndarray:
+        obs = np.zeros(self.obs_shape, np.float32)
+        obs[self._best] = 1.0
+        return obs
+
+    def reset(self) -> np.ndarray:
+        self._best = int(self._rng.randint(self.num_actions))
+        return self._observe()
+
+    def step(self, action: int):
+        """-> (obs, reward, done, info); done every step (1-step episodes)."""
+        reward = 1.0 if int(action) == self._best else 0.0
+        if self.noise:
+            reward += self.noise * float(self._rng.randn())
+        self._best = int(self._rng.randint(self.num_actions))
+        return self._observe(), np.float32(reward), True, {}

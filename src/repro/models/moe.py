@@ -30,6 +30,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models import layers
 from repro.param import ParamBuilder, fan_in_init, normal_init
 
@@ -55,10 +56,13 @@ def init_moe(b: ParamBuilder, name: str, dims: MoEDims) -> None:
             layers.init_mlp(b, "shared", d, dims.num_shared * f)
 
 
-def capacity(num_tokens: int, dims: MoEDims) -> int:
+def capacity(num_tokens: int, dims: MoEDims, *, round_multiple: int = 8) -> int:
     c = math.ceil(num_tokens * dims.top_k * dims.capacity_factor / dims.num_experts)
-    # MXU-friendly: round up to a multiple of 8, at least top_k
-    return max(dims.top_k, -(-c // 8) * 8)
+    # MXU-friendly: round up to a multiple of 8, at least top_k.  Per-sequence
+    # dispatch (small num_tokens, vmapped over B) passes round_multiple=1:
+    # rounding a ~1-slot capacity up to 8 for every sequence in the batch
+    # inflates the expert buffers and padded-slot FFN work ~8x.
+    return max(dims.top_k, -(-c // round_multiple) * round_multiple)
 
 
 def _routing(params, x_flat: jax.Array, dims: MoEDims):
@@ -85,10 +89,11 @@ def _expert_ffn(params, xs: jax.Array) -> jax.Array:
     return jnp.einsum("ecf,efd->ecd", hidden, params["w_down"].astype(dt))
 
 
-def _sort_dispatch(params, x_flat: jax.Array, dims: MoEDims):
+def _sort_dispatch(params, x_flat: jax.Array, dims: MoEDims,
+                   cap_round: int = 8):
     N, D = x_flat.shape
     E, k = dims.num_experts, dims.top_k
-    C = capacity(N, dims)
+    C = capacity(N, dims, round_multiple=cap_round)
     top_p, top_e, aux, zloss = _routing(params, x_flat, dims)
 
     flat_e = top_e.reshape(-1)  # (N*k,)
@@ -116,11 +121,12 @@ def _sort_dispatch(params, x_flat: jax.Array, dims: MoEDims):
     return jnp.einsum("nkd,nk->nd", gathered, w), aux, zloss
 
 
-def _dense_dispatch(params, x_flat: jax.Array, dims: MoEDims):
+def _dense_dispatch(params, x_flat: jax.Array, dims: MoEDims,
+                    cap_round: int = 8):
     """GShard-style einsum dispatch (ablation path)."""
     N, D = x_flat.shape
     E, k = dims.num_experts, dims.top_k
-    C = capacity(N, dims)
+    C = capacity(N, dims, round_multiple=cap_round)
     top_p, top_e, aux, zloss = _routing(params, x_flat, dims)
     # position of each assignment inside its expert via cumsum of one-hots
     onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)  # (N, k, E)
@@ -227,7 +233,7 @@ def moe_ffn_a2a(
         return y, aux, zloss
 
     first = data_axes if data_axes else None
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -236,7 +242,6 @@ def moe_ffn_a2a(
             P(model_axis), P(model_axis), P(model_axis),  # expert shards
         ),
         out_specs=(P(first, None), P(), P()),
-        check_vma=False,
     )
     y, aux, zloss = fn(
         x_flat, params["router"], params["w_gate"], params["w_up"],
@@ -248,17 +253,38 @@ def moe_ffn_a2a(
 def moe_ffn(
     params, x: jax.Array, dims: MoEDims, impl: str = "sort", mesh=None
 ) -> tuple[jax.Array, jax.Array]:
-    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar)."""
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar).
+
+    The ``sort``/``dense`` paths dispatch **per sequence** (vmap over B):
+    capacity slots are assigned by cumulative position, so contending for
+    them across the flattened B*T stream would let one sequence's suffix
+    evict another sequence's prefix from an expert — breaking the
+    autoregressive causality invariant (test_causality.py).  Per-row
+    dispatch keeps slot assignment causal within each sequence and
+    independent across them.
+
+    The ``a2a`` path still routes the flattened B*T stream (per-sequence
+    dispatch inside its shard_map would change the all_to_all payload
+    shapes): with a tight ``capacity_factor`` its drops can differ from
+    ``sort``/``dense`` — cross-sequence slot contention within a data
+    shard.  Equivalence to ``sort`` holds at generous capacity (the regime
+    test_perf_features.py checks); don't mix impls at small capacity
+    factors.
+    """
     B, T, D = x.shape
     x_flat = x.reshape(B * T, D)
     if impl == "a2a":
         if mesh is None:
             raise ValueError("moe impl 'a2a' needs a mesh")
         out, aux, zloss = moe_ffn_a2a(params, x_flat, dims, mesh)
-    elif impl == "sort":
-        out, aux, zloss = _sort_dispatch(params, x_flat, dims)
-    elif impl == "dense":
-        out, aux, zloss = _dense_dispatch(params, x_flat, dims)
+    elif impl in ("sort", "dense"):
+        fn = _sort_dispatch if impl == "sort" else _dense_dispatch
+        out, aux, zloss = jax.vmap(
+            lambda xr: fn(params, xr, dims, cap_round=1)
+        )(x)
+        out = out.reshape(B * T, D)
+        aux = jnp.mean(aux)
+        zloss = jnp.mean(zloss)
     else:
         raise ValueError(f"unknown moe impl {impl!r}")
     if dims.num_shared:

@@ -1,0 +1,11 @@
+from repro.replay.buffer import (  # noqa: F401
+    ReplayBuffer,
+    ReplayState,
+    init,
+    insert,
+    insert_slots,
+    sample,
+    size,
+    update_priorities,
+)
+from repro.replay.sharded import ShardedReplay  # noqa: F401

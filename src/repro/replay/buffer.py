@@ -1,0 +1,222 @@
+"""Device-resident trajectory replay (the off-policy half of Sebulba).
+
+The Podracer paper notes Sebulba hosts both on-policy agents (IMPALA, PPO)
+and replay-based ones (MuZero, R2D2); ElegantRL-Podracer makes the same
+point more forcefully — keeping the replay store *on the accelerator*
+removes the host<->device copy from both the insert and the sample path.
+
+``ReplayState`` is a pure pytree: a fixed-capacity ring of trajectory
+*slots* (one slot = one batch element of a ``Trajectory``), a priority
+vector, and two scalar cursors.  All operations are pure functions of the
+state so they compose with ``jax.jit`` (with buffer donation, so insert and
+sample update the ring in place), with ``shard_map`` (repro/replay/sharded.py
+shards the ring across the learner mesh), and with ``lax.cond``/``scan``.
+
+Priorities follow PER (Schaul et al., 2016): new items enter at the current
+maximum priority, sampling is ``p_i^alpha``-proportional, and the learner
+corrects the induced bias with importance weights
+(repro/rl/losses.py:per_importance_weights).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class ReplayState(NamedTuple):
+    """Fixed-capacity ring over trajectory slots.  All leaves live on device."""
+
+    storage: PyTree  # Trajectory-shaped pytree; leaves (capacity, ...)
+    priorities: jax.Array  # (capacity,) float32; 0 marks an empty slot
+    insert_pos: jax.Array  # () int32 — next slot to overwrite
+    total_added: jax.Array  # () int32 — monotone insert count
+
+    @property
+    def capacity(self) -> int:
+        return self.priorities.shape[0]
+
+
+def size(state: ReplayState) -> jax.Array:
+    """Number of valid slots (saturates at capacity once the ring wraps)."""
+    return jnp.minimum(state.total_added, state.priorities.shape[0])
+
+
+def init(example: PyTree, capacity: int) -> ReplayState:
+    """Allocate an empty ring whose slots match ``example``'s batch elements.
+
+    ``example`` is any pytree whose leaves have a leading batch dimension
+    (e.g. a ``Trajectory`` with (B, T, ...) leaves); one slot stores one
+    batch element, so storage leaves are (capacity, ...) zeros.
+    """
+    storage = jax.tree.map(
+        lambda x: jnp.zeros((capacity,) + x.shape[1:], x.dtype), example
+    )
+    return ReplayState(
+        storage=storage,
+        priorities=jnp.zeros((capacity,), jnp.float32),
+        insert_pos=jnp.zeros((), jnp.int32),
+        total_added=jnp.zeros((), jnp.int32),
+    )
+
+
+def insert_slots(state: ReplayState, batch_size: int) -> jax.Array:
+    """Ring slots the next ``insert`` of ``batch_size`` items will write.
+
+    The single source of truth for the placement policy — callers that need
+    the written indices (e.g. the fused Sebulba step writing TD priorities
+    back) must use this rather than re-deriving the arithmetic.
+    """
+    capacity = state.priorities.shape[0]
+    return (
+        state.insert_pos + jnp.arange(batch_size, dtype=jnp.int32)
+    ) % capacity
+
+
+def insert(
+    state: ReplayState, batch: PyTree, priorities: jax.Array | None = None,
+    *, axis_name: str | None = None,
+) -> ReplayState:
+    """Write a batch of items into the ring, wrapping at capacity.
+
+    New items default to the current max priority (PER: every transition is
+    replayed at least once before its TD error is known).  Inside
+    shard_map/pmap pass ``axis_name`` so that default uses the *global* max
+    — a shard-local max would replay identical fresh trajectories at
+    different rates depending on which shard they landed on.
+    """
+    leaves = jax.tree.leaves(batch)
+    B = leaves[0].shape[0]
+    capacity = state.priorities.shape[0]
+    if B > capacity:
+        raise ValueError(
+            f"insert batch {B} exceeds ring capacity {capacity}: the "
+            "scatter would write duplicate slots, and which element "
+            "survives is unspecified"
+        )
+    slots = insert_slots(state, B)
+    storage = jax.tree.map(
+        lambda s, x: s.at[slots].set(x), state.storage, batch
+    )
+    if priorities is None:
+        # 1.0 only bootstraps the empty ring; once TD priorities exist an
+        # unconditional floor would pin fresh inserts above converged
+        # (sub-1.0) priorities and starve old high-TD slots.
+        max_p = jnp.max(state.priorities)
+        if axis_name is not None:
+            max_p = jax.lax.pmax(max_p, axis_name)
+        priorities = jnp.full(
+            (B,), jnp.where(max_p > 0.0, max_p, 1.0), jnp.float32
+        )
+    return ReplayState(
+        storage=storage,
+        priorities=state.priorities.at[slots].set(priorities),
+        insert_pos=(state.insert_pos + B) % capacity,
+        total_added=state.total_added + B,
+    )
+
+
+def sample(
+    state: ReplayState,
+    rng: jax.Array,
+    batch_size: int,
+    *,
+    prioritized: bool = False,
+    priority_exponent: float = 0.6,
+) -> tuple[PyTree, jax.Array, jax.Array]:
+    """Draw ``batch_size`` slots (with replacement) -> (batch, idx, probs).
+
+    ``probs`` is the per-draw selection probability — feed it to
+    ``losses.per_importance_weights`` for the PER bias correction.  Uniform
+    mode is the ``priority_exponent -> 0`` limit but skips the log/exp.
+
+    Precondition: ``size(state) > 0`` — with no valid slots the total
+    sampling weight is zero and ``probs`` comes back NaN (callers gate on
+    ``ReplayConfig.min_size``, see ``core/sebulba.py``).
+
+    Drawn by inverse-CDF (cumsum + searchsorted): O(capacity + B log
+    capacity), where ``jax.random.categorical`` would materialize a
+    (B, capacity) Gumbel matrix — at R2D2-scale capacities that matrix
+    dominates the learner step.
+    """
+    capacity = state.priorities.shape[0]
+    valid = jnp.arange(capacity) < size(state)
+    if prioritized:
+        w = jnp.where(
+            valid, (state.priorities + 1e-20) ** priority_exponent, 0.0
+        )
+    else:
+        w = valid.astype(jnp.float32)
+    cdf = jnp.cumsum(w)
+    total = cdf[-1]
+    u = jax.random.uniform(rng, (batch_size,)) * total
+    idx = jnp.clip(
+        jnp.searchsorted(cdf, u, side="right"), 0, capacity - 1
+    )
+    probs = w[idx] / total
+    batch = jax.tree.map(lambda s: s[idx], state.storage)
+    return batch, idx, probs
+
+
+def update_priorities(
+    state: ReplayState, idx: jax.Array, new_priorities: jax.Array
+) -> ReplayState:
+    """Refresh the priorities of previously-sampled slots (post-update TD)."""
+    return state._replace(
+        priorities=state.priorities.at[idx].set(
+            jnp.asarray(new_priorities, jnp.float32)
+        )
+    )
+
+
+class ReplayBuffer:
+    """Host-side handle: config + donated-jit single-mesh entry points.
+
+    The sharded Sebulba path calls the pure functions above inside its own
+    ``shard_map``; this wrapper is the single-device API used by examples,
+    benchmarks, and tests.  ``insert``/``update_priorities`` donate the old
+    state so the ring is updated in place on device.
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        *,
+        prioritized: bool = False,
+        priority_exponent: float = 0.6,
+    ):
+        self.capacity = capacity
+        self.prioritized = prioritized
+        self.priority_exponent = priority_exponent
+        self._insert = jax.jit(insert, donate_argnums=0)
+        self._update_priorities = jax.jit(update_priorities, donate_argnums=0)
+        self._sample = jax.jit(
+            functools.partial(
+                sample,
+                prioritized=prioritized,
+                priority_exponent=priority_exponent,
+            ),
+            static_argnames=("batch_size",),
+        )
+
+    def init(self, example: PyTree) -> ReplayState:
+        return init(example, self.capacity)
+
+    def insert(
+        self, state: ReplayState, batch: PyTree, priorities=None
+    ) -> ReplayState:
+        return self._insert(state, batch, priorities)
+
+    def sample(self, state: ReplayState, rng: jax.Array, batch_size: int):
+        return self._sample(state, rng, batch_size=batch_size)
+
+    def update_priorities(self, state, idx, new_priorities) -> ReplayState:
+        return self._update_priorities(state, idx, new_priorities)
+
+    def size(self, state: ReplayState) -> int:
+        return int(size(state))

@@ -59,20 +59,99 @@ def impala_loss(
     clip_rho: float = 1.0,
     clip_c: float = 1.0,
 ) -> ImpalaLossOut:
-    """The V-trace actor-critic loss (Espeholt et al. 2018, eq. 1-4)."""
+    """The V-trace actor-critic loss (Espeholt et al. 2018, eq. 1-4).
+
+    The uniform-weight special case of ``weighted_impala_loss`` (multiplying
+    by 1.0 is exact, so the numerics are bit-identical), without the
+    per-sequence TD output replay mode needs.
+    """
+    out = weighted_impala_loss(
+        logits, values, actions, behaviour_logp, rewards, discounts,
+        bootstrap_value, importance_weights=None,
+        entropy_cost=entropy_cost, value_cost=value_cost,
+        clip_rho=clip_rho, clip_c=clip_c,
+    )
+    return ImpalaLossOut(
+        total=out.total, pg=out.pg, value=out.value, entropy=out.entropy,
+        mean_rho=out.mean_rho,
+    )
+
+
+def per_importance_weights(
+    probs: jax.Array, size: jax.Array, beta: float, *,
+    axis_name: str | None = None,
+) -> jax.Array:
+    """PER bias correction: w_i = (N * P(i))^-beta, normalized by max.
+
+    ``probs`` are the selection probabilities returned by ``replay.sample``
+    and ``size`` the number of valid slots; beta anneals 0 -> 1 over
+    training in the original recipe (here a fixed config value).
+
+    Inside shard_map/pmap pass ``axis_name`` so the normalization uses the
+    *global* max across learner shards: a per-shard max would give
+    identical-priority slots different effective weights depending on
+    which shard happened to draw them, making training depend on the
+    learner count.
+    """
+    w = (jnp.maximum(size, 1).astype(jnp.float32) * probs) ** (-beta)
+    w_max = jnp.max(w)
+    if axis_name is not None:
+        w_max = jax.lax.pmax(w_max, axis_name)
+    return w / jnp.maximum(w_max, 1e-20)
+
+
+class WeightedImpalaOut(NamedTuple):
+    total: jax.Array
+    pg: jax.Array
+    value: jax.Array
+    entropy: jax.Array
+    mean_rho: jax.Array
+    per_seq_td: jax.Array  # (B,) |vs - V| per sequence -> replay priorities
+
+
+def weighted_impala_loss(
+    logits: jax.Array,  # (B, T, A) learner policy
+    values: jax.Array,  # (B, T)
+    actions: jax.Array,  # (B, T)
+    behaviour_logp: jax.Array,  # (B, T) log mu(a|s) from the actor
+    rewards: jax.Array,  # (B, T)
+    discounts: jax.Array,  # (B, T)
+    bootstrap_value: jax.Array,  # (B,)
+    *,
+    importance_weights: jax.Array | None = None,  # (B,) replay IS weights
+    entropy_cost: float = 0.01,
+    value_cost: float = 0.5,
+    clip_rho: float = 1.0,
+    clip_c: float = 1.0,
+) -> WeightedImpalaOut:
+    """V-trace loss with per-sequence importance weighting (off-policy
+    Sebulba): V-trace's rho/c clipping corrects the actor-policy lag, while
+    ``importance_weights`` corrects the *sampling* bias a prioritized replay
+    distribution introduces.  Also emits per-sequence TD magnitudes, the
+    priority signal written back into the replay ring after each update.
+    """
     target_logp = log_prob(logits, actions)
     log_rhos = target_logp - behaviour_logp
     vt = vtrace(
         log_rhos, discounts, rewards, values, bootstrap_value,
         clip_rho=clip_rho, clip_c=clip_c,
     )
-    pg = -jnp.mean(target_logp * vt.pg_advantages)
-    value = 0.5 * jnp.mean(jnp.square(vt.vs - values))
-    ent = jnp.mean(entropy(logits))
+    if importance_weights is None:
+        w = jnp.ones(values.shape[:1], jnp.float32)
+    else:
+        w = jax.lax.stop_gradient(importance_weights)
+    wn = w[:, None]
+    pg = -jnp.mean(wn * target_logp * vt.pg_advantages)
+    value = 0.5 * jnp.mean(wn * jnp.square(vt.vs - values))
+    ent = jnp.mean(wn * entropy(logits))
     total = pg + value_cost * value - entropy_cost * ent
-    return ImpalaLossOut(
+    per_seq_td = jnp.mean(
+        jnp.abs(jax.lax.stop_gradient(vt.vs) - values), axis=1
+    )
+    return WeightedImpalaOut(
         total=total, pg=pg, value=value, entropy=ent,
         mean_rho=jnp.mean(jnp.exp(log_rhos)),
+        per_seq_td=jax.lax.stop_gradient(per_seq_td),
     )
 
 

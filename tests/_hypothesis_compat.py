@@ -1,0 +1,125 @@
+"""Hypothesis compatibility shim for the property-based test files.
+
+The container image does not ship ``hypothesis``; importing it at module
+scope used to error *collection* for the whole tier-1 run.  This shim
+re-exports the real library when present and otherwise falls back to a
+minimal, deterministic property runner: each ``@given`` test is executed
+``max_examples`` times against draws from an explicitly-seeded
+``random.Random`` stream, so the fallback tests are bit-reproducible from
+run to run (no flaky shrinking, no example database).
+
+Only the strategy surface the repo's tests use is implemented:
+``integers``, ``floats``, ``lists``, ``sampled_from``, ``booleans``, and
+``composite``.  Everything is a ``Strategy`` with a single ``example(rand)``
+method, which keeps the semantics obvious and the failure messages small
+(the failing draw index + values are attached to the assertion).
+"""
+
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 10
+    _SEED = 0x9E3779B9  # fixed: every run draws the same example stream
+
+    class Strategy:
+        def __init__(self, sample_fn, label="strategy"):
+            self._sample = sample_fn
+            self.label = label
+
+        def example(self, rand: random.Random):
+            return self._sample(rand)
+
+        def __repr__(self):
+            return f"<{self.label}>"
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return Strategy(
+                lambda r: r.randint(min_value, max_value),
+                f"integers({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return Strategy(
+                lambda r: r.uniform(min_value, max_value),
+                f"floats({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def booleans():
+            return Strategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return Strategy(lambda r: r.choice(elements), "sampled_from")
+
+        @staticmethod
+        def lists(elements: Strategy, min_size=0, max_size=10):
+            def sample(r):
+                n = r.randint(min_size, max_size)
+                return [elements.example(r) for _ in range(n)]
+
+            return Strategy(sample, f"lists({elements.label})")
+
+        @staticmethod
+        def composite(fn):
+            """``@st.composite`` wraps fn(draw, *args) into a strategy
+            factory, exactly like the real API."""
+
+            def make(*args, **kwargs):
+                def sample(r):
+                    return fn(lambda s: s.example(r), *args, **kwargs)
+
+                return Strategy(sample, f"composite:{fn.__name__}")
+
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NB: no functools.wraps — copying __wrapped__ would make pytest
+            # see the original argument names and demand fixtures for them.
+            def runner():
+                # @settings may sit above @given (decorating the runner) or
+                # below it (decorating the test fn) — honor both orders
+                n = getattr(
+                    runner, "_compat_max_examples",
+                    getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES),
+                )
+                rand = random.Random(_SEED)
+                for i in range(n):
+                    drawn = tuple(s.example(rand) for s in strategies)
+                    try:
+                        fn(*drawn)
+                    except Exception as e:  # noqa: BLE001
+                        raise AssertionError(
+                            f"property falsified on deterministic example "
+                            f"{i}/{n}: {drawn!r}"
+                        ) from e
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

@@ -23,6 +23,7 @@ def _make(mode, iterations=30, seed=0):
     return ank, state
 
 
+@pytest.mark.slow  # full training loop (6x50 iterations)
 @pytest.mark.parametrize("mode", ["shard_map", "jit"])
 def test_anakin_learns_catch(mode):
     ank, state = _make(mode, iterations=50)

@@ -63,6 +63,7 @@ def test_reduced_config_bounds(arch):
     assert cfg.num_experts <= 4
 
 
+@pytest.mark.slow  # whole-zoo train-step sweep (~70s); full tier only
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_and_train_step(arch):
     cfg = get_reduced_config(arch)

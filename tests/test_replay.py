@@ -1,0 +1,277 @@
+"""Replay subsystem tests: ring semantics, prioritized sampling statistics,
+jit shape/dtype invariants, bit-exact sampling determinism (the
+test_causality.py pattern applied to replay), sharded-mesh behaviour, and
+an end-to-end off-policy Sebulba smoke run on the CPU mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ReplayConfig
+from repro.data.trajectory import Trajectory
+from repro.replay import ReplayBuffer, buffer
+
+
+def make_traj(B=4, T=3, obs_dim=5, val=0.0, seed=None):
+    if seed is not None:
+        rng = np.random.RandomState(seed)
+        rewards = jnp.asarray(rng.randn(B, T), jnp.float32)
+    else:
+        rewards = jnp.full((B, T), val, jnp.float32)
+    return Trajectory(
+        obs=jnp.full((B, T, obs_dim), val, jnp.float32),
+        actions=jnp.zeros((B, T), jnp.int32),
+        rewards=rewards,
+        discounts=jnp.ones((B, T), jnp.float32),
+        behaviour_logp=jnp.zeros((B, T), jnp.float32),
+        bootstrap_obs=jnp.full((B, obs_dim), val, jnp.float32),
+    )
+
+
+# ------------------------------------------------------------------ ring
+
+
+def test_ring_wraparound_overwrites_oldest():
+    buf = ReplayBuffer(capacity=8)
+    state = buf.init(make_traj(B=3))
+    # 5 inserts x 3 items = 15 > capacity 8: the ring wraps (twice at slot 0)
+    for i in range(5):
+        state = buf.insert(state, make_traj(B=3, val=float(i)))
+    assert buf.size(state) == 8
+    assert int(state.total_added) == 15
+    assert int(state.insert_pos) == 15 % 8
+    # slot contents: writes land at (3i + j) % 8 for batch j of insert i,
+    # so each slot holds the val of the LAST insert that touched it
+    expect = np.zeros(8)
+    for i in range(5):
+        for j in range(3):
+            expect[(3 * i + j) % 8] = float(i)
+    np.testing.assert_allclose(np.asarray(state.storage.obs[:, 0, 0]), expect)
+
+
+def test_empty_and_partial_fill_sampling_only_hits_valid_slots():
+    buf = ReplayBuffer(capacity=16)
+    state = buf.init(make_traj(B=4))
+    state = buf.insert(state, make_traj(B=4, val=7.0))
+    assert buf.size(state) == 4
+    _, idx, _ = buf.sample(state, jax.random.key(0), 64)
+    assert int(jnp.max(idx)) < 4  # never samples an empty slot
+
+
+# ------------------------------------------------------- prioritized stats
+
+
+def test_prioritized_sampling_distribution_chi_squared():
+    """Empirical draw counts must match p_i^alpha proportions.
+
+    With alpha=1 and priorities 1..16 the expected probabilities are
+    i/sum(1..16); a chi-squared statistic over 8000 draws should sit far
+    below the df=15 critical value (~37.7 at p=0.001) unless the sampler is
+    biased.  Fixed key -> the statistic is deterministic, not flaky.
+    """
+    buf = ReplayBuffer(capacity=16, prioritized=True, priority_exponent=1.0)
+    state = buf.init(make_traj(B=16))
+    state = buf.insert(state, make_traj(B=16))
+    prios = jnp.arange(1.0, 17.0)
+    state = buf.update_priorities(state, jnp.arange(16), prios)
+
+    n = 8000
+    _, idx, probs = buf.sample(state, jax.random.key(42), n)
+    counts = np.bincount(np.asarray(idx), minlength=16)
+    expect = np.asarray(prios / prios.sum()) * n
+    chi2 = float(((counts - expect) ** 2 / expect).sum())
+    assert chi2 < 37.7, f"chi2={chi2:.1f}, counts={counts}"
+    # reported selection probabilities match the analytic distribution
+    np.testing.assert_allclose(
+        np.asarray(probs),
+        np.asarray((prios / prios.sum())[idx]),
+        rtol=1e-5,
+    )
+
+
+def test_uniform_sampling_distribution_chi_squared():
+    buf = ReplayBuffer(capacity=16)
+    state = buf.init(make_traj(B=16))
+    state = buf.insert(state, make_traj(B=16))
+    n = 8000
+    _, idx, probs = buf.sample(state, jax.random.key(3), n)
+    counts = np.bincount(np.asarray(idx), minlength=16)
+    chi2 = float(((counts - n / 16) ** 2 / (n / 16)).sum())
+    assert chi2 < 37.7, f"chi2={chi2:.1f}"
+    np.testing.assert_allclose(np.asarray(probs), 1 / 16, rtol=1e-5)
+
+
+def test_new_items_enter_at_max_priority():
+    buf = ReplayBuffer(capacity=8, prioritized=True)
+    state = buf.init(make_traj(B=2))
+    state = buf.insert(state, make_traj(B=2))
+    state = buf.update_priorities(state, jnp.array([0, 1]), jnp.array([9.0, 2.0]))
+    state = buf.insert(state, make_traj(B=2, val=1.0))
+    np.testing.assert_allclose(np.asarray(state.priorities[2:4]), [9.0, 9.0])
+
+
+# ------------------------------------------------- jit + dtype invariants
+
+
+def test_insert_sample_shapes_dtypes_under_jit():
+    """The ReplayBuffer entry points are jitted (with donation); sampled
+    leaves must preserve the stored shapes and dtypes exactly."""
+    buf = ReplayBuffer(capacity=32, prioritized=True)
+    traj = make_traj(B=8, T=4, obs_dim=6)
+    state = buf.init(traj)
+    state = buf.insert(state, traj)
+    batch, idx, probs = buf.sample(state, jax.random.key(1), 5)
+    assert batch.obs.shape == (5, 4, 6) and batch.obs.dtype == jnp.float32
+    assert batch.actions.shape == (5, 4) and batch.actions.dtype == jnp.int32
+    assert batch.rewards.shape == (5, 4)
+    assert batch.bootstrap_obs.shape == (5, 6)
+    assert idx.shape == (5,) and jnp.issubdtype(idx.dtype, jnp.integer)
+    assert probs.shape == (5,) and probs.dtype == jnp.float32
+    # state invariants survive the donated round-trip
+    assert state.priorities.dtype == jnp.float32
+    assert state.insert_pos.dtype == jnp.int32
+    assert state.total_added.dtype == jnp.int32
+
+
+def test_pure_functions_compose_inside_jit():
+    """insert/sample/update_priorities are pure pytree->pytree functions, so
+    arbitrary compositions must trace into a single jit."""
+
+    @jax.jit
+    def roundtrip(state, traj, key):
+        state = buffer.insert(state, traj)
+        batch, idx, probs = buffer.sample(state, key, 4, prioritized=True)
+        return buffer.update_priorities(state, idx, probs + 1.0), batch
+
+    traj = make_traj(B=4)
+    state = buffer.init(traj, 16)
+    state, batch = roundtrip(state, traj, jax.random.key(0))
+    assert batch.obs.shape == (4, 3, 5)
+    assert int(state.total_added) == 4
+
+
+# ----------------------------------------------------------- determinism
+
+
+def test_sample_bit_exact_determinism_under_fixed_keys():
+    """Same (state, key) -> bit-identical indices, probs, and payloads;
+    different keys -> different draws (degeneracy check, mirroring
+    test_causality.py's suffix assertion)."""
+    buf = ReplayBuffer(capacity=64, prioritized=True)
+    state = buf.init(make_traj(B=16))
+    for i in range(4):
+        state = buf.insert(state, make_traj(B=16, seed=100 + i))
+
+    key = jax.random.key(1234)
+    b1, i1, p1 = buf.sample(state, key, 32)
+    b2, i2, p2 = buf.sample(state, key, 32)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    for a, b in zip(jax.tree.leaves(b1), jax.tree.leaves(b2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    _, i3, _ = buf.sample(state, jax.random.key(4321), 32)
+    assert not np.array_equal(np.asarray(i1), np.asarray(i3))
+
+
+def test_insert_then_sample_deterministic_across_reconstruction():
+    """Rebuilding the buffer from scratch replays to an identical state:
+    storage, priorities, and subsequent draws are bit-exact."""
+
+    def build():
+        buf = ReplayBuffer(capacity=16, prioritized=True)
+        state = buf.init(make_traj(B=4))
+        for i in range(3):
+            state = buf.insert(state, make_traj(B=4, seed=i))
+        return buf, state
+
+    buf_a, state_a = build()
+    buf_b, state_b = build()
+    for a, b in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    _, ia, _ = buf_a.sample(state_a, jax.random.key(9), 8)
+    _, ib, _ = buf_b.sample(state_b, jax.random.key(9), 8)
+    assert np.array_equal(np.asarray(ia), np.asarray(ib))
+
+
+# -------------------------------------------------------------- sharded
+
+
+def test_sharded_replay_single_device_mesh():
+    """The degenerate 1-device learner mesh (CPU default) must behave like
+    the plain buffer: local == global."""
+    from jax.sharding import Mesh
+
+    from repro.replay import ShardedReplay
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("batch",))
+    rep = ShardedReplay(mesh, 16, prioritized=True)
+    state = rep.init(make_traj(B=4))
+    for i in range(3):
+        state = rep.insert(state, make_traj(B=4, val=float(i)))
+    assert rep.size(state) == 12
+    batch, idx, probs = rep.sample(state, jax.random.key(0), 8)
+    assert batch.obs.shape == (8, 3, 5)
+    b2, i2, _ = rep.sample(state, jax.random.key(0), 8)
+    assert np.array_equal(np.asarray(idx), np.asarray(i2))
+    state = rep.update_priorities(state, idx, probs + 0.5)
+
+
+def test_replay_config_validation():
+    with pytest.raises(ValueError):
+        ReplayConfig(capacity=8, sample_batch_size=16)
+    with pytest.raises(ValueError):
+        ReplayConfig(capacity=8, sample_batch_size=4, min_size=99)
+
+
+# ------------------------------------------------- end-to-end off-policy
+
+
+def test_offpolicy_sebulba_smoke_cpu_mesh():
+    """Off-policy Sebulba on the CPU mesh + HostBandit: fills the replay
+    ring, then completes >= 2 learner updates sampling mixed online/replay
+    batches (acceptance criterion)."""
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic, ReplayImpalaAgent
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    net = BatchedMLPActorCritic(4, hidden=(32,))
+    seb = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=net,
+        optimizer=optim.adam(1e-3, clip_norm=1.0),
+        config=SebulbaConfig(
+            num_actor_cores=1, threads_per_actor_core=1,
+            actor_batch_size=8, trajectory_length=5,
+            replay=ReplayConfig(capacity=64, sample_batch_size=8, min_size=8),
+        ),
+    )
+    assert isinstance(seb.agent, ReplayImpalaAgent)  # auto-selected
+    out = seb.run(jax.random.key(0), (4,), total_frames=600)
+    assert out["updates"] >= 2, out
+    assert out["replay_size"] >= 8
+    assert np.isfinite(out["metrics"]["loss"])
+
+
+def test_offpolicy_rejects_bad_configs():
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    with pytest.raises(ValueError, match="microbatches"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=BatchedMLPActorCritic(4, hidden=(16,)),
+            optimizer=optim.adam(1e-3),
+            config=SebulbaConfig(
+                actor_batch_size=8, learner_microbatches=2,
+                replay=ReplayConfig(
+                    capacity=64, sample_batch_size=8, min_size=8
+                ),
+            ),
+        )

@@ -4,7 +4,7 @@ losses.  These are the system's core invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.vtrace.ref import vtrace_ref
 from repro.rl import losses, returns as rets
@@ -123,3 +123,89 @@ def test_impala_loss_gradient_direction():
     g = jax.grad(pg_only)(logits)
     # decreasing loss means increasing logit of action 1
     assert g[0, 0, 1] < 0
+
+
+# ------------------------------------------------ PER / weighted V-trace
+
+
+def _traj_batch(key, B=4, T=5, A=3):
+    ks = jax.random.split(key, 5)
+    logits = jax.random.normal(ks[0], (B, T, A))
+    values = jax.random.normal(ks[1], (B, T))
+    actions = jax.random.randint(ks[2], (B, T), 0, A)
+    behaviour_logp = jnp.log(jnp.full((B, T), 1.0 / A))
+    rewards = jax.random.normal(ks[3], (B, T))
+    discounts = jnp.full((B, T), 0.9)
+    boot = jax.random.normal(ks[4], (B,))
+    return logits, values, actions, behaviour_logp, rewards, discounts, boot
+
+
+def test_per_importance_weights_formula():
+    """w_i = (N * P(i))^-beta, normalized so max(w) == 1."""
+    probs = jnp.array([0.5, 0.25, 0.125, 0.125])
+    size = jnp.asarray(8)
+    beta = 0.4
+    w = losses.per_importance_weights(probs, size, beta)
+    expect = (8.0 * np.asarray(probs)) ** (-beta)
+    expect = expect / expect.max()
+    np.testing.assert_allclose(np.asarray(w), expect, rtol=1e-6)
+    assert np.isclose(np.asarray(w).max(), 1.0)
+    # uniform sampling (P = 1/N) is weightless: every w == 1
+    w_uni = losses.per_importance_weights(
+        jnp.full((4,), 1.0 / 8.0), size, beta
+    )
+    np.testing.assert_allclose(np.asarray(w_uni), np.ones(4), rtol=1e-6)
+
+
+def test_per_importance_weights_beta_zero_is_uniform():
+    probs = jnp.array([0.7, 0.2, 0.1])
+    w = losses.per_importance_weights(probs, jnp.asarray(16), 0.0)
+    np.testing.assert_allclose(np.asarray(w), np.ones(3), rtol=1e-6)
+
+
+def test_weighted_impala_loss_none_weights_bit_exact():
+    """impala_loss must stay the exact uniform-weight special case."""
+    args = _traj_batch(jax.random.key(0))
+    plain = losses.impala_loss(*args)
+    weighted = losses.weighted_impala_loss(*args, importance_weights=None)
+    for a, b in zip(plain, weighted[: len(plain)]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weighted_impala_loss_weights_scale_contribution():
+    """Down-weighting a sequence moves the loss toward excluding it."""
+    args = _traj_batch(jax.random.key(1), B=2)
+    w_first = losses.weighted_impala_loss(
+        *args, importance_weights=jnp.array([1.0, 0.0]),
+        entropy_cost=0.0, value_cost=1.0,
+    )
+    w_uniform = losses.weighted_impala_loss(
+        *args, importance_weights=jnp.array([1.0, 1.0]),
+        entropy_cost=0.0, value_cost=1.0,
+    )
+    # zero weight on row 1 must change the total (unless the rows were
+    # miraculously identical) and the gradient w.r.t. row 1's logits is 0
+    assert not np.isclose(float(w_first.total), float(w_uniform.total))
+
+    def row1_loss(lg):
+        a = (lg,) + args[1:]
+        return losses.weighted_impala_loss(
+            *a, importance_weights=jnp.array([1.0, 0.0]),
+            entropy_cost=0.0, value_cost=1.0,
+        ).total
+
+    g = jax.grad(row1_loss)(args[0])
+    np.testing.assert_allclose(np.asarray(g[1]), 0.0, atol=1e-7)
+
+
+def test_weighted_impala_loss_per_seq_td():
+    """per_seq_td is the per-sequence mean |vs - V|, shape (B,)."""
+    args = _traj_batch(jax.random.key(2), B=3, T=4)
+    out = losses.weighted_impala_loss(*args)
+    assert out.per_seq_td.shape == (3,)
+    assert bool(jnp.all(out.per_seq_td >= 0.0))
+    # doubling the value error of one row must raise only its td
+    logits, values = args[0], args[1]
+    far_values = values.at[0].add(100.0)
+    out2 = losses.weighted_impala_loss(logits, far_values, *args[2:])
+    assert float(out2.per_seq_td[0]) > float(out.per_seq_td[0])

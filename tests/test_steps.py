@@ -34,6 +34,7 @@ def test_train_loss_decreases_on_fixed_batch():
     assert losses[-1] < losses[0], losses
 
 
+@pytest.mark.slow  # grad-accumulation equivalence; heaviest single jit
 def test_microbatched_grads_match_full_batch():
     cfg = dataclasses.replace(
         get_reduced_config("qwen3_4b"), microbatches=4, remat="none",

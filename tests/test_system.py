@@ -4,11 +4,15 @@ IMPALA agent off host environments; the two share RL substrate."""
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro import optim
 from repro.agents.actor_critic import MLPActorCritic
 from repro.core.anakin import Anakin, AnakinConfig
 from repro.envs import Catch, GridWorld
+
+# full training loops: excluded from the fast tier, run in full tier-1
+pytestmark = pytest.mark.slow
 
 
 def test_anakin_solves_catch_end_to_end():
