@@ -75,13 +75,29 @@ def _replay_suite(lines: list[str]) -> None:
     )
 
 
+def _sebulba_suite(lines: list[str], include_e2e: bool = True) -> None:
+    """--suite sebulba: fused-vs-legacy actor-loop numbers plus the
+    subprocess end-to-end FPS -> BENCH_sebulba.json (the actor-pipeline
+    perf trajectory)."""
+    from benchmarks import sebulba_pipeline
+
+    _section(
+        "sebulba actor pipeline (fused vs legacy)",
+        lambda: sebulba_pipeline.main(
+            json_path="BENCH_sebulba.json", include_e2e=include_e2e
+        ),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
-    ap.add_argument("--suite", choices=["all", "replay"], default="all",
-                    help="'replay' runs only the replay bench and writes "
-                         "BENCH_replay.json")
+    ap.add_argument("--suite", choices=["all", "replay", "sebulba"],
+                    default="all",
+                    help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
+                         "BENCH_sebulba.json only (actor pipeline + e2e FPS)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -89,6 +105,13 @@ def main() -> None:
 
     if args.suite == "replay":
         _replay_suite(lines)
+        print("# --- summary CSV ---")
+        for line in lines:
+            print(line)
+        return
+
+    if args.suite == "sebulba":
+        _sebulba_suite(lines)
         print("# --- summary CSV ---")
         for line in lines:
             print(line)
@@ -109,8 +132,9 @@ def main() -> None:
                  lambda: sebulba_batch.main((12, 24, 48)), lines)
         _section("Fig 4c muzero scaling",
                  lambda: muzero_scaling.main((4, 8)), lines)
-        # keep BENCH_replay.json fresh on full runs, not just --suite replay
+        # keep the regression JSONs fresh on full runs, not just per-suite
         _replay_suite(lines)
+        _sebulba_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

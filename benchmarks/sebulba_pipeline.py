@@ -1,0 +1,240 @@
+"""Actor-pipeline benchmark (before/after for the fused Sebulba hot path).
+
+Measures the actor hot loop two ways on the same synthetic host workload:
+
+  * ``legacy`` — the pre-fusion reference, frozen here: separate jitted
+    inference, 3 host->device transfers per env step (obs, rewards,
+    discounts), a blocking host sync, and a T-way ``jnp.stack`` per leaf at
+    drain time (``TrajectoryAccumulator``);
+  * ``fused``  — one donated-jit act-step per env step writing the
+    device-resident trajectory ring in place, per-step host data batched
+    into a single (2, B) transfer, and a zero-copy drain
+    (``DeviceTrajectoryBuffer``), i.e. Sebulba's current path.
+
+The env is a zero-cost stub (precomputed numpy arrays) so the numbers
+isolate the host/device glue the fused pipeline removes — exactly the
+overhead Inci et al. measure dominating distributed-RL step time.  The
+optional end-to-end section reruns the Fig. 4b subprocess sweep (8
+placeholder devices, 2 actor + 6 learner cores) for a whole-system FPS
+figure.  ``benchmarks/run.py --suite sebulba`` writes both into
+``BENCH_sebulba.json``, the trajectory future actor-pipeline PRs regress
+against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._timing import csv_line
+
+BATCH = 32
+# two operating points: B=4 is overhead-dominated (inference is cheap, so
+# the per-step host/device glue the fusion removes is visible), B=32 is
+# compute-dominated on this CPU container (conv inference ~ms/step swamps
+# the glue — the regime a real accelerator does NOT sit in)
+BATCHES = (4, BATCH)
+TRAJ = 20
+MEASURE_STEPS = 3 * TRAJ
+
+
+class _StubHostEnv:
+    """Batched-env stand-in with near-zero host cost: fixed obs/reward
+    buffers, so the loop time is the device pipeline, not the env."""
+
+    def __init__(self, batch: int, obs_shape=(16, 16, 1)):
+        rng = np.random.RandomState(0)
+        self.obs = rng.rand(batch, *obs_shape).astype(np.float32)
+        self.rewards = rng.rand(batch).astype(np.float32)
+        self.dones = np.zeros(batch, bool)
+
+    def reset(self):
+        return self.obs
+
+    def step(self, actions):
+        return self.obs, self.rewards, self.dones
+
+
+def _build(batch: int):
+    from repro import optim
+    from repro.agents.impala import ConvActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import HostPong
+
+    net = ConvActorCritic(HostPong.num_actions, channels=(8,), blocks=1,
+                          hidden=64)
+    seb = Sebulba(
+        env_factory=lambda seed: HostPong(seed=seed),
+        make_batched_env=lambda f, n: _StubHostEnv(n),
+        network=net,
+        optimizer=optim.rmsprop(2e-4, clip_norm=1.0),
+        config=SebulbaConfig(
+            num_actor_cores=1, threads_per_actor_core=1,
+            actor_batch_size=batch, trajectory_length=TRAJ,
+        ),
+    )
+    params, _ = seb.init(jax.random.key(0), (16, 16, 1))
+    return seb, params
+
+
+def _run_fused(seb, params, env, device, steps: int) -> float:
+    """-> seconds for ``steps`` env steps on the fused pipeline."""
+    cfg = seb.cfg
+    obs = env.reset()
+    rng = jax.device_put(jax.random.key(1), device)
+    host_data = np.zeros((2, cfg.actor_batch_size), np.float32)
+    buf = None
+    t = 0
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        obs_dev = jax.device_put(obs, device)
+        hd_dev = jax.device_put(host_data, device)
+        if buf is None:
+            buf = seb._make_actor_buffer(params, obs_dev, device)
+        if t == cfg.trajectory_length:
+            traj, buf = seb._drain(buf, hd_dev, obs_dev)
+            t = 0
+            shards = seb._shard_for_learners(traj)
+            jax.block_until_ready(shards.actions)
+        actions, buf, rng = seb._act_step(params, buf, rng, obs_dev, hd_dev)
+        obs, rewards, dones = env.step(np.asarray(actions))
+        host_data = np.stack(
+            [rewards, (~dones).astype(np.float32) * cfg.discount]
+        )
+        t += 1
+    if t == cfg.trajectory_length:
+        # the legacy loop drains right after the T-th add; match it so both
+        # timed windows contain the same number of drain+shard cycles
+        obs_dev = jax.device_put(obs, device)
+        hd_dev = jax.device_put(host_data, device)
+        traj, buf = seb._drain(buf, hd_dev, obs_dev)
+        shards = seb._shard_for_learners(traj)
+        jax.block_until_ready(shards.actions)
+    jax.block_until_ready(buf.actions)
+    return time.perf_counter() - t0
+
+
+def _run_legacy(seb, params, env, device, steps: int, inference) -> float:
+    """The frozen pre-fusion actor loop: per-leaf transfers + host-list
+    accumulate + stack-at-drain (kept verbatim as the 'before' reference,
+    independent of what core/sebulba.py now does).  ``inference`` is the
+    jitted act fn, built ONCE by the caller — the pre-fusion Sebulba jitted
+    it once in __init__ too, and re-wrapping per run would put a fresh
+    trace+compile inside every timed window."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.data.trajectory import TrajectoryAccumulator
+
+    cfg = seb.cfg
+    sharding = NamedSharding(seb.learner_mesh, P("batch"))
+    obs = env.reset()
+    acc = TrajectoryAccumulator(cfg.trajectory_length)
+    rng = jax.random.key(1)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        rng, a_rng = jax.random.split(rng)
+        obs_dev = jax.device_put(obs, device)
+        actions, logp, extras = inference(params, obs_dev, a_rng)
+        actions_host = np.asarray(actions)
+        next_obs, rewards, dones = env.step(actions_host)
+        discounts = (~dones).astype(np.float32) * cfg.discount
+        acc.add(obs_dev, actions, jax.device_put(rewards, device),
+                jax.device_put(discounts, device), logp, extras)
+        obs = next_obs
+        if acc.full:
+            traj = acc.drain(bootstrap_obs=jax.device_put(obs, device))
+            shards = jax.tree.map(
+                lambda x: jax.device_put(np.asarray(x), sharding), traj
+            )
+            jax.block_until_ready(shards.actions)
+    return time.perf_counter() - t0
+
+
+def bench_actor_loop(batch: int = BATCH, steps: int = MEASURE_STEPS) -> dict:
+    """-> {legacy_us_per_step, fused_us_per_step, speedup, *_fps}."""
+    import functools
+
+    seb, params = _build(batch)
+    device = seb.split.actor_devices[0]
+    env = _StubHostEnv(batch)
+    legacy = functools.partial(
+        _run_legacy, inference=jax.jit(seb.agent.act)
+    )
+    results = {}
+    for name, runner in (("legacy", legacy), ("fused", _run_fused)):
+        runner(seb, params, env, device, seb.cfg.trajectory_length + 2)  # jit
+        best = min(runner(seb, params, env, device, steps) for _ in range(3))
+        us = best / steps * 1e6
+        results[f"{name}_us_per_step"] = round(us, 1)
+        results[f"{name}_steps_per_s"] = round(1e6 / us, 1)
+        results[f"{name}_fps"] = round(batch * 1e6 / us)
+    results["speedup"] = round(
+        results["legacy_us_per_step"] / results["fused_us_per_step"], 2
+    )
+    results["actor_batch"] = batch
+    results["trajectory_length"] = TRAJ
+    return results
+
+
+def bench_e2e(frames: int = 12_000, batch: int = 24) -> dict:
+    """End-to-end Sebulba FPS on the 8-placeholder-device topology
+    (subprocess; the Fig. 4b harness at a single batch point)."""
+    from benchmarks import sebulba_batch
+
+    fps = sebulba_batch.measure(batch, frames=frames)
+    return {"fps": round(fps), "actor_batch": batch, "frames": frames}
+
+
+def csv_lines(results: dict) -> list[str]:
+    lines = []
+    for key, loop in results["actor_loop"].items():
+        b = loop["actor_batch"]
+        lines.append(csv_line(
+            f"sebulba_actor_step_legacy_b{b}", loop["legacy_us_per_step"],
+            f"fps={loop['legacy_fps']:,}"))
+        lines.append(csv_line(
+            f"sebulba_actor_step_fused_b{b}", loop["fused_us_per_step"],
+            f"fps={loop['fused_fps']:,} speedup={loop['speedup']}x"))
+    if "e2e" in results:
+        e = results["e2e"]
+        lines.append(csv_line(
+            "sebulba_e2e_8core", 1e6 / max(e["fps"], 1), f"fps={e['fps']:,}"
+        ))
+    return lines
+
+
+def main(json_path: str | None = None, include_e2e: bool = True,
+         e2e_frames: int = 12_000) -> list[str]:
+    results = {
+        "actor_loop": {
+            f"batch_{b}": bench_actor_loop(batch=b) for b in BATCHES
+        }
+    }
+    if include_e2e:
+        results["e2e"] = bench_e2e(frames=e2e_frames)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return csv_lines(results)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_sebulba.json")
+    ap.add_argument("--no-e2e", action="store_true",
+                    help="skip the subprocess end-to-end FPS run")
+    ap.add_argument("--frames", type=int, default=12_000)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(
+        json_path="BENCH_sebulba.json" if args.json else None,
+        include_e2e=not args.no_e2e, e2e_frames=args.frames,
+    ):
+        print(line)
+    if args.json:
+        print("wrote BENCH_sebulba.json")

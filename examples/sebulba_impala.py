@@ -27,8 +27,15 @@ def main() -> None:
 
     n_dev = len(jax.devices())
     actor_cores = min(args.actor_cores, max(1, n_dev - 1)) if n_dev > 1 else 1
+    learners = max(n_dev - actor_cores, 1)
+    # the batch shards across learner cores; round up to the next multiple
+    # (a 6-learner split would otherwise reject the power-of-two default)
+    actor_batch = -(-args.actor_batch // learners) * learners
+    if actor_batch != args.actor_batch:
+        print(f"actor batch {args.actor_batch} -> {actor_batch} "
+              f"(multiple of {learners} learners)")
     print(f"devices: {n_dev} -> {actor_cores} actor / "
-          f"{max(n_dev - actor_cores, 1)} learner cores")
+          f"{learners} learner cores")
 
     net = ConvActorCritic(HostPong.num_actions, channels=(16, 32), blocks=1)
     seb = Sebulba(
@@ -39,7 +46,7 @@ def main() -> None:
         config=SebulbaConfig(
             num_actor_cores=actor_cores,
             threads_per_actor_core=2,
-            actor_batch_size=args.actor_batch,
+            actor_batch_size=actor_batch,
             trajectory_length=args.trajectory,
         ),
     )

@@ -45,6 +45,10 @@ def main() -> None:
                     help="warmup inserts before learning starts")
     ap.add_argument("--uniform", action="store_true",
                     help="uniform instead of prioritized sampling")
+    ap.add_argument("--anneal-updates", type=int, default=0,
+                    help="linearly anneal the PER importance exponent "
+                         "(beta) to 1.0 over this many learner updates "
+                         "(0 keeps it fixed)")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -86,6 +90,7 @@ def main() -> None:
                 sample_batch_size=replay_batch,
                 min_size=min(args.min_size, capacity),
                 prioritized=not args.uniform,
+                importance_anneal_updates=args.anneal_updates,
             ),
         ),
     )

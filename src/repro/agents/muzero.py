@@ -107,6 +107,9 @@ class MuZeroAgent:
     # -- acting (runs on actor cores, batched) -------------------------------
 
     def act(self, params, obs, rng):
+        """MCTS acting.  Traced inside Sebulba's fused donated act-step;
+        the (B, A) visit-probability extras get a preallocated (B, T, A)
+        slot in the device trajectory ring via ``jax.eval_shape``."""
         out = mcts_search(
             params, obs, rng,
             representation=self.nets.representation,

@@ -35,6 +35,9 @@ class PPOAgent:
         return self.net.init(rng, obs_shape)
 
     def act(self, params, obs, rng):
+        """Batched acting; traced inside Sebulba's fused donated act-step
+        (must be jit-pure; extras must be a fixed-shape pytree — storage
+        for them is preallocated in the device trajectory ring)."""
         logits, _ = self.net.apply(params, obs)
         actions = jax.random.categorical(rng, logits)
         logp = losses.log_prob(logits, actions)

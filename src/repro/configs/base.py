@@ -170,6 +170,12 @@ class ReplayConfig:
     the learner count.  ``prioritized`` switches uniform -> PER sampling
     (Schaul et al. 2016): draws proportional to ``p^priority_exponent``,
     bias-corrected by ``(size * P(i))^-importance_exponent`` weights.
+
+    ``importance_anneal_updates`` enables the original PER recipe's beta
+    schedule: the importance exponent anneals linearly from
+    ``importance_exponent`` to 1.0 (full bias correction) over that many
+    learner updates, computed on device inside the fused off-policy step
+    (``importance_beta``); 0 keeps beta fixed.
     """
 
     capacity: int = 4096  # trajectory slots across all learner shards
@@ -177,7 +183,8 @@ class ReplayConfig:
     min_size: int = 256  # warmup: inserts only until this many slots filled
     prioritized: bool = True
     priority_exponent: float = 0.6  # PER alpha
-    importance_exponent: float = 0.4  # PER beta
+    importance_exponent: float = 0.4  # PER beta (the t=0 value when annealed)
+    importance_anneal_updates: int = 0  # 0 -> fixed beta
     priority_epsilon: float = 1e-3  # floor so no slot starves
 
     def __post_init__(self):
@@ -190,6 +197,33 @@ class ReplayConfig:
                 "replay min_size must be >= 1: warmup must insert at least "
                 "once before sampling (an empty ring samples NaN probs)"
             )
+        if self.importance_anneal_updates < 0:
+            raise ValueError("importance_anneal_updates must be >= 0")
+        if not 0.0 <= self.importance_exponent <= 1.0:
+            raise ValueError(
+                "importance_exponent (PER beta) must lie in [0, 1]: it is "
+                "the t=0 point of an anneal that ends at 1.0"
+            )
+
+    def importance_beta(self, update_idx):
+        """PER beta at learner update ``update_idx`` (int or traced scalar).
+
+        Linear anneal ``importance_exponent -> 1.0`` over
+        ``importance_anneal_updates`` updates, clamped at 1.0 after; with
+        annealing disabled this is the constant ``importance_exponent`` (so
+        callers can thread it through jit unconditionally).
+        """
+        beta0 = self.importance_exponent
+        if self.importance_anneal_updates <= 0:
+            return beta0
+        import jax.numpy as jnp
+
+        frac = jnp.minimum(
+            jnp.asarray(update_idx, jnp.float32)
+            / self.importance_anneal_updates,
+            1.0,
+        )
+        return beta0 + (1.0 - beta0) * frac
 
 
 @dataclasses.dataclass(frozen=True)

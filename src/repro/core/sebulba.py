@@ -6,15 +6,23 @@ Reproduces the paper's dataflow exactly:
   * one-or-more Python threads per actor core each own a *batched host
     environment* (repro/envs/batched_env.py) and alternate in using their
     actor core, hiding env-stepping latency behind device inference;
-  * actors accumulate fixed-length trajectories ON DEVICE, split them along
-    the batch dimension, send each shard device-to-device to a learner core,
-    and put the (device-array) handles on a Python queue;
+  * the actor hot path is ONE fused donated-jit ``act_step`` per env step:
+    RNG split -> policy inference -> log-prob -> in-place write into a
+    preallocated device-resident ``DeviceTrajectoryBuffer``
+    (repro/data/trajectory.py), with the per-step host data (rewards,
+    discounts) batched into a single (2, B) transfer.  The only host sync
+    per step is reading the actions the env needs;
+  * when the ring is full the actor drains it (the trajectory leaves alias
+    the donated ring storage — no stacking, no copy), slices the batch on
+    the actor core, and sends each shard *device-to-device* to its learner
+    core — trajectory leaves never round-trip through host numpy;
   * a single learner thread assembles the shards into one globally-sharded
     batch over the learner mesh and runs the same update on every learner
     core (shard_map), averaging gradients with jax.lax.pmean;
-  * after each update the learner pushes fresh parameters device-to-device
-    to every actor core; actor threads pick them up before their next
-    inference step.
+  * after each update the learner publishes fresh parameters
+    device-to-device to every actor core through a lock-free versioned
+    params slot (device_put dispatches async, so the publish never blocks
+    the learner); actor threads pick the slot up before their next step.
 
 The V-trace (IMPALA) objective corrects for the actor/learner policy lag.
 ``learner_microbatches`` implements the paper's MuZero trick of splitting
@@ -50,7 +58,13 @@ from repro import optim
 from repro.compat import shard_map
 from repro.configs.base import ReplayConfig
 from repro.core.topology import CoreSplit, split_devices
-from repro.data.trajectory import Trajectory, TrajectoryAccumulator
+from repro.data.trajectory import (
+    Trajectory,
+    buffer_add,
+    buffer_drain,
+    device_buffer_init,
+    split_for_learners,
+)
 from repro.replay import buffer as replay_buffer
 from repro.replay.sharded import ShardedReplay
 from repro.rl import losses
@@ -89,6 +103,11 @@ class ImpalaAgent:
         return self.net.init(rng, obs_shape)
 
     def act(self, params, obs, rng):
+        """Batched acting: (params, obs (B, ...), rng) -> (actions (B,),
+        log-prob (B,), extras).  Traced inside Sebulba's fused donated
+        act-step, so it must be jit-pure and extras must be a fixed-shape
+        pytree (its storage is preallocated in the device trajectory ring
+        via ``jax.eval_shape``)."""
         logits, _ = self.net.apply(params, obs)
         actions = jax.random.categorical(rng, logits)
         logp = losses.log_prob(logits, actions)
@@ -212,22 +231,39 @@ class Sebulba:
                 )
         self._update_off = None  # built lazily (needs trajectory structure)
 
-        self._inference = jax.jit(self._inference_fn)
+        # the fused actor hot path: one donated-jit program per env step
+        # (buffer and rng donated -> in-place ring writes), one donated-jit
+        # drain per trajectory (the outputs alias the donated ring storage)
+        self._act_step = jax.jit(self._act_step_fn, donate_argnums=(1, 2))
+        self._drain = jax.jit(buffer_drain, donate_argnums=(0,))
+        self._split_traj = jax.jit(
+            lambda traj: split_for_learners(traj, self.L)
+        )
         # replay mode never calls the on-policy update, and its agent's
         # loss aux shape is incompatible with it — don't leave it loaded
         self._update = (
             jax.jit(self._build_update()) if config.replay is None else None
         )
 
-        # host-side state shared between threads
-        self._param_lock = threading.Lock()
-        self._actor_params: list[PyTree] = [None] * self.split.num_actors
+        # host-side state shared between threads.  No locks on the hot path:
+        # the params slot is a versioned tuple per actor core (list-item
+        # assignment/read are atomic under the GIL) and frame counting is
+        # per-thread, summed by the ``frames`` property.
+        num_threads = self.split.num_actors * config.threads_per_actor_core
+        self._params_version = 0
+        self._param_slots: list[tuple[int, PyTree]] = (
+            [(0, None)] * self.split.num_actors
+        )
+        self._thread_frames: list[int] = [0] * num_threads
         self._queue: queue.Queue = queue.Queue(maxsize=config.queue_capacity)
         self._stop = threading.Event()
         self._actor_errors: list[BaseException] = []
-        self.frames = 0
-        self._frames_lock = threading.Lock()
         self.episode_returns: deque = deque(maxlen=256)
+
+    @property
+    def frames(self) -> int:
+        """Total host env frames generated (sum of per-thread counters)."""
+        return sum(self._thread_frames)
 
     # -------------------------------------------------------------- setup
 
@@ -240,15 +276,44 @@ class Sebulba:
         return params, opt_state
 
     def _publish_params(self, params: PyTree) -> None:
-        """Device-to-device transfer of fresh params to every actor core."""
-        with self._param_lock:
-            for i, dev in enumerate(self.split.actor_devices):
-                self._actor_params[i] = jax.device_put(params, dev)
+        """Non-blocking device-to-device publish of fresh params.
+
+        ``device_put`` only *dispatches* the transfers; the learner thread
+        never waits on them.  Each actor core has a versioned slot — a
+        (version, params) tuple swapped in one atomic list assignment — so
+        actors always read a consistent pair without taking a lock on the
+        hot path.
+        """
+        self._params_version += 1
+        version = self._params_version
+        for i, dev in enumerate(self.split.actor_devices):
+            self._param_slots[i] = (version, jax.device_put(params, dev))
 
     # -------------------------------------------------------------- actor
 
-    def _inference_fn(self, params, obs, rng):
-        return self.agent.act(params, obs, rng)
+    def _act_step_fn(self, params, buf, rng, obs, rew_disc):
+        """The fused per-step actor program: RNG split, policy inference,
+        log-prob, and the in-place trajectory-ring write — one XLA
+        dispatch per env step, with ``buf`` and ``rng`` donated."""
+        rng, a_rng = jax.random.split(rng)
+        actions, logp, extras = self.agent.act(params, obs, a_rng)
+        buf = buffer_add(buf, obs, actions, logp, extras, rew_disc)
+        return actions, buf, rng
+
+    def _make_actor_buffer(self, params, obs_dev, device):
+        """Preallocate this thread's device trajectory ring, deriving the
+        action/logp/extras storage shapes from the agent's act signature
+        (no tracing side effects — ``eval_shape`` is abstract)."""
+        as_spec = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        obs_spec = jax.tree.map(as_spec, obs_dev)
+        act_spec, logp_spec, extras_spec = jax.eval_shape(
+            self.agent.act, params, obs_spec, jax.random.key(0)
+        )
+        buf = device_buffer_init(
+            self.cfg.trajectory_length, obs_spec, act_spec, logp_spec,
+            extras_spec,
+        )
+        return jax.device_put(buf, device)
 
     def _actor_thread(self, thread_id: int, core_id: int, seed: int) -> None:
         try:
@@ -265,16 +330,35 @@ class Sebulba:
             lambda i: self.env_factory(seed * 10_000 + i), cfg.actor_batch_size
         )
         obs = env.reset()
-        acc = TrajectoryAccumulator(cfg.trajectory_length)
-        rng = jax.random.key(seed)
+        rng = jax.device_put(jax.random.key(seed), device)
         running_return = np.zeros(cfg.actor_batch_size)
+        # previous step's [rewards; discounts], batched into ONE transfer
+        host_data = np.zeros((2, cfg.actor_batch_size), np.float32)
+        buf = None
+        t = 0  # host mirror of the ring cursor (control flow only, no sync)
 
         while not self._stop.is_set():
-            with self._param_lock:
-                params = self._actor_params[core_id]
-            rng, a_rng = jax.random.split(rng)
+            _version, params = self._param_slots[core_id]
             obs_dev = jax.device_put(obs, device)
-            actions, logp, extras = self._inference(params, obs_dev, a_rng)
+            hd_dev = jax.device_put(host_data, device)
+            if buf is None:
+                buf = self._make_actor_buffer(params, obs_dev, device)
+            if t == cfg.trajectory_length:
+                # ring full: merge the final step's rewards, hand the
+                # trajectory (aliasing the donated ring storage) to the
+                # learner shards, and continue on a fresh ring
+                traj, buf = self._drain(buf, hd_dev, obs_dev)
+                t = 0
+                shards = self._shard_for_learners(traj)
+                try:
+                    self._queue.put(shards, timeout=5.0)
+                except queue.Full:
+                    if self._stop.is_set():
+                        return
+            actions, buf, rng = self._act_step(
+                params, buf, rng, obs_dev, hd_dev
+            )
+            # the one host sync per step: the env needs the actions
             actions_host = np.asarray(actions)
             next_obs, rewards, dones = env.step(actions_host)
 
@@ -283,47 +367,40 @@ class Sebulba:
                 self.episode_returns.append(float(r))
             running_return[dones] = 0.0
 
-            discounts = (~dones).astype(np.float32) * cfg.discount
-            acc.add(
-                obs_dev,
-                actions,
-                jax.device_put(rewards, device),
-                jax.device_put(discounts, device),
-                logp,
-                extras,
+            host_data = np.stack(
+                [rewards, (~dones).astype(np.float32) * cfg.discount]
             )
-            with self._frames_lock:
-                self.frames += cfg.actor_batch_size
+            self._thread_frames[thread_id] += cfg.actor_batch_size
             obs = next_obs
-
-            if acc.full:
-                traj = acc.drain(bootstrap_obs=jax.device_put(obs, device))
-                shards = self._shard_for_learners(traj)
-                try:
-                    self._queue.put(shards, timeout=5.0)
-                except queue.Full:
-                    if self._stop.is_set():
-                        return
+            t += 1
 
     def _shard_for_learners(self, traj: Trajectory):
-        """Split along batch, device_put each shard onto its learner core
-        (the paper's direct device-to-device trajectory transfer), and
-        reassemble handles as one globally-sharded array per leaf."""
+        """Slice the completed trajectory on the actor core and send each
+        shard directly to its learner device (the paper's device-to-device
+        trajectory transfer), reassembling the single-device handles as one
+        globally-sharded array per leaf.  No trajectory leaf ever becomes
+        host numpy on this path."""
         sharding = NamedSharding(self.learner_mesh, P("batch"))
+        if self.L == 1:
+            return jax.tree.map(lambda x: jax.device_put(x, sharding), traj)
 
-        def to_global(x):
-            pieces = np.split(np.asarray(x), self.L, axis=0) if self.L > 1 else None
-            if pieces is None:
-                return jax.device_put(x, sharding)
-            shards = [
-                jax.device_put(p, d)
-                for p, d in zip(pieces, self.split.learner_devices)
-            ]
+        # one fused program slices every leaf on the actor core ...
+        parts = self._split_traj(traj)
+        # ... then each slice is copied device-to-device to its learner
+        parts = [
+            jax.device_put(part, dev)
+            for part, dev in zip(parts, self.split.learner_devices)
+        ]
+
+        def assemble(*shards):
+            global_shape = (
+                shards[0].shape[0] * self.L,
+            ) + shards[0].shape[1:]
             return jax.make_array_from_single_device_arrays(
-                x.shape, sharding, shards
+                global_shape, sharding, list(shards)
             )
 
-        return jax.tree.map(to_global, traj)
+        return jax.tree.map(assemble, *parts)
 
     # ------------------------------------------------------------- learner
 
@@ -389,7 +466,7 @@ class Sebulba:
         rcfg = cfg.replay
         local_sample = rcfg.sample_batch_size // self.L
 
-        def shard_update(params, opt_state, rstate, traj, key):
+        def shard_update(params, opt_state, rstate, traj, key, update_idx):
             key = jax.random.fold_in(key, jax.lax.axis_index("batch"))
             B_on = traj.actions.shape[0]
             # sample from the PRE-insert ring: the online shard already sits
@@ -403,7 +480,7 @@ class Sebulba:
             if rcfg.prioritized:
                 w_replay = losses.per_importance_weights(
                     probs, replay_buffer.size(rstate),
-                    rcfg.importance_exponent, axis_name="batch",
+                    rcfg.importance_beta(update_idx), axis_name="batch",
                 )
                 ins_slots = replay_buffer.insert_slots(rstate, B_on)
                 rstate = replay_buffer.insert(
@@ -446,7 +523,7 @@ class Sebulba:
         fn = shard_map(
             shard_update,
             mesh=self.learner_mesh,
-            in_specs=(P(), P(), rspec, tspec, P()),
+            in_specs=(P(), P(), rspec, tspec, P(), P()),
             out_specs=(P(), P(), rspec, P()),
         )
         return jax.jit(fn, donate_argnums=2)
@@ -509,7 +586,8 @@ class Sebulba:
                         replay_warmed = True
                     key = jax.random.fold_in(replay_rng, updates)
                     params, opt_state, replay_state, metrics = self._update_off(
-                        params, opt_state, replay_state, shards, key
+                        params, opt_state, replay_state, shards, key,
+                        jnp.int32(updates),
                     )
                 else:
                     params, opt_state, metrics = self._update(
@@ -537,6 +615,9 @@ class Sebulba:
         return {
             "params": params,
             "updates": updates,
+            # publish count actors observed via the versioned slots:
+            # init's publish + one per learner update
+            "param_version": self._params_version,
             "replay_size": (
                 self._replay.size(replay_state)
                 if self._replay is not None and replay_state is not None

@@ -1,1 +1,9 @@
-from repro.data.trajectory import Trajectory, TrajectoryAccumulator  # noqa: F401
+from repro.data.trajectory import (  # noqa: F401
+    DeviceTrajectoryBuffer,
+    Trajectory,
+    TrajectoryAccumulator,
+    buffer_add,
+    buffer_drain,
+    device_buffer_init,
+    split_for_learners,
+)

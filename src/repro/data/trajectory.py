@@ -2,10 +2,13 @@
 
 ``Trajectory`` is batch-major (B, T, ...).  Sebulba actors accumulate
 fixed-length trajectories *on device* (the paper: "each actor thread
-accumulates a batch of trajectories of fixed length on device") via
-``TrajectoryAccumulator`` — a list of per-step device slices that is stacked
-device-side only when the trajectory is complete, then split along the batch
-dimension for the learner shards.
+accumulates a batch of trajectories of fixed length on device") in a
+``DeviceTrajectoryBuffer`` — a preallocated (B, T, ...) pytree that the
+fused actor step updates in place via ``lax.dynamic_update_index_in_dim``
+with the buffer donated (the replay-ring recipe from repro/replay/buffer.py
+applied to the actor half of the system).  ``TrajectoryAccumulator`` is the
+legacy host-list path, kept as the bit-exactness reference for the fused
+pipeline and for host-side tooling.
 """
 
 from __future__ import annotations
@@ -14,7 +17,6 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 class Trajectory(NamedTuple):
@@ -27,8 +29,146 @@ class Trajectory(NamedTuple):
     extras: Any = ()  # agent-specific per-step data (e.g. MCTS visit probs)
 
 
+class DeviceTrajectoryBuffer(NamedTuple):
+    """Preallocated device-resident trajectory ring for one actor thread.
+
+    All array leaves are (B, T, ...) storage plus two scalar cursors, so the
+    whole buffer is a pure pytree that threads through a donated ``jax.jit``
+    — each env step is a single in-place ``dynamic_update_index_in_dim``
+    write instead of a growing host list of per-step arrays.
+
+    Rewards and discounts for step t are only known on the host *after* the
+    env consumed action t, so they arrive one step late: ``buffer_add``
+    writes them at slot t-1 (``has_prev`` gates the first write after an
+    init/drain, when there is no pending step), and the final step's
+    reward/discount land in ``buffer_drain`` together with the bootstrap
+    observation.
+    """
+
+    obs: Any  # (B, T, ...)
+    actions: jax.Array  # (B, T)
+    rewards: jax.Array  # (B, T) float32
+    discounts: jax.Array  # (B, T) float32
+    behaviour_logp: jax.Array  # (B, T)
+    extras: Any  # agent extras; (B, T, ...) leaves or ()
+    t: jax.Array  # () int32 — write cursor, wraps mod T
+    has_prev: jax.Array  # () bool — a step since init/drain awaits its reward
+
+    @property
+    def length(self) -> int:
+        return self.actions.shape[1]
+
+
+def device_buffer_init(
+    length: int, obs_spec: Any, action_spec, logp_spec, extras_spec: Any = ()
+) -> DeviceTrajectoryBuffer:
+    """Allocate a zeroed ``DeviceTrajectoryBuffer`` from per-step specs.
+
+    Specs are per-step (B, ...) ``ShapeDtypeStruct``s (or concrete arrays);
+    the Sebulba actor derives them with ``jax.eval_shape`` over the agent's
+    ``act`` so agent extras of any fixed-shape pytree structure get a
+    storage slot without the agent knowing about the buffer.
+    """
+
+    def alloc(spec):
+        return jnp.zeros((spec.shape[0], length) + spec.shape[1:], spec.dtype)
+
+    B = action_spec.shape[0]
+    return DeviceTrajectoryBuffer(
+        obs=jax.tree.map(alloc, obs_spec),
+        actions=alloc(action_spec),
+        rewards=jnp.zeros((B, length), jnp.float32),
+        discounts=jnp.zeros((B, length), jnp.float32),
+        behaviour_logp=alloc(logp_spec),
+        extras=jax.tree.map(alloc, extras_spec),
+        t=jnp.zeros((), jnp.int32),
+        has_prev=jnp.zeros((), jnp.bool_),
+    )
+
+
+def buffer_add(
+    buf: DeviceTrajectoryBuffer, obs, actions, logp, extras, rew_disc
+) -> DeviceTrajectoryBuffer:
+    """Write one env step at the cursor; pure, composes into the fused step.
+
+    ``rew_disc`` is the (2, B) float32 [rewards; discounts] of the
+    *previous* step, batched into one host transfer — written at slot t-1
+    (mod T) when ``has_prev``.  Trace this inside a jit that donates ``buf``
+    so every write is an in-place buffer update.
+    """
+    T = buf.actions.shape[1]
+    t = buf.t
+    upd = lambda s, x: jax.lax.dynamic_update_index_in_dim(s, x, t, 1)
+    prev = jnp.remainder(t - 1, T)
+    rewards = jnp.where(
+        buf.has_prev,
+        jax.lax.dynamic_update_index_in_dim(buf.rewards, rew_disc[0], prev, 1),
+        buf.rewards,
+    )
+    discounts = jnp.where(
+        buf.has_prev,
+        jax.lax.dynamic_update_index_in_dim(buf.discounts, rew_disc[1], prev, 1),
+        buf.discounts,
+    )
+    return DeviceTrajectoryBuffer(
+        obs=jax.tree.map(upd, buf.obs, obs),
+        actions=upd(buf.actions, actions),
+        rewards=rewards,
+        discounts=discounts,
+        behaviour_logp=upd(buf.behaviour_logp, logp),
+        extras=jax.tree.map(upd, buf.extras, extras),
+        t=jnp.remainder(t + 1, T),
+        has_prev=jnp.ones((), jnp.bool_),
+    )
+
+
+def buffer_drain(
+    buf: DeviceTrajectoryBuffer, rew_disc, bootstrap_obs
+) -> tuple[Trajectory, DeviceTrajectoryBuffer]:
+    """Complete the trajectory: final rewards in, fresh ring out.
+
+    Call via a jit that donates ``buf``: the trajectory leaves then *alias*
+    the donated storage (zero-copy handoff to the learner shards) while the
+    returned ring gets fresh zeroed buffers — a memset instead of a T-leaf
+    copy.  ``rew_disc`` is the (2, B) [rewards; discounts] of the last step
+    (T-1), which the host only learned after the final ``buffer_add``.
+    """
+    T = buf.actions.shape[1]
+    traj = Trajectory(
+        obs=buf.obs,
+        actions=buf.actions,
+        rewards=jax.lax.dynamic_update_index_in_dim(
+            buf.rewards, rew_disc[0], T - 1, 1
+        ),
+        discounts=jax.lax.dynamic_update_index_in_dim(
+            buf.discounts, rew_disc[1], T - 1, 1
+        ),
+        behaviour_logp=buf.behaviour_logp,
+        bootstrap_obs=bootstrap_obs,
+        extras=buf.extras,
+    )
+    fresh = DeviceTrajectoryBuffer(
+        obs=jax.tree.map(jnp.zeros_like, buf.obs),
+        actions=jnp.zeros_like(buf.actions),
+        rewards=jnp.zeros_like(buf.rewards),
+        discounts=jnp.zeros_like(buf.discounts),
+        behaviour_logp=jnp.zeros_like(buf.behaviour_logp),
+        extras=jax.tree.map(jnp.zeros_like, buf.extras),
+        t=jnp.zeros((), jnp.int32),
+        has_prev=jnp.zeros((), jnp.bool_),
+    )
+    return traj, fresh
+
+
 class TrajectoryAccumulator:
-    """Accumulates T steps of (obs, action, reward, discount, logp, extras)."""
+    """Accumulates T steps of (obs, action, reward, discount, logp, extras).
+
+    Legacy host-list path: one device dispatch per leaf per step at add time
+    and a T-way ``jnp.stack`` per leaf at drain.  Sebulba's hot loop uses
+    the fused ``DeviceTrajectoryBuffer`` instead; this stays as the
+    reference the fused pipeline is pinned bit-exact against
+    (tests/test_trajectory_buffer.py) and for host-side tooling.
+    """
 
     def __init__(self, length: int):
         self.length = length

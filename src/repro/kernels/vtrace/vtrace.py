@@ -74,9 +74,20 @@ def vtrace_pallas(
 
     B, T = log_rhos.shape
     bb = min(block_b, B)
-    if B % bb:
-        raise ValueError(f"B={B} must divide block_b={bb}")
-    grid = (B // bb,)
+    # pad B up to a multiple of the batch block instead of restricting the
+    # caller to divisible shapes: padded rows cost one extra grid step at
+    # most and compute benign values (log_rho 0 -> rho 1, everything else
+    # 0), which are sliced off before returning
+    B_pad = -(-B // bb) * bb
+    if B_pad != B:
+        row_pad = lambda x: jnp.pad(
+            x, ((0, B_pad - B),) + ((0, 0),) * (x.ndim - 1)
+        )
+        log_rhos, discounts, rewards, values, bootstrap_value = (
+            row_pad(log_rhos), row_pad(discounts), row_pad(rewards),
+            row_pad(values), row_pad(bootstrap_value),
+        )
+    grid = (B_pad // bb,)
     spec2 = pl.BlockSpec((bb, T), lambda i: (i, 0))
     spec1 = pl.BlockSpec((bb,), lambda i: (i,))
     to_f32 = lambda x: x.astype(jnp.float32)
@@ -89,12 +100,12 @@ def vtrace_pallas(
         in_specs=[spec2, spec2, spec2, spec2, spec1],
         out_specs=[spec2, spec2],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T), jnp.float32),
-            jax.ShapeDtypeStruct((B, T), jnp.float32),
+            jax.ShapeDtypeStruct((B_pad, T), jnp.float32),
+            jax.ShapeDtypeStruct((B_pad, T), jnp.float32),
         ],
         interpret=interpret,
     )(
         to_f32(log_rhos), to_f32(discounts), to_f32(rewards), to_f32(values),
         to_f32(bootstrap_value),
     )
-    return VTraceOutput(vs=vs, pg_advantages=adv)
+    return VTraceOutput(vs=vs[:B], pg_advantages=adv[:B])

@@ -78,14 +78,16 @@ def impala_loss(
 
 
 def per_importance_weights(
-    probs: jax.Array, size: jax.Array, beta: float, *,
+    probs: jax.Array, size: jax.Array, beta: float | jax.Array, *,
     axis_name: str | None = None,
 ) -> jax.Array:
     """PER bias correction: w_i = (N * P(i))^-beta, normalized by max.
 
     ``probs`` are the selection probabilities returned by ``replay.sample``
-    and ``size`` the number of valid slots; beta anneals 0 -> 1 over
-    training in the original recipe (here a fixed config value).
+    and ``size`` the number of valid slots; ``beta`` anneals toward 1 over
+    training in the original recipe and may be a traced scalar
+    (``ReplayConfig.importance_beta`` computes the schedule inside the
+    fused off-policy step) or a fixed float.
 
     Inside shard_map/pmap pass ``axis_name`` so the normalization uses the
     *global* max across learner shards: a per-shard max would give

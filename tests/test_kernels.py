@@ -112,7 +112,15 @@ def test_rglru_carry_state():
 # -------------------------------------------------------------------- vtrace
 
 
-@pytest.mark.parametrize("B,T,bb", [(8, 32, 8), (16, 100, 4), (4, 7, 4)])
+@pytest.mark.parametrize(
+    "B,T,bb",
+    [
+        (8, 32, 8), (16, 100, 4), (4, 7, 4),
+        # B not a multiple of block_b: the kernel pads rows up to the block
+        # (it used to raise here, with an inverted error message)
+        (10, 12, 4), (5, 9, 4), (3, 6, 2),
+    ],
+)
 def test_vtrace_matches_ref(B, T, bb):
     ks = jax.random.split(jax.random.key(B * T), 5)
     lr = jax.random.normal(ks[0], (B, T)) * 0.3

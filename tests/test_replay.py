@@ -223,6 +223,80 @@ def test_replay_config_validation():
         ReplayConfig(capacity=8, sample_batch_size=16)
     with pytest.raises(ValueError):
         ReplayConfig(capacity=8, sample_batch_size=4, min_size=99)
+    with pytest.raises(ValueError):
+        ReplayConfig(importance_anneal_updates=-1)
+    with pytest.raises(ValueError):
+        ReplayConfig(importance_exponent=1.5)
+
+
+# ----------------------------------------------------- PER beta annealing
+
+
+def test_importance_beta_linear_anneal():
+    cfg = ReplayConfig(
+        importance_exponent=0.4, importance_anneal_updates=100
+    )
+    assert float(cfg.importance_beta(0)) == pytest.approx(0.4)
+    assert float(cfg.importance_beta(50)) == pytest.approx(0.7)
+    assert float(cfg.importance_beta(100)) == pytest.approx(1.0)
+    assert float(cfg.importance_beta(10_000)) == pytest.approx(1.0)  # clamps
+
+
+def test_importance_beta_disabled_is_constant_float():
+    cfg = ReplayConfig(importance_exponent=0.4)
+    # no anneal -> a plain python float (no device constant in the trace)
+    assert cfg.importance_beta(0) == 0.4
+    assert cfg.importance_beta(10**6) == 0.4
+
+
+def test_importance_beta_traced_through_weights():
+    """The schedule must compose into the fused jit: traced update index ->
+    traced beta -> the exact (N * P)^-beta / max weights."""
+    from repro.rl import losses
+
+    cfg = ReplayConfig(
+        importance_exponent=0.5, importance_anneal_updates=10
+    )
+    probs = jnp.asarray([0.1, 0.2, 0.4], jnp.float32)
+
+    @jax.jit
+    def weights_at(update_idx):
+        return losses.per_importance_weights(
+            probs, jnp.int32(8), cfg.importance_beta(update_idx)
+        )
+
+    for idx, beta in [(0, 0.5), (5, 0.75), (10, 1.0), (99, 1.0)]:
+        w = np.asarray(8.0 * probs) ** -beta
+        np.testing.assert_allclose(
+            np.asarray(weights_at(idx)), w / w.max(), rtol=1e-6
+        )
+
+
+def test_offpolicy_sebulba_with_annealed_beta_smoke():
+    """The anneal threads through the fused off-policy step (traced
+    update index) without retracing or NaNs."""
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    seb = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.adam(1e-3, clip_norm=1.0),
+        config=SebulbaConfig(
+            num_actor_cores=1, threads_per_actor_core=1,
+            actor_batch_size=8, trajectory_length=5,
+            replay=ReplayConfig(
+                capacity=64, sample_batch_size=8, min_size=8,
+                importance_anneal_updates=3,
+            ),
+        ),
+    )
+    out = seb.run(jax.random.key(0), (4,), total_frames=600)
+    assert out["updates"] >= 2, out
+    assert np.isfinite(out["metrics"]["loss"])
 
 
 # ------------------------------------------------- end-to-end off-policy
@@ -254,6 +328,8 @@ def test_offpolicy_sebulba_smoke_cpu_mesh():
     assert out["updates"] >= 2, out
     assert out["replay_size"] >= 8
     assert np.isfinite(out["metrics"]["loss"])
+    # every update republishes through the versioned slot (+1 from init)
+    assert out["param_version"] == out["updates"] + 1
 
 
 def test_offpolicy_rejects_bad_configs():

@@ -55,6 +55,168 @@ def test_split_for_learners():
     np.testing.assert_allclose(parts[1].obs, traj.obs[2:4])
 
 
+class _NumpyGuard:
+    """Proxy numpy module that rejects host materialization of jax arrays.
+
+    ``Sebulba._shard_for_learners`` must never pull trajectory leaves to
+    host numpy (the paper's direct device-to-device transfer); patching the
+    module's ``np`` binding with this proxy makes any such round trip fail
+    loudly while leaving jax's own numpy untouched.
+    """
+
+    def __init__(self):
+        self.violations = []
+
+    def _guarded(self, fn):
+        def inner(a, *args, **kwargs):
+            if isinstance(a, jax.Array):
+                self.violations.append(fn.__name__)
+                raise AssertionError(
+                    f"np.{fn.__name__} called on a jax.Array: host "
+                    "round-trip on the actor->learner path"
+                )
+            return fn(a, *args, **kwargs)
+
+        return inner
+
+    def __getattr__(self, name):
+        attr = getattr(np, name)
+        if name in ("asarray", "array", "split", "stack", "concatenate"):
+            return self._guarded(attr)
+        return attr
+
+
+def test_shard_for_learners_stays_on_device(monkeypatch):
+    """ISSUE 2 acceptance: sharded learner batches are built from device
+    slices — no np.asarray of trajectory leaves on the actor->learner
+    path — and land as one globally-sharded array per leaf."""
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core import sebulba as sebulba_mod
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    seb = sebulba_mod.Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.adam(1e-3),
+        config=sebulba_mod.SebulbaConfig(
+            num_actor_cores=1, actor_batch_size=6, trajectory_length=2
+        ),
+    )
+    traj = Trajectory(
+        obs=jnp.arange(24.0).reshape(6, 2, 2),
+        actions=jnp.zeros((6, 2), jnp.int32),
+        rewards=jnp.ones((6, 2)),
+        discounts=jnp.ones((6, 2)),
+        behaviour_logp=jnp.zeros((6, 2)),
+        bootstrap_obs=jnp.zeros((6, 2)),
+    )
+    guard = _NumpyGuard()
+    monkeypatch.setattr(sebulba_mod, "np", guard)
+    shards = seb._shard_for_learners(traj)
+    assert guard.violations == []
+    for leaf in jax.tree.leaves(shards):
+        assert isinstance(leaf, jax.Array)
+        assert set(leaf.sharding.device_set) == set(
+            seb.split.learner_devices
+        )
+    np.testing.assert_array_equal(np.asarray(shards.obs), np.asarray(traj.obs))
+
+
+_SHARD_GUARD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=3"
+    import sys; sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp
+    import numpy as real_np
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core import sebulba as sebulba_mod
+    from repro.data.trajectory import Trajectory
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    class Guard:
+        def __getattr__(self, name):
+            attr = getattr(real_np, name)
+            if name in ("asarray", "array", "split", "stack", "concatenate"):
+                def inner(a, *args, **kw):
+                    assert not isinstance(a, jax.Array), (
+                        "np." + name + " on a jax.Array: host round-trip "
+                        "on the actor->learner path"
+                    )
+                    return attr(a, *args, **kw)
+                return inner
+            return attr
+
+    seb = sebulba_mod.Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.adam(1e-3),
+        config=sebulba_mod.SebulbaConfig(
+            num_actor_cores=1, actor_batch_size=4, trajectory_length=2
+        ),
+    )
+    assert seb.L == 2, seb.L  # the non-degenerate multi-learner split path
+    traj = Trajectory(
+        obs=jax.device_put(jnp.arange(16.0).reshape(4, 2, 2),
+                           seb.split.actor_devices[0]),
+        actions=jnp.zeros((4, 2), jnp.int32),
+        rewards=jnp.ones((4, 2)), discounts=jnp.ones((4, 2)),
+        behaviour_logp=jnp.zeros((4, 2)), bootstrap_obs=jnp.zeros((4, 2)),
+    )
+    sebulba_mod.np = Guard()
+    shards = seb._shard_for_learners(traj)
+    sebulba_mod.np = real_np
+    devs = [s.data.devices() for s in shards.obs.addressable_shards]
+    assert [d for ds in devs for d in ds] == list(seb.split.learner_devices)
+    assert real_np.array_equal(
+        real_np.asarray(shards.obs), real_np.asarray(traj.obs)
+    )
+    print("SHARD_GUARD_OK")
+    """
+)
+
+
+def test_shard_for_learners_multi_learner_no_host_roundtrip():
+    """The L>1 split path (the one that used to np.asarray the whole
+    trajectory) must build its shards from device slices — checked on a
+    3-device subprocess so the fast tier exercises the real branch."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_GUARD_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=240, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARD_GUARD_OK" in proc.stdout
+
+
+def test_bench_actor_loop_reports_both_pipelines():
+    """The --suite sebulba micro-bench must produce the before/after
+    actor-loop numbers BENCH_sebulba.json records (tiny sizes here; the
+    subprocess FPS sweep is the slow-marked test below)."""
+    from benchmarks import sebulba_pipeline
+
+    res = sebulba_pipeline.bench_actor_loop(batch=8, steps=10)
+    for key in ("legacy_us_per_step", "fused_us_per_step", "speedup",
+                "legacy_fps", "fused_fps"):
+        assert key in res and res[key] > 0, res
+
+
+@pytest.mark.slow
+def test_bench_sebulba_e2e_subprocess_sweep():
+    """End-to-end FPS point of --suite sebulba (8 placeholder devices in a
+    subprocess — slow tier only, keeping the fast tier ~3.5 min)."""
+    from benchmarks import sebulba_pipeline
+
+    res = sebulba_pipeline.bench_e2e(frames=6_000)
+    assert res["fps"] > 0
+
+
 _SUBPROCESS_SCRIPT = textwrap.dedent(
     """
     import os
@@ -77,6 +239,25 @@ _SUBPROCESS_SCRIPT = textwrap.dedent(
                              actor_batch_size=12, trajectory_length=10),
     )
     assert seb.split.num_actors == 2 and seb.split.num_learners == 6
+
+    # true D2D sharding: slices built on the actor core land one-per-learner
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data.trajectory import Trajectory
+    traj = Trajectory(
+        obs=jax.device_put(jnp.arange(12.0 * 10 * 4).reshape(12, 10, 4),
+                           seb.split.actor_devices[0]),
+        actions=jnp.zeros((12, 10), jnp.int32),
+        rewards=jnp.zeros((12, 10)), discounts=jnp.ones((12, 10)),
+        behaviour_logp=jnp.zeros((12, 10)),
+        bootstrap_obs=jnp.zeros((12, 4)),
+    )
+    shards = seb._shard_for_learners(traj)
+    per_learner = [s.data.devices() for s in shards.obs.addressable_shards]
+    assert [d for ds in per_learner for d in ds] == list(seb.split.learner_devices)
+    assert shards.obs.shape == (12, 10, 4)
+    assert np.array_equal(np.asarray(shards.obs), np.asarray(traj.obs))
+
     out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=4000)
     assert out["updates"] > 0, out
     assert out["frames"] >= 4000

@@ -1,0 +1,230 @@
+"""Device trajectory ring tests: donation/in-place update invariants, the
+one-step reward lag, drain wraparound, agent-extras storage, and bit-exact
+equivalence of the fused Sebulba act-step against the legacy
+TrajectoryAccumulator path on HostPong (ISSUE 2 acceptance)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.trajectory import (
+    TrajectoryAccumulator,
+    buffer_add,
+    buffer_drain,
+    device_buffer_init,
+)
+
+B, T = 4, 5
+
+
+def make_buf(extras_spec=()):
+    return device_buffer_init(
+        T,
+        jax.ShapeDtypeStruct((B, 3), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.float32),
+        extras_spec,
+    )
+
+
+def step_inputs(i: float):
+    """(obs, actions, logp, extras, rew_disc) for synthetic step i."""
+    return (
+        jnp.full((B, 3), i, jnp.float32),
+        jnp.full((B,), int(i), jnp.int32),
+        jnp.full((B,), -i, jnp.float32),
+        (),
+        jnp.full((2, B), i, jnp.float32),  # prev step's [rewards; discounts]
+    )
+
+
+def test_buffer_init_shapes_and_cursors():
+    buf = make_buf(extras_spec=jax.ShapeDtypeStruct((B, 7), jnp.float32))
+    assert buf.obs.shape == (B, T, 3)
+    assert buf.actions.shape == (B, T) and buf.actions.dtype == jnp.int32
+    assert buf.rewards.shape == (B, T) and buf.rewards.dtype == jnp.float32
+    assert buf.extras.shape == (B, T, 7)
+    assert buf.length == T
+    assert int(buf.t) == 0 and not bool(buf.has_prev)
+
+
+def test_donated_add_updates_ring_in_place():
+    """The fused act-step donates the ring: the old handle must be consumed
+    and the storage reused in place (no per-step reallocation) — the
+    replay-ring recipe applied to the actor pipeline."""
+    step = jax.jit(buffer_add, donate_argnums=(0,))
+    buf = make_buf()
+    obs_ptr = buf.obs.unsafe_buffer_pointer()
+    old = buf
+    buf = step(buf, *step_inputs(1.0))
+    assert old.obs.is_deleted(), "donated input must be consumed"
+    assert buf.obs.unsafe_buffer_pointer() == obs_ptr, (
+        "donation must reuse the ring storage in place"
+    )
+    assert int(buf.t) == 1 and bool(buf.has_prev)
+
+
+def test_reward_lag_one_step_and_first_write_masked():
+    """rewards/discounts of step t arrive with step t+1's transfer and land
+    at slot t; the very first add has no pending step, so its rew_disc
+    payload must not be written anywhere."""
+    step = jax.jit(buffer_add, donate_argnums=(0,))
+    buf = make_buf()
+    buf = step(buf, *step_inputs(1.0))  # garbage rew_disc=1.0: masked out
+    np.testing.assert_array_equal(np.asarray(buf.rewards), 0.0)
+    buf = step(buf, *step_inputs(2.0))  # delivers step-0 rewards (=2.0)
+    np.testing.assert_array_equal(np.asarray(buf.rewards[:, 0]), 2.0)
+    np.testing.assert_array_equal(np.asarray(buf.rewards[:, 1:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(buf.discounts[:, 0]), 2.0)
+
+
+def test_drain_aliases_ring_and_resets():
+    """Drain hands the ring storage to the trajectory zero-copy (donation
+    aliasing) and returns a zeroed ring with reset cursors."""
+    step = jax.jit(buffer_add, donate_argnums=(0,))
+    drain = jax.jit(buffer_drain, donate_argnums=(0,))
+    buf = make_buf()
+    for i in range(T):
+        buf = step(buf, *step_inputs(float(i + 1)))
+    ring_ptr = buf.obs.unsafe_buffer_pointer()
+    boot = jnp.full((B, 3), 99.0)
+    traj, fresh = drain(buf, jnp.full((2, B), 9.0), boot)
+    assert traj.obs.unsafe_buffer_pointer() == ring_ptr, (
+        "trajectory must take ownership of the donated ring storage"
+    )
+    # obs at slot t is step t+1's payload (i+1); final rewards from drain
+    np.testing.assert_array_equal(
+        np.asarray(traj.obs[0, :, 0]), np.arange(1.0, T + 1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(traj.rewards[0]), [2.0, 3.0, 4.0, 5.0, 9.0]
+    )
+    np.testing.assert_array_equal(np.asarray(traj.bootstrap_obs), boot)
+    assert int(fresh.t) == 0 and not bool(fresh.has_prev)
+    for leaf in jax.tree.leaves(fresh):
+        np.testing.assert_array_equal(np.asarray(leaf), 0)
+
+
+def test_drain_wraparound_second_trajectory_independent():
+    """After a drain the ring is immediately reusable: a second fill+drain
+    must produce the second trajectory exactly, with no leakage from the
+    first (the drained trajectory keeps its own storage)."""
+    step = jax.jit(buffer_add, donate_argnums=(0,))
+    drain = jax.jit(buffer_drain, donate_argnums=(0,))
+    buf = make_buf()
+    for i in range(T):
+        buf = step(buf, *step_inputs(float(i + 1)))
+    traj1, buf = drain(buf, jnp.full((2, B), 9.0), jnp.zeros((B, 3)))
+    for i in range(T):
+        buf = step(buf, *step_inputs(float(100 + i)))
+    traj2, buf = drain(buf, jnp.full((2, B), 7.0), jnp.ones((B, 3)))
+    np.testing.assert_array_equal(
+        np.asarray(traj1.obs[0, :, 0]), np.arange(1.0, T + 1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(traj2.obs[0, :, 0]), np.arange(100.0, 100.0 + T)
+    )
+    # first-add-after-drain rew_disc (=100) is masked: slot 0 rewards come
+    # from the second add (=101), the final slot from the drain (=7)
+    np.testing.assert_array_equal(
+        np.asarray(traj2.rewards[0]), [101.0, 102.0, 103.0, 104.0, 7.0]
+    )
+    assert int(buf.t) == 0
+
+
+def test_extras_pytree_gets_time_axis():
+    step = jax.jit(buffer_add, donate_argnums=(0,))
+    drain = jax.jit(buffer_drain, donate_argnums=(0,))
+    buf = make_buf(extras_spec={"visit": jax.ShapeDtypeStruct((B, 2), jnp.float32)})
+    for i in range(T):
+        obs, act, logp, _, hd = step_inputs(float(i))
+        buf = step(buf, obs, act, logp, {"visit": jnp.full((B, 2), float(i))}, hd)
+    traj, _ = drain(buf, jnp.zeros((2, B)), jnp.zeros((B, 3)))
+    assert traj.extras["visit"].shape == (B, T, 2)
+    np.testing.assert_array_equal(
+        np.asarray(traj.extras["visit"][0, :, 0]), np.arange(float(T))
+    )
+
+
+# ------------------------------------------------ fused vs legacy pipeline
+
+
+def test_fused_act_step_bit_exact_vs_legacy_accumulate():
+    """The ISSUE 2 pin: the fused donated act-step + device ring must
+    reproduce the legacy per-step-transfer + TrajectoryAccumulator path
+    bit-for-bit on HostPong — same actions, same trajectories."""
+    from repro import optim
+    from repro.agents.impala import ConvActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostPong
+
+    T, B = 6, 4
+    net = ConvActorCritic(
+        HostPong.num_actions, channels=(8,), blocks=1, hidden=32
+    )
+    cfg = SebulbaConfig(
+        num_actor_cores=1, threads_per_actor_core=1,
+        actor_batch_size=B, trajectory_length=T,
+    )
+    seb = Sebulba(
+        env_factory=lambda s: HostPong(seed=s),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=net, optimizer=optim.adam(1e-3), config=cfg,
+    )
+    params, _ = seb.init(jax.random.key(0), (16, 16, 1))
+    device = seb.split.actor_devices[0]
+    seed = 7
+
+    def run_legacy():
+        env = BatchedHostEnv(lambda i: HostPong(seed=seed * 10_000 + i), B)
+        inference = jax.jit(seb.agent.act)
+        obs = env.reset()
+        acc = TrajectoryAccumulator(T)
+        rng = jax.random.key(seed)
+        for _ in range(T):
+            rng, a_rng = jax.random.split(rng)
+            obs_dev = jax.device_put(obs, device)
+            actions, logp, extras = inference(params, obs_dev, a_rng)
+            next_obs, rewards, dones = env.step(np.asarray(actions))
+            discounts = (~dones).astype(np.float32) * cfg.discount
+            acc.add(
+                obs_dev, actions, jax.device_put(rewards, device),
+                jax.device_put(discounts, device), logp, extras,
+            )
+            obs = next_obs
+        return acc.drain(bootstrap_obs=jax.device_put(obs, device))
+
+    def run_fused():
+        env = BatchedHostEnv(lambda i: HostPong(seed=seed * 10_000 + i), B)
+        obs = env.reset()
+        rng = jax.device_put(jax.random.key(seed), device)
+        host_data = np.zeros((2, B), np.float32)
+        buf = None
+        for _ in range(T):
+            obs_dev = jax.device_put(obs, device)
+            hd_dev = jax.device_put(host_data, device)
+            if buf is None:
+                buf = seb._make_actor_buffer(params, obs_dev, device)
+            actions, buf, rng = seb._act_step(
+                params, buf, rng, obs_dev, hd_dev
+            )
+            next_obs, rewards, dones = env.step(np.asarray(actions))
+            host_data = np.stack(
+                [rewards, (~dones).astype(np.float32) * cfg.discount]
+            )
+            obs = next_obs
+        traj, _ = seb._drain(
+            buf, jax.device_put(host_data, device),
+            jax.device_put(obs, device),
+        )
+        return traj
+
+    legacy, fused = run_legacy(), run_fused()
+    for name, a, b in zip(legacy._fields, legacy, fused):
+        if name == "extras":
+            assert a == () and b == ()
+            continue
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                f"{name} diverged between fused and legacy pipelines"
+            )
