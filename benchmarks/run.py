@@ -9,6 +9,8 @@ Sections:
   * Fig. 4c  — MuZero FPS vs device count   (muzero_scaling)
   * §Anakin  — grid-world steps/sec single-device (the "5M steps/s on 8
     TPU cores" claim, CPU-scaled)
+  * suites   — replay / sebulba (actor pipeline) / learner (donated
+    update + publish throttling), each writing its BENCH_*.json
   * roofline — aggregated dry-run table, if experiments/dryrun exists
 
 ``python -m benchmarks.run --quick`` runs only the fast sections (used by
@@ -90,28 +92,41 @@ def _sebulba_suite(lines: list[str], include_e2e: bool = True) -> None:
     )
 
 
+def _learner_suite(lines: list[str]) -> None:
+    """--suite learner: donated/cached learner-update latency + publish
+    transfer counts -> BENCH_learner.json (the learner-pipeline perf
+    trajectory)."""
+    from benchmarks import learner_bench
+
+    _section(
+        "sebulba learner pipeline (donated vs legacy)",
+        lambda: learner_bench.main(json_path="BENCH_learner.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
-    ap.add_argument("--suite", choices=["all", "replay", "sebulba"],
+    ap.add_argument("--suite", choices=["all", "replay", "sebulba", "learner"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
-                         "BENCH_sebulba.json only (actor pipeline + e2e FPS)")
+                         "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
+                         "'learner' -> BENCH_learner.json only (donated "
+                         "learner update + publish throttling)")
     args = ap.parse_args()
 
     lines: list[str] = []
     print("name,us_per_call,derived")
 
-    if args.suite == "replay":
-        _replay_suite(lines)
-        print("# --- summary CSV ---")
-        for line in lines:
-            print(line)
-        return
-
-    if args.suite == "sebulba":
-        _sebulba_suite(lines)
+    suites = {
+        "replay": _replay_suite,
+        "sebulba": _sebulba_suite,
+        "learner": _learner_suite,
+    }
+    if args.suite in suites:
+        suites[args.suite](lines)
         print("# --- summary CSV ---")
         for line in lines:
             print(line)
@@ -135,6 +150,7 @@ def main() -> None:
         # keep the regression JSONs fresh on full runs, not just per-suite
         _replay_suite(lines)
         _sebulba_suite(lines)
+        _learner_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

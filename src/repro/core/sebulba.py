@@ -19,10 +19,19 @@ Reproduces the paper's dataflow exactly:
   * a single learner thread assembles the shards into one globally-sharded
     batch over the learner mesh and runs the same update on every learner
     core (shard_map), averaging gradients with jax.lax.pmean;
+  * the learner update is built once per trajectory shape and cached, with
+    params, opt_state, the incoming trajectory shards, and the on-device
+    metrics accumulator all donated — the steady-state learner loop is one
+    XLA dispatch per update that reuses its buffers in place and never
+    syncs device->host (metrics drain to host only on ``log_every``
+    boundaries);
   * after each update the learner publishes fresh parameters
     device-to-device to every actor core through a lock-free versioned
     params slot (device_put dispatches async, so the publish never blocks
     the learner); actor threads pick the slot up before their next step.
+    The publish is overlap-aware: a core that has not consumed its last
+    publish is skipped (``SebulbaConfig.publish_throttle``), so params
+    bytes only move when an actor will actually act on them.
 
 The V-trace (IMPALA) objective corrects for the actor/learner policy lag.
 ``learner_microbatches`` implements the paper's MuZero trick of splitting
@@ -85,6 +94,12 @@ class SebulbaConfig:
     clip_rho: float = 1.0
     clip_c: float = 1.0
     learner_microbatches: int = 1  # MuZero batch-splitting trick
+    # skip republishing params to an actor core whose previous publish is
+    # still unconsumed (the actor acts with the standing slot and the next
+    # publish lands instead) — fewer transfers at the cost of up to one
+    # actor-pickup interval of extra policy lag when the learner outpaces
+    # actors; V-trace absorbs the lag.  False -> publish every update.
+    publish_throttle: bool = True
     replay: ReplayConfig | None = None  # set -> off-policy (replay) mode
 
 
@@ -229,7 +244,13 @@ class Sebulba:
                     "loss aux is (metrics, td_priorities), which the "
                     "on-policy learner would mis-treat as the metrics dict"
                 )
-        self._update_off = None  # built lazily (needs trajectory structure)
+        # learner updates are built lazily (they need the trajectory
+        # structure), cached per trajectory shape, and donated end to end
+        self._update_cache: dict = {}
+        self._update_off = None
+        self._update_off_core = None
+        self._macc_spec = None  # metrics structure, captured at first update
+        self.update_traces = 0  # compile probe: jit traces once per compile
 
         # the fused actor hot path: one donated-jit program per env step
         # (buffer and rng donated -> in-place ring writes), one donated-jit
@@ -238,11 +259,6 @@ class Sebulba:
         self._drain = jax.jit(buffer_drain, donate_argnums=(0,))
         self._split_traj = jax.jit(
             lambda traj: split_for_learners(traj, self.L)
-        )
-        # replay mode never calls the on-policy update, and its agent's
-        # loss aux shape is incompatible with it — don't leave it loaded
-        self._update = (
-            jax.jit(self._build_update()) if config.replay is None else None
         )
 
         # host-side state shared between threads.  No locks on the hot path:
@@ -254,7 +270,20 @@ class Sebulba:
         self._param_slots: list[tuple[int, PyTree]] = (
             [(0, None)] * self.split.num_actors
         )
+        # last params version each actor core picked up (stamped by actor
+        # threads); drives the overlap-aware publish skip
+        self._slot_consumed: list[int] = [0] * self.split.num_actors
+        self.publishes_sent = 0
+        self.publishes_skipped = 0
+        # degenerate topology (e.g. single-device CPU): an actor core that
+        # is also a learner core shares buffers with the donated update —
+        # publishes to it need their own storage (see _publish_params)
+        self._shared_devices = frozenset(self.split.actor_devices) & frozenset(
+            self.split.learner_devices
+        )
         self._thread_frames: list[int] = [0] * num_threads
+        self._thread_put_blocked: list[int] = [0] * num_threads
+        self._thread_traj_dropped: list[int] = [0] * num_threads
         self._queue: queue.Queue = queue.Queue(maxsize=config.queue_capacity)
         self._stop = threading.Event()
         self._actor_errors: list[BaseException] = []
@@ -272,22 +301,51 @@ class Sebulba:
         replicated = NamedSharding(self.learner_mesh, P())
         params = jax.device_put(params, replicated)
         opt_state = jax.device_put(self.opt.init(params), replicated)
-        self._publish_params(params)
+        self._publish_params(params, force=True)
         return params, opt_state
 
-    def _publish_params(self, params: PyTree) -> None:
-        """Non-blocking device-to-device publish of fresh params.
+    def _publish_params(self, params: PyTree, force: bool = False) -> None:
+        """Overlap-aware, non-blocking device-to-device publish.
 
         ``device_put`` only *dispatches* the transfers; the learner thread
         never waits on them.  Each actor core has a versioned slot — a
         (version, params) tuple swapped in one atomic list assignment — so
-        actors always read a consistent pair without taking a lock on the
-        hot path.
+        actors always read a consistent pair without taking a lock, and the
+        versions any actor observes are monotone.
+
+        Publish throttling (``SebulbaConfig.publish_throttle``): a core
+        whose consumed stamp trails its slot version has not acted with the
+        previous publish yet, so re-publishing would replace params nobody
+        ever used — skip the transfer and let the slot stand.  The actor
+        consumes the standing slot, its stamp catches up, and the *next*
+        publish lands: at most one publish is in flight per core, and
+        staleness is bounded by one actor pickup interval.  Skips only
+        trigger when the learner outpaces actor pickup; in that regime the
+        standing slot can be up to updates-per-actor-step staler than
+        publish-every-update would leave it (the transfer saving and the
+        extra lag have the same source).  V-trace semantics are unaffected
+        either way — behaviour log-probs are recorded from whatever params
+        the actor actually used, and the learner's V-trace correction
+        absorbs this lag exactly as it absorbs queueing lag; set
+        ``publish_throttle=False`` if minimum policy lag matters more than
+        publish bandwidth.
         """
         self._params_version += 1
         version = self._params_version
+        throttle = self.cfg.publish_throttle and not force
         for i, dev in enumerate(self.split.actor_devices):
-            self._param_slots[i] = (version, jax.device_put(params, dev))
+            if throttle and self._slot_consumed[i] < self._param_slots[i][0]:
+                self.publishes_skipped += 1
+                continue
+            fresh = jax.device_put(params, dev)
+            if dev in self._shared_devices:
+                # device_put to the device params already live on returns a
+                # handle on the SAME buffers — buffers the donated learner
+                # update is about to consume.  Give the slot private storage
+                # so actors never read donated-away memory.
+                fresh = jax.tree.map(jnp.copy, fresh)
+            self._param_slots[i] = (version, fresh)
+            self.publishes_sent += 1
 
     # -------------------------------------------------------------- actor
 
@@ -336,9 +394,19 @@ class Sebulba:
         host_data = np.zeros((2, cfg.actor_batch_size), np.float32)
         buf = None
         t = 0  # host mirror of the ring cursor (control flow only, no sync)
+        last_version = 0
 
         while not self._stop.is_set():
-            _version, params = self._param_slots[core_id]
+            version, params = self._param_slots[core_id]
+            if version != last_version:
+                last_version = version
+                # stamp consumption so the learner's throttled publish knows
+                # this slot was picked up.  The racy read-modify-write across
+                # this core's threads is benign: a stale-low stamp lasts one
+                # env step at most (the thread re-reads the slot next loop)
+                # and only ever delays a publish, never loses one.
+                if self._slot_consumed[core_id] < version:
+                    self._slot_consumed[core_id] = version
             obs_dev = jax.device_put(obs, device)
             hd_dev = jax.device_put(host_data, device)
             if buf is None:
@@ -350,11 +418,8 @@ class Sebulba:
                 traj, buf = self._drain(buf, hd_dev, obs_dev)
                 t = 0
                 shards = self._shard_for_learners(traj)
-                try:
-                    self._queue.put(shards, timeout=5.0)
-                except queue.Full:
-                    if self._stop.is_set():
-                        return
+                if not self._queue_put(shards, thread_id):
+                    return  # stopping — the in-flight trajectory is dropped
             actions, buf, rng = self._act_step(
                 params, buf, rng, obs_dev, hd_dev
             )
@@ -373,6 +438,23 @@ class Sebulba:
             self._thread_frames[thread_id] += cfg.actor_batch_size
             obs = next_obs
             t += 1
+
+    def _queue_put(self, shards, thread_id: int) -> bool:
+        """Blocking put that never silently drops a trajectory.
+
+        Retries on a full queue (counting the blocked intervals so ``run``
+        can surface learner back-pressure) until the put lands or the
+        system is stopping; only a shutdown drops the trajectory, and that
+        drop is counted too.  Returns False when stopping.
+        """
+        while not self._stop.is_set():
+            try:
+                self._queue.put(shards, timeout=0.5)
+                return True
+            except queue.Full:
+                self._thread_put_blocked[thread_id] += 1
+        self._thread_traj_dropped[thread_id] += 1
+        return False
 
     def _shard_for_learners(self, traj: Trajectory):
         """Slice the completed trajectory on the actor core and send each
@@ -415,7 +497,12 @@ class Sebulba:
         params = optim.apply_updates(params, updates)
         return params, opt_state, aux
 
-    def _build_update(self):
+    def _build_update(self, example: Trajectory):
+        """The shard_map'd on-policy update core for trajectories shaped
+        like ``example``: (params, opt_state, traj) -> (params, opt_state,
+        metrics).  Un-jitted — ``_get_update`` wraps it with donation and
+        the metrics accumulator; keeping the core separate lets callers
+        ``jax.eval_shape`` the metrics structure without compiling."""
         cfg = self.cfg
 
         def shard_update(params, opt_state, traj):
@@ -442,25 +529,95 @@ class Sebulba:
                 )
             return params, opt_state, metrics
 
-        def update(params, opt_state, traj):
-            traj_spec = jax.tree.map(lambda _: P("batch"), traj)
-            fn = shard_map(
-                shard_update,
-                mesh=self.learner_mesh,
-                in_specs=(P(), P(), traj_spec),
-                out_specs=(P(), P(), P()),
-            )
-            return fn(params, opt_state, traj)
+        traj_spec = jax.tree.map(lambda _: P("batch"), example)
+        return shard_map(
+            shard_update,
+            mesh=self.learner_mesh,
+            in_specs=(P(), P(), traj_spec),
+            out_specs=(P(), P(), P()),
+        )
 
-        return update
+    @staticmethod
+    def _traj_key(traj: Trajectory):
+        return (
+            jax.tree.structure(traj),
+            tuple(
+                (tuple(leaf.shape), jnp.dtype(leaf.dtype).name)
+                for leaf in jax.tree.leaves(traj)
+            ),
+        )
+
+    def _get_update(self, traj: Trajectory):
+        """The donated, compile-cached on-policy update for this trajectory
+        shape -> (jitted update, core).
+
+        Built once per (structure, shapes, dtypes) key and jitted with
+        ``donate_argnums`` covering params, opt_state, the trajectory
+        shards (they alias the actor ring's D2D copies and are dead after
+        the grad step), and the metrics accumulator — the steady-state
+        learner update reuses all its buffers in place.
+        """
+        key = self._traj_key(traj)
+        entry = self._update_cache.get(key)
+        if entry is None:
+            core = self._build_update(traj)
+
+            def update(params, opt_state, traj, macc):
+                # trace-time side effect: jit traces exactly once per
+                # compile, so this counter is the tests' compile probe
+                self.update_traces += 1
+                params, opt_state, metrics = core(params, opt_state, traj)
+                return params, opt_state, self._macc_add(macc, metrics)
+
+            entry = (jax.jit(update, donate_argnums=(0, 1, 2, 3)), core)
+            self._update_cache[key] = entry
+        return entry
+
+    # --------------------------------------------- device-resident metrics
+
+    @staticmethod
+    def _macc_add(macc, metrics):
+        """Fold one update's metrics into the accumulator (traced inside
+        the donated update, so accumulation is in-place on device).  The
+        accumulator is ONE packed f32 vector — [count, *metric sums] — so
+        it adds a single leaf to the update's dispatch, not one per
+        metric."""
+        leaves = [x.astype(jnp.float32) for x in jax.tree.leaves(metrics)]
+        return macc + jnp.stack([jnp.float32(1.0), *leaves])
+
+    def _fresh_macc(self, metrics_spec=None) -> jax.Array:
+        """Zeroed device-resident metrics accumulator, replicated over the
+        learner mesh.  Every update folds its metrics into it on device;
+        the host reads (and therefore syncs on) it only at ``log_every``
+        boundaries — the steady-state learner loop never syncs."""
+        if metrics_spec is not None:
+            self._macc_spec = jax.tree.structure(metrics_spec)
+        zeros = jnp.zeros((1 + self._macc_spec.num_leaves,), jnp.float32)
+        return jax.device_put(
+            zeros, NamedSharding(self.learner_mesh, P())
+        )
+
+    def _drain_macc(self, macc) -> dict | None:
+        """Pull the accumulated metric means to host — the one
+        device->host sync, paid only on log boundaries.  None if nothing
+        has accumulated since the last drain."""
+        vals = np.asarray(macc)
+        if vals[0] == 0.0:
+            return None
+        return jax.tree.unflatten(
+            self._macc_spec, [float(v) / float(vals[0]) for v in vals[1:]]
+        )
 
     # ------------------------------------------------- learner (off-policy)
 
     def _build_offpolicy_update(self, example: Trajectory):
         """One fused device step: insert the online shard into the local
         replay ring, sample a replay shard, train on the concatenated mixed
-        batch with PER importance weights, write TD priorities back.  The
-        replay state is donated, so the ring never leaves the learner cores.
+        batch with PER importance weights, write TD priorities back.
+        Params, opt_state, the replay ring, and the metrics accumulator are
+        all donated, so the whole learner state updates in place and never
+        leaves the learner cores.  Returns (jitted update, core) — the core
+        exists so ``run`` can ``eval_shape`` the metrics structure.
         """
         cfg = self.cfg
         rcfg = cfg.replay
@@ -520,13 +677,21 @@ class Sebulba:
 
         rspec = self._replay.state_spec(example)
         tspec = self._replay.batch_spec(example)
-        fn = shard_map(
+        core = shard_map(
             shard_update,
             mesh=self.learner_mesh,
             in_specs=(P(), P(), rspec, tspec, P(), P()),
             out_specs=(P(), P(), rspec, P()),
         )
-        return jax.jit(fn, donate_argnums=2)
+
+        def update(params, opt_state, rstate, traj, macc, key, update_idx):
+            self.update_traces += 1  # compile probe (see _get_update)
+            params, opt_state, rstate, metrics = core(
+                params, opt_state, rstate, traj, key, update_idx
+            )
+            return params, opt_state, rstate, self._macc_add(macc, metrics)
+
+        return jax.jit(update, donate_argnums=(0, 1, 2, 4)), core
 
     # ----------------------------------------------------------------- run
 
@@ -554,7 +719,8 @@ class Sebulba:
                 tid += 1
 
         updates = 0
-        metrics = {}
+        last_metrics: dict = {}
+        macc = None  # device-resident metrics accumulator (init at 1st update)
         replay_state = None
         replay_warmed = False  # size() is monotone: check device once, latch
         replay_rng = jax.random.fold_in(rng, 0x5EB)  # decorrelate from init
@@ -566,13 +732,18 @@ class Sebulba:
                         "actor thread crashed"
                     ) from self._actor_errors[0]
                 try:
-                    shards = self._queue.get(timeout=10.0)
+                    # short poll: an actor crash mid-drain must surface at
+                    # the error check above within ~1 s, not after a long
+                    # blocking get
+                    shards = self._queue.get(timeout=1.0)
                 except queue.Empty:
                     continue
                 if self._replay is not None:
                     if replay_state is None:
                         replay_state = self._replay.init(shards)
-                        self._update_off = self._build_offpolicy_update(shards)
+                        self._update_off, self._update_off_core = (
+                            self._build_offpolicy_update(shards)
+                        )
                     if not replay_warmed:
                         # warmup: fill the ring before learning starts.  The
                         # size() read syncs device->host, so latch the result
@@ -585,18 +756,31 @@ class Sebulba:
                             continue
                         replay_warmed = True
                     key = jax.random.fold_in(replay_rng, updates)
-                    params, opt_state, replay_state, metrics = self._update_off(
-                        params, opt_state, replay_state, shards, key,
+                    if macc is None:
+                        macc = self._fresh_macc(jax.eval_shape(
+                            self._update_off_core, params, opt_state,
+                            replay_state, shards, key, jnp.int32(0),
+                        )[3])
+                    params, opt_state, replay_state, macc = self._update_off(
+                        params, opt_state, replay_state, shards, macc, key,
                         jnp.int32(updates),
                     )
                 else:
-                    params, opt_state, metrics = self._update(
-                        params, opt_state, shards
+                    update, core = self._get_update(shards)
+                    if macc is None:
+                        macc = self._fresh_macc(jax.eval_shape(
+                            core, params, opt_state, shards
+                        )[2])
+                    params, opt_state, macc = update(
+                        params, opt_state, shards, macc
                     )
                 self._publish_params(params)
                 updates += 1
                 if log_every and updates % log_every == 0:
-                    m = {k: float(v) for k, v in metrics.items()}
+                    m = self._drain_macc(macc)
+                    if m is not None:
+                        last_metrics = m
+                        macc = self._fresh_macc()
                     ret = (
                         np.mean(self.episode_returns)
                         if self.episode_returns else float("nan")
@@ -604,20 +788,33 @@ class Sebulba:
                     print(
                         f"update {updates} frames {self.frames} "
                         f"return {ret:.2f} " +
-                        " ".join(f"{k}={v:.3f}" for k, v in m.items())
+                        " ".join(
+                            f"{k}={v:.3f}" for k, v in last_metrics.items()
+                        )
                     )
         finally:
             self._stop.set()
             for t in threads:
                 t.join(timeout=10.0)
 
+        if macc is not None:
+            m = self._drain_macc(macc)
+            if m is not None:
+                last_metrics = m
         dt = time.time() - t0
         return {
             "params": params,
             "updates": updates,
-            # publish count actors observed via the versioned slots:
-            # init's publish + one per learner update
+            # logical publish version actors observe via the versioned
+            # slots: init's publish + one per learner update (throttled
+            # cores skip transfers, not versions)
             "param_version": self._params_version,
+            "publishes_sent": self.publishes_sent,
+            "publishes_skipped": self.publishes_skipped,
+            # learner back-pressure / shutdown accounting (satellite: the
+            # actor loop retries full-queue puts instead of dropping)
+            "put_blocked": sum(self._thread_put_blocked),
+            "traj_dropped": sum(self._thread_traj_dropped),
             "replay_size": (
                 self._replay.size(replay_state)
                 if self._replay is not None and replay_state is not None
@@ -630,5 +827,5 @@ class Sebulba:
                 float(np.mean(self.episode_returns))
                 if self.episode_returns else float("nan")
             ),
-            "metrics": {k: float(v) for k, v in metrics.items()},
+            "metrics": dict(last_metrics),
         }

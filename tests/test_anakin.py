@@ -60,3 +60,32 @@ def test_anakin_modes_agree_on_gradients():
 def test_anakin_steps_per_call_accounting():
     ank, _ = _make("jit", iterations=10)
     assert ank.steps_per_call == 10 * 9 * 32 * jax.device_count()
+
+
+@pytest.mark.parametrize("mode", ["shard_map", "jit"])
+def test_anakin_run_donates_state_in_place(mode):
+    """ISSUE 3: the compiled block donates AnakinState — the input state is
+    consumed and its storage reused (no double-buffering of params/
+    opt_state/env_state), and chaining the returned state keeps working."""
+    ank, state = _make(mode, iterations=2)
+    old_leaves = jax.tree.leaves(state)
+    ptrs = {l.unsafe_buffer_pointer() for l in old_leaves}
+    state2, _ = ank.run(state)
+    jax.block_until_ready(state2)
+    assert all(l.is_deleted() for l in old_leaves), (
+        "donated input state must be consumed"
+    )
+    new_ptrs = {l.unsafe_buffer_pointer() for l in jax.tree.leaves(state2)}
+    assert ptrs & new_ptrs, "donation should reuse state storage in place"
+    state3, m = ank.run(state2, num_calls=2)  # chaining still works
+    assert jnp.isfinite(m["loss"])
+
+
+def test_anakin_metrics_reduced_on_device():
+    """Per-call metrics come back as device scalars (reduced over the
+    compiled block's iterations inside the program, not stacked)."""
+    ank, state = _make("jit", iterations=4)
+    _, metrics = ank.run(state)
+    for k, v in metrics.items():
+        assert jnp.ndim(v) == 0, (k, v.shape)
+    assert float(metrics["episodes"]) >= 0.0

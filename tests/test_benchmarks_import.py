@@ -1,0 +1,23 @@
+"""Every benchmarks/*.py module must import cleanly (fast tier).
+
+The bench suites are invoked lazily (``benchmarks/run.py --suite ...``), so
+a broken import — a renamed Sebulba internal, a moved helper — would
+otherwise surface only when someone runs the benches.  Importing them all
+here makes suite regressions fail test collection instead.
+"""
+
+import importlib
+import pathlib
+
+import pytest
+
+_BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+_MODULES = sorted(
+    p.stem for p in _BENCH_DIR.glob("*.py") if not p.stem.startswith("_")
+) + ["_timing"]
+
+
+@pytest.mark.parametrize("name", _MODULES)
+def test_benchmark_module_imports(name):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    assert hasattr(mod, "main") or name == "_timing", name
