@@ -8,6 +8,12 @@ change (the paper's claim), and the per-device work stays constant.  On
 shared-CPU placeholders wall-clock FPS cannot exceed 1x, so we report both
 raw FPS and per-device efficiency; real-hardware scaling is projected in
 EXPERIMENTS.md from the collective-term roofline.
+
+Output: ``anakin_scale_<N>dev`` CSV lines (us/step + fps/efficiency in the
+derived column); no BENCH json — the scaling figure is a paper-shape
+check, not a regression trajectory.  Honest timing: each subprocess warms
+its compiled step before its timed window, so jit compile never lands in
+a measurement (the shared rule for every suite in this directory).
 """
 
 from __future__ import annotations

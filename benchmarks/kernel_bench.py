@@ -3,6 +3,11 @@
 Times the production non-TPU implementations (jnp chunked/associative/ref
 paths — the exact code the CPU backend executes and the TPU-kernel oracles).
 Pallas-interpret timings are not wall-clock meaningful and are excluded.
+
+Output: one ``<kernel>_<shape>`` CSV line per path; no BENCH json.  Honest
+timing: every path goes through ``_timing.time_call`` (explicit warmup
+calls, then median-of-iters with ``block_until_ready``), so jit compile
+and async dispatch never contaminate a sample.
 """
 
 from __future__ import annotations

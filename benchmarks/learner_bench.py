@@ -34,6 +34,23 @@ Two sections, written into ``BENCH_learner.json`` by
     is the regime a fast accelerator learner sits in (sub-ms updates,
     actors busy stepping envs); when actors consume every publish no skip
     triggers and both policies transfer identically.
+
+``BENCH_learner.json`` schema:
+
+    {"update": {"batch_<B>": {
+         "legacy_us_per_update", "legacy_updates_per_s",
+         "fused_us_per_update", "fused_updates_per_s", "speedup",
+         "update_in_place": bool, "legacy_alloc_bytes_per_update",
+         "fused_alloc_bytes_per_update", "actor_batch",
+         "trajectory_length", "updates_per_window"}},
+     "publish": {"actor_batch", "updates", "consume_every",
+                 "legacy_transfers", "legacy_skipped", "legacy_bytes",
+                 "throttled_transfers", "throttled_skipped",
+                 "throttled_bytes", "param_bytes", "transfer_ratio"}}
+
+(us/speedup fields are wall-clock and noisy on CPU; the ``*_alloc_bytes``
+/ ``update_in_place`` / transfer-count fields are deterministic and are
+the regression signal.)
 """
 
 from __future__ import annotations

@@ -4,6 +4,12 @@ The paper reports linear FPS scaling for search-based agents.  Points run
 in subprocesses with N placeholder devices, each with a fixed 1:3
 actor:learner core ratio; FPS trend across replicas is the reproduced
 quantity.
+
+Output: ``muzero_scale_<N>dev`` CSV lines; no BENCH json (paper-shape
+check, not a regression trajectory).  Honest timing: FPS is whole-run
+wall-clock over a fixed frame budget measured inside the subprocess, with
+the first trajectory's compile cost amortized by the budget — comparisons
+are valid across device counts because every point pays it identically.
 """
 
 from __future__ import annotations

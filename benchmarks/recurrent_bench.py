@@ -1,0 +1,155 @@
+"""Recurrent-learner benchmark: temporal-core choice and burn-in overhead.
+
+What it measures: the full R2D2 learner step (loss + grad through the
+recurrent unroll, jitted) at the B=4 and B=32 operating points, over
+
+  * **core** — ``rglru`` (the ``rglru_scan`` kernel wrapper; these
+    stored-state scans run the log-depth ``associative_scan`` + linear-
+    memory custom VJP on every backend, so the CPU timing here IS the
+    production schedule) vs ``lax`` (the sequential ``jax.lax.scan``
+    reference), same math, different schedule;
+  * **burn-in** — 0 vs K=5: stored-state refresh re-unrolls K steps
+    gradient-free before the V-trace loss, so its cost is the extra
+    forward-only prefix (the backward pass still covers only T-K steps).
+
+Honest-timing rules (shared by every suite in this directory): jit
+tracing/compilation is hoisted out of all timed windows (``time_call``
+warms up before timing), inputs are created outside the timed region, and
+every variant is timed by the same median-of-iters estimator.  Single-item
+wall-clock on this CPU container reflects XLA CPU scheduling, not
+accelerator behaviour — the cross-variant *ratios* are the signal.
+
+``benchmarks/run.py --suite recurrent`` (also part of ``--suite all`` full
+runs) writes ``BENCH_recurrent.json``:
+
+    {"batch_<B>": {
+        "rglru": {"burn0_us": float, "burnK_us": float,
+                   "burn_overhead": burnK_us / burn0_us},
+        "lax":   {... same ...},
+        "core_speedup_burn0": lax.burn0_us / rglru.burn0_us,
+        "burn_in": K, "trajectory_length": T, "rnn_width": W}, ...}
+
+CSV lines mirror the JSON (``recurrent_update_<core>_b<B>`` plus a
+``_burnK`` variant per core).
+
+Honest reading of the committed CPU run: ``burn_overhead`` < 1 — burn-in
+makes the update CHEAPER here, because the burn-in prefix is forward-only
+while the backward pass (the expensive autodiff through the scan) covers
+only the remaining T-K steps; and ``core_speedup_burn0`` ~0.84 — the
+sequential lax core beats the log-depth associative scan on CPU, where the
+scan's O(T log T) work costs more than its parallel depth saves (the
+associative core's log-depth win needs a parallel backend to show).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._timing import csv_line, time_call
+
+BATCHES = (4, 32)
+TRAJ = 20
+BURN = 5
+RNN_WIDTH = 64
+OBS = 16
+
+
+def _traj(batch: int, rnn_width: int, seed: int = 0):
+    from repro.data.trajectory import Trajectory
+
+    rng = np.random.RandomState(seed)
+    disc = (rng.rand(batch, TRAJ) > 0.1).astype(np.float32) * 0.99
+    return Trajectory(
+        obs=jnp.asarray(rng.rand(batch, TRAJ, OBS), jnp.float32),
+        actions=jnp.asarray(rng.randint(0, 4, (batch, TRAJ)), jnp.int32),
+        rewards=jnp.asarray(rng.rand(batch, TRAJ), jnp.float32),
+        discounts=jnp.asarray(disc),
+        behaviour_logp=jnp.asarray(
+            np.log(rng.uniform(0.2, 0.9, (batch, TRAJ))), jnp.float32
+        ),
+        bootstrap_obs=jnp.asarray(rng.rand(batch, OBS), jnp.float32),
+        init_carry=jnp.asarray(rng.rand(batch, rnn_width), jnp.float32),
+    )
+
+
+def bench_update(batch: int) -> dict:
+    """-> per-core {burn0_us, burnK_us, burn_overhead} + core speedup."""
+    from repro.agents.recurrent import (
+        RecurrentImpalaAgent,
+        RecurrentMLPActorCritic,
+    )
+    from repro.core.sebulba import SebulbaConfig
+
+    base_cfg = SebulbaConfig(
+        num_actor_cores=1, actor_batch_size=batch, trajectory_length=TRAJ
+    )
+    traj = _traj(batch, RNN_WIDTH)
+    out: dict = {
+        "burn_in": BURN, "trajectory_length": TRAJ, "rnn_width": RNN_WIDTH,
+    }
+    for core in ("rglru", "lax"):
+        net = RecurrentMLPActorCritic(
+            4, hidden=(64,), rnn_width=RNN_WIDTH, core=core
+        )
+        params = net.init(jax.random.key(0), (OBS,))
+        res = {}
+        for label, burn in (("burn0", 0), (f"burn{BURN}", BURN)):
+            agent = RecurrentImpalaAgent(
+                net, dataclasses.replace(base_cfg, burn_in=burn)
+            )
+            step = jax.jit(
+                lambda p, t, _agent=agent: jax.grad(
+                    lambda pp: _agent.loss(pp, t)[0]
+                )(p)
+            )
+            res[f"{label}_us"] = round(time_call(step, params, traj), 1)
+        res["burn_overhead"] = round(
+            res[f"burn{BURN}_us"] / res["burn0_us"], 3
+        )
+        out[core] = res
+    out["core_speedup_burn0"] = round(
+        out["lax"]["burn0_us"] / out["rglru"]["burn0_us"], 2
+    )
+    return out
+
+
+def main(json_path: str | None = None) -> list[str]:
+    results = {f"batch_{b}": bench_update(b) for b in BATCHES}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    lines = []
+    for key, r in results.items():
+        b = key.split("_")[1]
+        K = r["burn_in"]
+        for core in ("rglru", "lax"):
+            lines.append(csv_line(
+                f"recurrent_update_{core}_b{b}", r[core]["burn0_us"],
+                f"burn{K}_us={r[core][f'burn{K}_us']} "
+                f"overhead={r[core]['burn_overhead']}x",
+            ))
+        lines.append(csv_line(
+            f"recurrent_core_speedup_b{b}", 0.0,
+            f"lax/rglru={r['core_speedup_burn0']}x",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_recurrent.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(
+        json_path="BENCH_recurrent.json" if args.json else None
+    ):
+        print(line)
+    if args.json:
+        print("wrote BENCH_recurrent.json")

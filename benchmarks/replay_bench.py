@@ -1,11 +1,21 @@
 """Replay-ring throughput: insert + sample rates vs buffer capacity.
 
-Measures the device-resident paths (donated-jit insert, categorical
+Measures the device-resident paths (donated-jit insert, inverse-CDF
 sample) on trajectory slots shaped like the Sebulba HostPong workload
 (T=20 steps of 16x16x1 frames, ~20KB/slot).  Reported as microseconds per
 call and slots/second; ``--json`` (or ``benchmarks/run.py --suite replay``)
-additionally writes ``BENCH_replay.json`` so future PRs can regress against
-the trajectory.
+additionally writes ``BENCH_replay.json`` so future PRs can regress
+against the trajectory.
+
+``BENCH_replay.json`` schema — one entry per ring capacity:
+
+    {"<capacity>": {"insert_us": float, "sample_us": float,
+                    "insert_slots_per_s": int, "sample_slots_per_s": int}}
+
+Honest timing: both paths run through ``_timing.time_call`` (warmup calls
+hoist jit compile out of the timed window, median-of-iters with
+``block_until_ready``); the insert path re-creates its donated state
+OUTSIDE the timed region so donation churn is never billed to the op.
 """
 
 from __future__ import annotations

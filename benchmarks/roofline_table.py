@@ -1,4 +1,12 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table."""
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table.
+
+Reads ``experiments/dryrun/*.json`` artifacts (written by
+``repro.launch.dryrun``) and prints the analytic roofline table — no
+timing happens here at all, so the honest-timing rules are trivially met:
+every number is a deterministic function of the arch configs.  No BENCH
+json; ``benchmarks/run.py`` appends the table to full runs when dry-run
+artifacts exist.
+"""
 
 from __future__ import annotations
 

@@ -10,7 +10,9 @@ Sections:
   * §Anakin  — grid-world steps/sec single-device (the "5M steps/s on 8
     TPU cores" claim, CPU-scaled)
   * suites   — replay / sebulba (actor pipeline) / learner (donated
-    update + publish throttling), each writing its BENCH_*.json
+    update + publish throttling) / recurrent (R2D2 temporal core +
+    burn-in), each writing its BENCH_*.json (schema documented in each
+    suite module's docstring, honest-timing rules included)
   * roofline — aggregated dry-run table, if experiments/dryrun exists
 
 ``python -m benchmarks.run --quick`` runs only the fast sections (used by
@@ -105,16 +107,32 @@ def _learner_suite(lines: list[str]) -> None:
     )
 
 
+def _recurrent_suite(lines: list[str]) -> None:
+    """--suite recurrent: R2D2 learner step — rglru-kernel vs lax-scan
+    temporal core, burn-in 0 vs K overhead -> BENCH_recurrent.json (the
+    recurrent-agent perf trajectory)."""
+    from benchmarks import recurrent_bench
+
+    _section(
+        "recurrent learner (rglru vs lax core, burn-in overhead)",
+        lambda: recurrent_bench.main(json_path="BENCH_recurrent.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
-    ap.add_argument("--suite", choices=["all", "replay", "sebulba", "learner"],
+    ap.add_argument("--suite",
+                    choices=["all", "replay", "sebulba", "learner",
+                             "recurrent"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
                          "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
                          "'learner' -> BENCH_learner.json only (donated "
-                         "learner update + publish throttling)")
+                         "learner update + publish throttling); 'recurrent' "
+                         "-> BENCH_recurrent.json only (R2D2 core + burn-in)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -124,6 +142,7 @@ def main() -> None:
         "replay": _replay_suite,
         "sebulba": _sebulba_suite,
         "learner": _learner_suite,
+        "recurrent": _recurrent_suite,
     }
     if args.suite in suites:
         suites[args.suite](lines)
@@ -151,6 +170,7 @@ def main() -> None:
         _replay_suite(lines)
         _sebulba_suite(lines)
         _learner_suite(lines)
+        _recurrent_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

@@ -4,6 +4,13 @@ The paper scales actor batch 32 -> 128 on an 8-core TPU and reaches 200K
 FPS.  Here the same sweep runs on 8 placeholder CPU devices (2 actor + 6
 learner cores) at reduced batches; the figure of merit is the TREND (bigger
 actor batches amortize per-step host/device overhead), which reproduces.
+
+Output: ``sebulba_batch_<B>`` CSV lines; ``measure(batch, frames)`` is also
+the end-to-end FPS point ``--suite sebulba`` records in
+``BENCH_sebulba.json`` (key ``e2e``).  Honest timing: FPS is whole-run
+wall-clock over a fixed frame budget in a fresh subprocess — compile cost
+is inside the budget but identical across batch points, so the trend is
+compile-neutral.
 """
 
 from __future__ import annotations

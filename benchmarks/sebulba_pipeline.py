@@ -19,6 +19,19 @@ placeholder devices, 2 actor + 6 learner cores) for a whole-system FPS
 figure.  ``benchmarks/run.py --suite sebulba`` writes both into
 ``BENCH_sebulba.json``, the trajectory future actor-pipeline PRs regress
 against.
+
+``BENCH_sebulba.json`` schema:
+
+    {"actor_loop": {"batch_<B>": {
+         "legacy_us_per_step", "legacy_steps_per_s", "legacy_fps",
+         "fused_us_per_step", "fused_steps_per_s", "fused_fps",
+         "speedup", "actor_batch", "trajectory_length"}},
+     "e2e": {"fps", "actor_batch", "frames"}}
+
+Honest timing: both loops are warmed for a full trajectory + drain before
+their timed windows (jit compile and the first-shard transfer never land
+in a measurement), each window is best-of-3, and both variants pay the
+same drain+shard cycles per window.
 """
 
 from __future__ import annotations
@@ -100,7 +113,9 @@ def _run_fused(seb, params, env, device, steps: int) -> float:
             t = 0
             shards = seb._shard_for_learners(traj)
             jax.block_until_ready(shards.actions)
-        actions, buf, rng = seb._act_step(params, buf, rng, obs_dev, hd_dev)
+        actions, buf, rng, _ = seb._act_step(
+            params, buf, rng, obs_dev, hd_dev, ()
+        )
         obs, rewards, dones = env.step(np.asarray(actions))
         host_data = np.stack(
             [rewards, (~dones).astype(np.float32) * cfg.discount]

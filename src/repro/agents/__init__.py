@@ -3,4 +3,10 @@ from repro.agents.actor_critic import (  # noqa: F401
     MLPActorCritic,
 )
 from repro.agents.impala import ConvActorCritic  # noqa: F401
+from repro.agents.recurrent import (  # noqa: F401
+    RecurrentConvActorCritic,
+    RecurrentImpalaAgent,
+    RecurrentMLPActorCritic,
+    RecurrentReplayImpalaAgent,
+)
 from repro.agents.replay_impala import ReplayImpalaAgent  # noqa: F401

@@ -8,7 +8,6 @@ experiments scale channels/blocks, which `channels`/`blocks` expose.
 
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
 import jax
@@ -27,6 +26,54 @@ def _conv(params, x: jax.Array, stride: int = 1) -> jax.Array:
     )
 
 
+def init_conv_torso(
+    b: ParamBuilder, obs_shape: tuple[int, ...],
+    channels: Sequence[int], blocks: int, hidden: int,
+) -> None:
+    """Residual conv stack + trunk params (the IMPALA "shallow" torso).
+
+    Shared by the feed-forward ``ConvActorCritic`` and the recurrent net
+    (repro/agents/recurrent.py), which mounts an RG-LRU core on the trunk
+    features instead of heads directly.
+    """
+    h, w, c = obs_shape
+    for i, ch in enumerate(channels):
+        with b.scope(f"conv_{i}"):
+            b.param("w", (3, 3, c, ch), (None,) * 4, fan_in_init())
+            b.param("b", (ch,), (None,), zeros_init())
+        for j in range(blocks):
+            for k in (0, 1):
+                with b.scope(f"res_{i}_{j}_{k}"):
+                    b.param("w", (3, 3, ch, ch), (None,) * 4, fan_in_init())
+                    b.param("b", (ch,), (None,), zeros_init())
+        c = ch
+        h, w = -(-h // 2), -(-w // 2)
+    flat = h * w * c
+    with b.scope("trunk"):
+        b.param("w", (flat, hidden), (None, None), fan_in_init())
+        b.param("b", (hidden,), (None,), zeros_init())
+
+
+def apply_conv_torso(
+    params, obs: jax.Array, channels: Sequence[int], blocks: int
+) -> jax.Array:
+    """obs (B, H, W, C) -> trunk features (B, hidden)."""
+    x = obs
+    for i, ch in enumerate(channels):
+        x = _conv(params[f"conv_{i}"], x, stride=1)
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+        for j in range(blocks):
+            y = jax.nn.relu(x)
+            y = _conv(params[f"res_{i}_{j}_0"], y)
+            y = jax.nn.relu(y)
+            y = _conv(params[f"res_{i}_{j}_1"], y)
+            x = x + y
+    x = jax.nn.relu(x).reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ params["trunk"]["w"] + params["trunk"]["b"])
+
+
 class ConvActorCritic:
     def __init__(self, num_actions: int, channels: Sequence[int] = (16, 32),
                  blocks: int = 1, hidden: int = 256):
@@ -37,22 +84,7 @@ class ConvActorCritic:
 
     def init(self, rng: jax.Array, obs_shape: tuple[int, ...]):
         b = ParamBuilder(rng, dtype=jnp.float32)
-        h, w, c = obs_shape
-        for i, ch in enumerate(self.channels):
-            with b.scope(f"conv_{i}"):
-                b.param("w", (3, 3, c, ch), (None,) * 4, fan_in_init())
-                b.param("b", (ch,), (None,), zeros_init())
-            for j in range(self.blocks):
-                for k in (0, 1):
-                    with b.scope(f"res_{i}_{j}_{k}"):
-                        b.param("w", (3, 3, ch, ch), (None,) * 4, fan_in_init())
-                        b.param("b", (ch,), (None,), zeros_init())
-            c = ch
-            h, w = -(-h // 2), -(-w // 2)
-        flat = h * w * c
-        with b.scope("trunk"):
-            b.param("w", (flat, self.hidden), (None, None), fan_in_init())
-            b.param("b", (self.hidden,), (None,), zeros_init())
+        init_conv_torso(b, obs_shape, self.channels, self.blocks, self.hidden)
         with b.scope("policy"):
             b.param("w", (self.hidden, self.num_actions), (None, None),
                     fan_in_init(0.01))
@@ -65,20 +97,7 @@ class ConvActorCritic:
 
     def apply(self, params, obs: jax.Array):
         """obs (B, H, W, C) -> (logits (B, A), values (B,))."""
-        x = obs
-        for i, ch in enumerate(self.channels):
-            x = _conv(params[f"conv_{i}"], x, stride=1)
-            x = jax.lax.reduce_window(
-                x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
-            )
-            for j in range(self.blocks):
-                y = jax.nn.relu(x)
-                y = _conv(params[f"res_{i}_{j}_0"], y)
-                y = jax.nn.relu(y)
-                y = _conv(params[f"res_{i}_{j}_1"], y)
-                x = x + y
-        x = jax.nn.relu(x).reshape(x.shape[0], -1)
-        x = jax.nn.relu(x @ params["trunk"]["w"] + params["trunk"]["b"])
+        x = apply_conv_torso(params, obs, self.channels, self.blocks)
         logits = x @ params["policy"]["w"] + params["policy"]["b"]
         values = (x @ params["value"]["w"] + params["value"]["b"])[:, 0]
         return logits, values

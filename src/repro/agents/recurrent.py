@@ -1,0 +1,349 @@
+"""R2D2-style recurrent agents for Sebulba (Kapturowski et al. 2019).
+
+The temporal core is the RG-LRU recurrence (Griffin, arXiv:2402.19427),
+driven through the existing ``rglru_scan`` kernel wrapper
+(repro/kernels/rglru_scan/).  Stored-state scans — every training unroll
+here passes the recorded carry as h0 — take the log-depth
+``jax.lax.associative_scan`` path with its linear-memory custom VJP on
+every backend; acting is a single ``rglru_step_ref`` step.  (The Pallas
+TPU kernel starts from zero state and keeps serving griffin's prefill —
+no R2D2 path reaches it.)  ``core="lax"`` swaps in the sequential
+``jax.lax.scan`` oracle (``rglru_scan_ref``) as a pure-lax reference —
+same math, linear depth; benchmarks/recurrent_bench.py compares the two.
+
+Three pieces of R2D2 live here; the plumbing they need is in
+``repro/core/sebulba.py`` and ``repro/data/trajectory.py``:
+
+  * **stored state** — ``act`` threads an (B, W) carry through Sebulba's
+    fused act-step; the carry entering step 0 of each trajectory slice is
+    recorded as ``Trajectory.init_carry`` and travels through the learner
+    shards and the replay ring, so replayed sequences unroll from the state
+    the actor actually had (vs zero-state, which Kapturowski et al. show
+    mis-trains the early steps of every sequence);
+  * **episode-boundary resets** — inside a trajectory the learner re-derives
+    the actor's resets from the discount channel (discount == 0 marks a
+    terminal), folding them into the RG-LRU decay gate: ``a_t := 0`` cuts
+    the ``h_{t-1}`` term, and the original ``beta = sqrt(1 - a^2)`` input
+    scale is folded into the input so the driven term is unchanged — one
+    masked scan instead of a per-step ``lax.cond``;
+  * **burn-in** — ``SebulbaConfig.burn_in = K`` unrolls the first K steps
+    from the stored state WITHOUT gradient (the stored state is stale: it
+    was recorded under older params), then trains the V-trace loss on the
+    remaining T-K steps from the refreshed carry.  Gradients w.r.t. the
+    burn-in window are exactly zero.
+
+Agent protocol (what Sebulba keys on): ``initial_carry(batch)`` marks an
+agent as recurrent, ``act(params, obs, rng, carry)`` returns a 4-tuple
+ending in the new carry.  Feed-forward agents keep the 3-arg protocol and
+are untouched.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.impala import apply_conv_torso, init_conv_torso
+from repro.core.sebulba import ImpalaAgent
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref, rglru_step_ref
+from repro.param import ParamBuilder, constant_init, fan_in_init, zeros_init
+from repro.rl import losses
+
+# Griffin's decay parametrization: a = exp(-c * softplus(lam) * r_t)
+RGLRU_C = 8.0
+
+CORES = ("rglru", "lax")
+
+
+class _RecurrentActorCritic:
+    """Torso -> RG-LRU temporal core -> policy/value heads.
+
+    Subclasses supply the observation torso (conv for frames, MLP for
+    vector obs) via ``_init_torso`` / ``_torso`` and set ``feat_dim``.
+    The heads read the concatenation [torso features, recurrent state], so
+    the policy keeps a direct (memoryless) path to the current observation
+    while the RG-LRU contributes history.
+
+    All recurrent-core math runs in float32 — the carry is (B, W) float32
+    and bit-stable across the act / store / replay round trip.
+    """
+
+    feat_dim: int  # set by subclasses
+
+    def __init__(self, num_actions: int, rnn_width: int, core: str):
+        if core not in CORES:
+            raise ValueError(f"core must be one of {CORES}, got {core!r}")
+        self.num_actions = num_actions
+        self.rnn_width = rnn_width
+        self.core = core
+
+    # -- torso hooks (subclasses) ---------------------------------------
+
+    def _init_torso(self, b: ParamBuilder, obs_shape) -> None:
+        raise NotImplementedError
+
+    def _torso(self, params, obs: jax.Array) -> jax.Array:
+        """obs (B, ...) -> features (B, feat_dim)."""
+        raise NotImplementedError
+
+    # -- params ----------------------------------------------------------
+
+    def init(self, rng: jax.Array, obs_shape: tuple[int, ...]):
+        b = ParamBuilder(rng, dtype=jnp.float32)
+        self._init_torso(b, obs_shape)
+        F, W = self.feat_dim, self.rnn_width
+        with b.scope("rnn_in"):
+            b.param("w", (F, W), (None, None), fan_in_init())
+            b.param("b", (W,), (None,), zeros_init())
+        with b.scope("rglru"):
+            b.param("w_a", (W, W), (None, None), fan_in_init())
+            b.param("b_a", (W,), (None,), zeros_init())
+            b.param("w_x", (W, W), (None, None), fan_in_init())
+            b.param("b_x", (W,), (None,), zeros_init())
+            # softplus(0.7) * 8 ≈ 9 -> a^(1/8) in the paper's U[0.9, 0.999]
+            # ballpark at r = 1 (same init as models/griffin.py)
+            b.param("lam", (W,), (None,), constant_init(0.7))
+        with b.scope("policy"):
+            b.param("w", (F + W, self.num_actions), (None, None),
+                    fan_in_init(0.01))
+            b.param("b", (self.num_actions,), (None,), zeros_init())
+        with b.scope("value"):
+            b.param("w", (F + W, 1), (None, None), fan_in_init())
+            b.param("b", (1,), (None,), zeros_init())
+        params, _ = b.build()
+        return params
+
+    # -- recurrent core --------------------------------------------------
+
+    def initial_state(self, batch: int) -> jax.Array:
+        """Always zeros — NOT an override point: the learner-side episode
+        reset is the decay-gate fold in ``apply_seq``, which restores zero
+        state by construction, and Sebulba rejects nonzero initial carries
+        at construction so the two reset paths cannot diverge."""
+        return jnp.zeros((batch, self.rnn_width), jnp.float32)
+
+    def _gates(self, params, u: jax.Array):
+        """u (..., W) -> (decay a, input gate i), float32 (Griffin eqs)."""
+        p = params["rglru"]
+        uf = u.astype(jnp.float32)
+        r = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+        gi = jax.nn.sigmoid(uf @ p["w_x"] + p["b_x"])
+        a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"]) * r)
+        return a, gi
+
+    def _heads(self, params, feat: jax.Array, y: jax.Array):
+        out = jnp.concatenate([feat, y], axis=-1)
+        logits = out @ params["policy"]["w"] + params["policy"]["b"]
+        values = (out @ params["value"]["w"] + params["value"]["b"])[..., 0]
+        return logits, values
+
+    def apply_step(self, params, obs, carry: jax.Array):
+        """One acting step: obs (B, ...), carry (B, W) ->
+        (logits (B, A), values (B,), new carry (B, W))."""
+        feat = self._torso(params, obs)
+        u = feat @ params["rnn_in"]["w"] + params["rnn_in"]["b"]
+        a, gi = self._gates(params, u)
+        y, h_new = rglru_step_ref(carry, u, a, gi)
+        logits, values = self._heads(params, feat, y)
+        return logits, values, h_new
+
+    def apply_seq(self, params, obs, carry: jax.Array, reset: jax.Array):
+        """Unroll a trajectory window: obs (B, T, ...), carry (B, W),
+        reset (B, T) bool -> (logits (B, T, A), values (B, T), carry_T).
+
+        ``reset[:, t]`` marks rows whose episode closed at step t-1; those
+        rows restart the recurrence from zero state at step t, matching
+        the actor's per-step reset.  The reset is folded into the scan
+        inputs (decay masked to 0, beta compensation on the input) so both
+        cores stay single fused scans with no per-step control flow.
+        """
+        B, T = reset.shape
+        obs_flat = jax.tree.map(
+            lambda o: o.reshape((B * T,) + o.shape[2:]), obs
+        )
+        feat = self._torso(params, obs_flat).reshape(B, T, self.feat_dim)
+        u = feat @ params["rnn_in"]["w"] + params["rnn_in"]["b"]
+        a, gi = self._gates(params, u)
+        # a_t := 0 cuts h_{t-1}; the kernel would then use beta = 1, so the
+        # original beta folds into the input:  h_t = i_t * (u_t * beta) —
+        # exactly the zero-carry step the actor takes after a done.
+        rm = reset[..., None]
+        beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0))
+        x_eff = jnp.where(rm, u * beta, u)
+        a_eff = jnp.where(rm, 0.0, a)
+        scan = rglru_scan if self.core == "rglru" else rglru_scan_ref
+        y, h_last = scan(x_eff, a_eff, gi, carry)
+        logits, values = self._heads(params, feat, y)
+        return logits, values, h_last
+
+
+class RecurrentConvActorCritic(_RecurrentActorCritic):
+    """Frame-observation recurrent net: IMPALA conv torso + RG-LRU core."""
+
+    def __init__(self, num_actions: int, channels: Sequence[int] = (16, 32),
+                 blocks: int = 1, hidden: int = 256, rnn_width: int = 128,
+                 core: str = "rglru"):
+        super().__init__(num_actions, rnn_width, core)
+        self.channels = tuple(channels)
+        self.blocks = blocks
+        self.hidden = hidden
+        self.feat_dim = hidden
+
+    def _init_torso(self, b, obs_shape) -> None:
+        init_conv_torso(b, obs_shape, self.channels, self.blocks, self.hidden)
+
+    def _torso(self, params, obs):
+        return apply_conv_torso(params, obs, self.channels, self.blocks)
+
+
+class RecurrentMLPActorCritic(_RecurrentActorCritic):
+    """Vector-observation recurrent net (HostBandit-scale tests/benches)."""
+
+    def __init__(self, num_actions: int, hidden: Sequence[int] = (32,),
+                 rnn_width: int = 16, core: str = "rglru"):
+        super().__init__(num_actions, rnn_width, core)
+        self.hidden = tuple(hidden)
+        self.feat_dim = self.hidden[-1]
+
+    def _init_torso(self, b, obs_shape) -> None:
+        in_dim = math.prod(obs_shape)
+        for i, h in enumerate(self.hidden):
+            with b.scope(f"dense_{i}"):
+                b.param("w", (in_dim, h), (None, None), fan_in_init())
+                b.param("b", (h,), (None,), zeros_init())
+            in_dim = h
+
+    def _torso(self, params, obs):
+        x = obs.reshape(obs.shape[0], -1)
+        for i in range(len(self.hidden)):
+            p = params[f"dense_{i}"]
+            x = jax.nn.relu(x @ p["w"] + p["b"])
+        return x
+
+
+class RecurrentImpalaAgent:
+    """On-policy recurrent Sebulba agent (stored state + burn-in V-trace).
+
+    ``network`` is a ``_RecurrentActorCritic``; ``config`` a
+    ``SebulbaConfig`` (``burn_in`` selects the gradient-free prefix).
+    """
+
+    def __init__(self, network: _RecurrentActorCritic, config):
+        self.net = network
+        self.cfg = config
+
+    def init(self, rng, obs_shape):
+        return self.net.init(rng, obs_shape)
+
+    def initial_carry(self, batch_size: int):
+        """Zeroed RG-LRU state — the marker Sebulba's carry protocol keys
+        on.  Episode-boundary resets restore exactly this value."""
+        return self.net.initial_state(batch_size)
+
+    def act(self, params, obs, rng, carry):
+        """(params, obs (B, ...), rng, carry (B, W)) -> (actions, log-prob,
+        extras, new carry).  Traced inside Sebulba's fused donated
+        act-step; the carry it receives is already episode-reset."""
+        logits, _, carry = self.net.apply_step(params, obs, carry)
+        actions = jax.random.categorical(rng, logits)
+        logp = losses.log_prob(logits, actions)
+        return actions, logp, (), carry
+
+    @staticmethod
+    def _reset_mask(discounts: jax.Array) -> jax.Array:
+        """(B, T) discounts -> (B, T) bool: reset BEFORE step t iff the
+        episode closed at t-1.  Step 0's boundary is already baked into
+        ``init_carry`` (the actor stores the post-reset carry), so column
+        0 is always False."""
+        return jnp.concatenate(
+            [
+                jnp.zeros_like(discounts[:, :1], jnp.bool_),
+                discounts[:, :-1] == 0.0,
+            ],
+            axis=1,
+        )
+
+    def _unroll(self, params, traj):
+        """Stored-state + burn-in unroll over a trajectory batch ->
+        (logits, values, bootstrap values) for the trained window [K:].
+
+        The burn-in prefix runs from ``traj.init_carry`` with the same
+        resets the actor applied, but its only output is the refreshed
+        carry, cut from the gradient tape — grads w.r.t. burn-in steps are
+        exactly zero, and the V-trace loss sees T - K steps.
+        """
+        K = self.cfg.burn_in
+        reset = self._reset_mask(traj.discounts)
+        carry = traj.init_carry
+        if K:
+            burn_obs = jax.tree.map(lambda o: o[:, :K], traj.obs)
+            _, _, carry = self.net.apply_seq(
+                params, burn_obs, carry, reset[:, :K]
+            )
+            carry = jax.lax.stop_gradient(carry)
+        obs = jax.tree.map(lambda o: o[:, K:], traj.obs)
+        logits, values, carry_last = self.net.apply_seq(
+            params, obs, carry, reset[:, K:]
+        )
+        # bootstrap_obs is the first obs of a fresh episode when the final
+        # step was terminal — value it from a reset carry, as the actor
+        # would.  (V-trace multiplies it by that zero discount anyway; the
+        # reset just keeps the value finite and semantically right.)
+        ended = (traj.discounts[:, -1] == 0.0)[:, None]
+        boot_carry = jnp.where(ended, 0.0, carry_last)
+        _, bootstrap, _ = self.net.apply_step(
+            params, traj.bootstrap_obs, boot_carry
+        )
+        return logits, values, bootstrap
+
+    def _loss_window(self, traj):
+        K = self.cfg.burn_in
+        return (
+            traj.actions[:, K:], traj.behaviour_logp[:, K:],
+            traj.rewards[:, K:], traj.discounts[:, K:],
+        )
+
+    # same learner metrics dict as the feed-forward agent — shared so the
+    # packed on-device accumulator layout cannot silently diverge
+    _metrics = staticmethod(ImpalaAgent._metrics)
+
+    def loss(self, params, traj):
+        cfg = self.cfg
+        logits, values, bootstrap = self._unroll(params, traj)
+        actions, blogp, rewards, discounts = self._loss_window(traj)
+        out = losses.impala_loss(
+            logits, values, actions, blogp, rewards, discounts, bootstrap,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+            clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
+        )
+        return out.total, self._metrics(out)
+
+
+class RecurrentReplayImpalaAgent(RecurrentImpalaAgent):
+    """Off-policy (replay) recurrent agent — true R2D2 on Sebulba.
+
+    Same actor as ``RecurrentImpalaAgent``; the learner protocol is the
+    replay one (``loss(params, traj, weights) -> (total, (metrics,
+    per_seq_td))``): PER importance weights correct the sampling bias,
+    V-trace the policy lag, and the per-sequence TD magnitudes (computed
+    over the post-burn-in window only — burn-in steps are state refresh,
+    not training signal) go back into the ring as fresh priorities.
+    """
+
+    replay_protocol = True  # see ReplayImpalaAgent: aux = (metrics, td)
+
+    def loss(self, params, traj, weights=None):
+        cfg = self.cfg
+        logits, values, bootstrap = self._unroll(params, traj)
+        actions, blogp, rewards, discounts = self._loss_window(traj)
+        out = losses.weighted_impala_loss(
+            logits, values, actions, blogp, rewards, discounts, bootstrap,
+            importance_weights=weights,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+            clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
+        )
+        return out.total, (self._metrics(out), out.per_seq_td)

@@ -20,6 +20,12 @@ from repro.rl import losses
 
 
 class ReplayImpalaAgent(ImpalaAgent):
+    # loss aux is (metrics, per_seq_priorities) — only Sebulba's replay
+    # mode understands it; the on-policy learner guard keys on this marker
+    # (an isinstance check would miss the recurrent replay agent, which
+    # shares the protocol but not this base class)
+    replay_protocol = True
+
     def loss(self, params, traj, weights=None):
         cfg = self.cfg
         logits, values, bootstrap = self._forward(params, traj)

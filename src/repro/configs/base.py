@@ -176,6 +176,13 @@ class ReplayConfig:
     ``importance_exponent`` to 1.0 (full bias correction) over that many
     learner updates, computed on device inside the fused off-policy step
     (``importance_beta``); 0 keeps beta fixed.
+
+    Recurrent agents (R2D2): no extra replay config is needed — the
+    per-sequence stored state (``Trajectory.init_carry``) is an ordinary
+    trajectory leaf, so each ring slot carries it automatically and
+    sampled sequences replay from the actor's recorded state; burn-in is
+    the learner-side ``SebulbaConfig.burn_in`` (see ARCHITECTURE.md
+    §Recurrent agents).
     """
 
     capacity: int = 4096  # trajectory slots across all learner shards

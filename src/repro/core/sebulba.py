@@ -46,6 +46,17 @@ fresh online shard concatenated with trajectories sampled from replay —
 inside one fused ``shard_map`` step: insert -> sample -> weighted V-trace
 update -> priority write-back, with the ring buffers donated so nothing
 round-trips through the host.
+
+Recurrent agents (R2D2, repro/agents/recurrent.py): an agent that exposes
+``initial_carry(batch)`` and ``act(params, obs, rng, carry)`` gets its
+recurrent state threaded through the fused act-step (donated, reset on
+episode boundaries via the discount channel), the carry entering step 0 of
+each trajectory slice stored alongside it (``Trajectory.init_carry`` — the
+R2D2 "stored state", which rides the replay ring like any other leaf), and
+a learner-side burn-in (``SebulbaConfig.burn_in``) that re-unrolls the
+first K steps gradient-free to refresh the stale stored state before the
+V-trace loss.  Feed-forward agents keep the 3-arg ``act`` and an empty ()
+carry — zero extra leaves, bit-identical programs.  See ARCHITECTURE.md.
 """
 
 from __future__ import annotations
@@ -100,6 +111,12 @@ class SebulbaConfig:
     # actor-pickup interval of extra policy lag when the learner outpaces
     # actors; V-trace absorbs the lag.  False -> publish every update.
     publish_throttle: bool = True
+    # recurrent agents only (R2D2, Kapturowski et al. 2019): unroll the
+    # first ``burn_in`` steps of every trajectory with the stored carry but
+    # WITHOUT gradient, refreshing the (stale, recorded-under-old-params)
+    # state before the V-trace loss runs on the remaining steps.  Happens
+    # inside the agent loss, i.e. inside the compile-cached donated update.
+    burn_in: int = 0
     replay: ReplayConfig | None = None  # set -> off-policy (replay) mode
 
 
@@ -235,14 +252,79 @@ class Sebulba:
                 prioritized=rcfg.prioritized,
                 priority_exponent=rcfg.priority_exponent,
             )
-        else:
-            from repro.agents.replay_impala import ReplayImpalaAgent
+        elif getattr(self.agent, "replay_protocol", False):
+            raise ValueError(
+                f"{type(self.agent).__name__} requires SebulbaConfig."
+                "replay: its loss aux is (metrics, td_priorities), which "
+                "the on-policy learner would mis-treat as the metrics dict"
+            )
 
-            if isinstance(self.agent, ReplayImpalaAgent):
+        # ---- agent carry protocol (recurrent vs feed-forward) ----
+        # Recurrent agents expose initial_carry(batch) and act with a 4th
+        # positional carry arg; feed-forward agents keep the 3-arg act and
+        # an empty () carry threads through the fused step untouched (no
+        # leaves -> bit-identical XLA program).  Validate here, not in a
+        # jit trace on the first actor step.
+        self._recurrent = callable(getattr(self.agent, "initial_carry", None))
+        act_sig = inspect.signature(self.agent.act).parameters
+        pos_kinds = (inspect.Parameter.POSITIONAL_ONLY,
+                     inspect.Parameter.POSITIONAL_OR_KEYWORD)
+        # capable: can be filled positionally (defaults included) — what
+        # the recurrent 4-positional call needs.  required: default-less —
+        # what betrays a carry parameter on an unmarked agent (an optional
+        # 4th arg on a feed-forward agent is fine; it just never gets it).
+        n_act_capable = sum(p.kind in pos_kinds for p in act_sig.values())
+        n_act_required = sum(
+            p.kind in pos_kinds and p.default is inspect.Parameter.empty
+            for p in act_sig.values()
+        )
+        has_var_pos_act = any(
+            p.kind is inspect.Parameter.VAR_POSITIONAL
+            for p in act_sig.values()
+        )
+        if self._recurrent and not has_var_pos_act and n_act_capable < 4:
+            raise ValueError(
+                "recurrent agents (initial_carry present) must accept "
+                "act(params, obs, rng, carry); "
+                f"{type(self.agent).__name__}.act takes {n_act_capable} "
+                "positional arguments"
+            )
+        if not self._recurrent and n_act_required > 3:
+            raise ValueError(
+                f"{type(self.agent).__name__}.act requires "
+                f"{n_act_required} positional arguments but the agent has "
+                "no initial_carry; recurrent agents must expose "
+                "initial_carry(batch_size) so Sebulba knows to thread "
+                "(and store) a carry"
+            )
+        if self._recurrent:
+            # both reset mechanisms restore ZERO state: the actor's
+            # jnp.where against initial_carry, and the learner's
+            # decay-gate fold (a := 0), which mathematically zeroes the
+            # entering state.  A nonzero initial carry would silently
+            # diverge the two — reject it here.
+            for leaf in jax.tree.leaves(self.agent.initial_carry(1)):
+                if np.any(np.asarray(leaf) != 0):
+                    raise ValueError(
+                        "initial_carry must be all zeros: episode resets "
+                        "in the fused actor step and the learner's "
+                        "decay-gate reset fold (repro/agents/recurrent.py)"
+                        " both restore zero state"
+                    )
+        if config.burn_in < 0:
+            raise ValueError("burn_in must be >= 0")
+        if config.burn_in:
+            if not self._recurrent:
                 raise ValueError(
-                    "ReplayImpalaAgent requires SebulbaConfig.replay: its "
-                    "loss aux is (metrics, td_priorities), which the "
-                    "on-policy learner would mis-treat as the metrics dict"
+                    "burn_in is a recurrent-agent feature (it refreshes the "
+                    "stored carry); feed-forward agents have no state to "
+                    "burn in"
+                )
+            if config.burn_in >= config.trajectory_length:
+                raise ValueError(
+                    f"burn_in ({config.burn_in}) must leave at least one "
+                    "trained step: it must be < trajectory_length "
+                    f"({config.trajectory_length})"
                 )
         # learner updates are built lazily (they need the trajectory
         # structure), cached per trajectory shape, and donated end to end
@@ -253,9 +335,10 @@ class Sebulba:
         self.update_traces = 0  # compile probe: jit traces once per compile
 
         # the fused actor hot path: one donated-jit program per env step
-        # (buffer and rng donated -> in-place ring writes), one donated-jit
-        # drain per trajectory (the outputs alias the donated ring storage)
-        self._act_step = jax.jit(self._act_step_fn, donate_argnums=(1, 2))
+        # (buffer, rng, and recurrent carry donated -> in-place ring and
+        # state writes), one donated-jit drain per trajectory (the outputs
+        # alias the donated ring storage)
+        self._act_step = jax.jit(self._act_step_fn, donate_argnums=(1, 2, 5))
         self._drain = jax.jit(buffer_drain, donate_argnums=(0,))
         self._split_traj = jax.jit(
             lambda traj: split_for_learners(traj, self.L)
@@ -349,27 +432,71 @@ class Sebulba:
 
     # -------------------------------------------------------------- actor
 
-    def _act_step_fn(self, params, buf, rng, obs, rew_disc):
-        """The fused per-step actor program: RNG split, policy inference,
-        log-prob, and the in-place trajectory-ring write — one XLA
-        dispatch per env step, with ``buf`` and ``rng`` donated."""
+    def _act_step_fn(self, params, buf, rng, obs, rew_disc, carry):
+        """The fused per-step actor program: RNG split, episode-boundary
+        carry reset, policy inference, log-prob, and the in-place
+        trajectory-ring write — one XLA dispatch per env step, with
+        ``buf``, ``rng``, and ``carry`` donated.
+
+        ``carry`` is the recurrent state (or () for feed-forward agents, in
+        which case this traces to exactly the pre-carry program).  The
+        reset rides the discount channel: ``rew_disc[1]`` is zero where the
+        previous env step ended an episode, so those batch rows restart
+        from the agent's initial state before acting.  The post-reset carry
+        is what ``buffer_add`` snapshots at t == 0 — the R2D2 stored state
+        for the slice.
+        """
         rng, a_rng = jax.random.split(rng)
-        actions, logp, extras = self.agent.act(params, obs, a_rng)
-        buf = buffer_add(buf, obs, actions, logp, extras, rew_disc)
-        return actions, buf, rng
+        if self._recurrent:
+            B = rew_disc.shape[1]
+            ended = rew_disc[1] == 0.0  # (B,) prev step closed the episode
+            init = self.agent.initial_carry(B)
+            carry = jax.tree.map(
+                lambda c, c0: jnp.where(
+                    ended.reshape((B,) + (1,) * (c.ndim - 1)), c0, c
+                ),
+                carry, init,
+            )
+            actions, logp, extras, new_carry = self.agent.act(
+                params, obs, a_rng, carry
+            )
+        else:
+            actions, logp, extras = self.agent.act(params, obs, a_rng)
+            new_carry = carry  # () threads through untouched
+        buf = buffer_add(buf, obs, actions, logp, extras, rew_disc, carry)
+        return actions, buf, rng, new_carry
+
+    def _initial_carry(self, device):
+        """This thread's starting recurrent state on its actor core (() for
+        feed-forward agents)."""
+        if not self._recurrent:
+            return ()
+        return jax.device_put(
+            self.agent.initial_carry(self.cfg.actor_batch_size), device
+        )
 
     def _make_actor_buffer(self, params, obs_dev, device):
         """Preallocate this thread's device trajectory ring, deriving the
-        action/logp/extras storage shapes from the agent's act signature
-        (no tracing side effects — ``eval_shape`` is abstract)."""
+        action/logp/extras/carry storage shapes from the agent's act
+        signature (no tracing side effects — ``eval_shape`` is abstract)."""
         as_spec = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
         obs_spec = jax.tree.map(as_spec, obs_dev)
-        act_spec, logp_spec, extras_spec = jax.eval_shape(
-            self.agent.act, params, obs_spec, jax.random.key(0)
-        )
+        if self._recurrent:
+            carry_spec = jax.tree.map(
+                as_spec, self.agent.initial_carry(self.cfg.actor_batch_size)
+            )
+            act_spec, logp_spec, extras_spec, _ = jax.eval_shape(
+                self.agent.act, params, obs_spec, jax.random.key(0),
+                carry_spec,
+            )
+        else:
+            carry_spec = ()
+            act_spec, logp_spec, extras_spec = jax.eval_shape(
+                self.agent.act, params, obs_spec, jax.random.key(0)
+            )
         buf = device_buffer_init(
             self.cfg.trajectory_length, obs_spec, act_spec, logp_spec,
-            extras_spec,
+            extras_spec, carry_spec,
         )
         return jax.device_put(buf, device)
 
@@ -393,6 +520,7 @@ class Sebulba:
         # previous step's [rewards; discounts], batched into ONE transfer
         host_data = np.zeros((2, cfg.actor_batch_size), np.float32)
         buf = None
+        carry = self._initial_carry(device)  # recurrent state, or ()
         t = 0  # host mirror of the ring cursor (control flow only, no sync)
         last_version = 0
 
@@ -414,14 +542,16 @@ class Sebulba:
             if t == cfg.trajectory_length:
                 # ring full: merge the final step's rewards, hand the
                 # trajectory (aliasing the donated ring storage) to the
-                # learner shards, and continue on a fresh ring
+                # learner shards, and continue on a fresh ring.  The LIVE
+                # carry persists across the drain — only the stored
+                # snapshot travels with the trajectory.
                 traj, buf = self._drain(buf, hd_dev, obs_dev)
                 t = 0
                 shards = self._shard_for_learners(traj)
                 if not self._queue_put(shards, thread_id):
                     return  # stopping — the in-flight trajectory is dropped
-            actions, buf, rng = self._act_step(
-                params, buf, rng, obs_dev, hd_dev
+            actions, buf, rng, carry = self._act_step(
+                params, buf, rng, obs_dev, hd_dev, carry
             )
             # the one host sync per step: the env needs the actions
             actions_host = np.asarray(actions)

@@ -6,9 +6,12 @@ accumulates a batch of trajectories of fixed length on device") in a
 ``DeviceTrajectoryBuffer`` — a preallocated (B, T, ...) pytree that the
 fused actor step updates in place via ``lax.dynamic_update_index_in_dim``
 with the buffer donated (the replay-ring recipe from repro/replay/buffer.py
-applied to the actor half of the system).  ``TrajectoryAccumulator`` is the
-legacy host-list path, kept as the bit-exactness reference for the fused
-pipeline and for host-side tooling.
+applied to the actor half of the system).  Recurrent agents additionally
+thread a carry through the fused step; the carry entering step 0 of a slice
+is snapshotted into ``carry0`` and drained as ``Trajectory.init_carry`` —
+the R2D2 "stored state" the learner (and the replay ring) replays from.
+``TrajectoryAccumulator`` is the legacy host-list path, kept as the
+bit-exactness reference for the fused pipeline and for host-side tooling.
 """
 
 from __future__ import annotations
@@ -27,6 +30,11 @@ class Trajectory(NamedTuple):
     behaviour_logp: jax.Array  # (B, T) float32
     bootstrap_obs: Any  # (B, ...) obs at T (for the bootstrap value)
     extras: Any = ()  # agent-specific per-step data (e.g. MCTS visit probs)
+    # recurrent-agent carry at step 0 of this slice (R2D2 "stored state"):
+    # (B, ...) leaves, or () for feed-forward agents.  Rides through the
+    # learner shards and the replay ring like any other leaf, so sampled
+    # sequences replay from the state the actor actually had.
+    init_carry: Any = ()
 
 
 class DeviceTrajectoryBuffer(NamedTuple):
@@ -53,6 +61,10 @@ class DeviceTrajectoryBuffer(NamedTuple):
     extras: Any  # agent extras; (B, T, ...) leaves or ()
     t: jax.Array  # () int32 — write cursor, wraps mod T
     has_prev: jax.Array  # () bool — a step since init/drain awaits its reward
+    # recurrent carry entering step 0 of the slice being filled ((B, ...)
+    # leaves, no time axis): snapshotted by ``buffer_add`` when t == 0 and
+    # handed to the trajectory at drain.  () for feed-forward agents.
+    carry0: Any = ()
 
     @property
     def length(self) -> int:
@@ -60,14 +72,17 @@ class DeviceTrajectoryBuffer(NamedTuple):
 
 
 def device_buffer_init(
-    length: int, obs_spec: Any, action_spec, logp_spec, extras_spec: Any = ()
+    length: int, obs_spec: Any, action_spec, logp_spec, extras_spec: Any = (),
+    carry_spec: Any = (),
 ) -> DeviceTrajectoryBuffer:
     """Allocate a zeroed ``DeviceTrajectoryBuffer`` from per-step specs.
 
     Specs are per-step (B, ...) ``ShapeDtypeStruct``s (or concrete arrays);
     the Sebulba actor derives them with ``jax.eval_shape`` over the agent's
     ``act`` so agent extras of any fixed-shape pytree structure get a
-    storage slot without the agent knowing about the buffer.
+    storage slot without the agent knowing about the buffer.  ``carry_spec``
+    describes the recurrent carry ((B, ...) leaves, stored WITHOUT a time
+    axis — only the slice-initial state is kept); () for feed-forward.
     """
 
     def alloc(spec):
@@ -83,18 +98,25 @@ def device_buffer_init(
         extras=jax.tree.map(alloc, extras_spec),
         t=jnp.zeros((), jnp.int32),
         has_prev=jnp.zeros((), jnp.bool_),
+        carry0=jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), carry_spec
+        ),
     )
 
 
 def buffer_add(
-    buf: DeviceTrajectoryBuffer, obs, actions, logp, extras, rew_disc
+    buf: DeviceTrajectoryBuffer, obs, actions, logp, extras, rew_disc,
+    carry: Any = (),
 ) -> DeviceTrajectoryBuffer:
     """Write one env step at the cursor; pure, composes into the fused step.
 
     ``rew_disc`` is the (2, B) float32 [rewards; discounts] of the
     *previous* step, batched into one host transfer — written at slot t-1
-    (mod T) when ``has_prev``.  Trace this inside a jit that donates ``buf``
-    so every write is an in-place buffer update.
+    (mod T) when ``has_prev``.  ``carry`` is the recurrent state entering
+    this step (post episode-boundary reset): at t == 0 it is snapshotted
+    into ``carry0`` as the slice's stored state; later steps leave the
+    snapshot alone.  Trace this inside a jit that donates ``buf`` so every
+    write is an in-place buffer update.
     """
     T = buf.actions.shape[1]
     t = buf.t
@@ -119,6 +141,9 @@ def buffer_add(
         extras=jax.tree.map(upd, buf.extras, extras),
         t=jnp.remainder(t + 1, T),
         has_prev=jnp.ones((), jnp.bool_),
+        carry0=jax.tree.map(
+            lambda c0, c: jnp.where(t == 0, c, c0), buf.carry0, carry
+        ),
     )
 
 
@@ -146,6 +171,7 @@ def buffer_drain(
         behaviour_logp=buf.behaviour_logp,
         bootstrap_obs=bootstrap_obs,
         extras=buf.extras,
+        init_carry=buf.carry0,
     )
     fresh = DeviceTrajectoryBuffer(
         obs=jax.tree.map(jnp.zeros_like, buf.obs),
@@ -156,6 +182,9 @@ def buffer_drain(
         extras=jax.tree.map(jnp.zeros_like, buf.extras),
         t=jnp.zeros((), jnp.int32),
         has_prev=jnp.zeros((), jnp.bool_),
+        # the zeroed snapshot slot is overwritten by the next t==0 add (the
+        # LIVE carry persists across the drain on the actor side)
+        carry0=jax.tree.map(jnp.zeros_like, buf.carry0),
     )
     return traj, fresh
 

@@ -56,11 +56,52 @@ def _assoc_core_fwd(x, a, gate_i):
 
 
 def _assoc_core_bwd(res, dy):
+    # zero-h0 special case of the stateful backward below (dh0 discarded);
+    # the reverse-scan gradient math lives in exactly one place
     x, a, gate_i, h = res
+    h0 = jnp.zeros_like(h[:, 0])
+    dx, da, di, _ = _assoc_core_h0_bwd(
+        (x, a, gate_i, h0, h), (dy, jnp.zeros_like(h0))
+    )
+    return dx, da, di
+
+
+_assoc_scan_core.defvjp(_assoc_core_fwd, _assoc_core_bwd)
+
+
+@jax.custom_vjp
+def _assoc_scan_core_h0(x, a, gate_i, h0):
+    """RG-LRU scan from a provided initial state, linear-cost custom VJP.
+
+    Same recurrence and backward as ``_assoc_scan_core`` with two h0
+    differences: ``h_prev`` at t = 0 is ``h0`` (not zero), which also makes
+    ``dh0 = a_1 * g_1`` a fourth cotangent; and the final state h_T is a
+    second primal output so stateful callers (R2D2's stored-state unrolls,
+    which are the training path that hits h0 != None) can chain carries
+    without re-deriving it from y's dtype-cast output.  Without this path
+    autodiff would go through ``associative_scan`` and re-pay the O(log T)
+    tree levels of (B, T, W) saved intermediates the custom VJP exists to
+    avoid.
+    """
+    y, h = _assoc_scan_fwd_impl(x, a, gate_i, h0)
+    return y, h[:, -1]
+
+
+def _assoc_core_h0_fwd(x, a, gate_i, h0):
+    y, h = _assoc_scan_fwd_impl(x, a, gate_i, h0)
+    return (y, h[:, -1]), (x, a, gate_i, h0, h)
+
+
+def _assoc_core_h0_bwd(res, cts):
+    x, a, gate_i, h0, h = res
+    dy, dh_last = cts
     xf = x.astype(jnp.float32)
     af = a.astype(jnp.float32)
     gif = gate_i.astype(jnp.float32)
     dyf = dy.astype(jnp.float32)
+    # h_T IS the (float32) scan state at step T-1, so its cotangent simply
+    # adds to dy_{T-1} before the reverse scan
+    dyf = dyf.at[:, -1].add(dh_last.astype(jnp.float32))
     beta = jnp.sqrt(jnp.maximum(1.0 - af**2, 0.0))
 
     # reverse scan: g_t = dy_t + a_{t+1} g_{t+1}  (A_t = a_{t+1}, B_t = dy_t;
@@ -75,23 +116,28 @@ def _assoc_core_bwd(res, dy):
     _, g = jax.lax.associative_scan(
         combine, (a_next, dyf), axis=1, reverse=True
     )
-    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    h_prev = jnp.concatenate(
+        [h0.astype(jnp.float32)[:, None], h[:, :-1]], axis=1
+    )
     dx = g * beta * gif
     di = g * beta * xf
     dbeta_da = -af / jnp.maximum(beta, 1e-6)
     da = g * (h_prev + dbeta_da * gif * xf)
-    return dx.astype(x.dtype), da.astype(a.dtype), di.astype(gate_i.dtype)
+    dh0 = af[:, 0] * g[:, 0]
+    return (
+        dx.astype(x.dtype), da.astype(a.dtype), di.astype(gate_i.dtype),
+        dh0.astype(h0.dtype),
+    )
 
 
-_assoc_scan_core.defvjp(_assoc_core_fwd, _assoc_core_bwd)
+_assoc_scan_core_h0.defvjp(_assoc_core_h0_fwd, _assoc_core_h0_bwd)
 
 
 def _assoc_scan(x, a, gate_i, h0):
     if h0 is None:
         y = _assoc_scan_core(x, a, gate_i)
         return y, y[:, -1].astype(jnp.float32)
-    y, h = _assoc_scan_fwd_impl(x, a, gate_i, h0)
-    return y, h[:, -1]
+    return _assoc_scan_core_h0(x, a, gate_i, h0)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))
@@ -104,10 +150,17 @@ def rglru_scan(
     impl: str = "auto",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """RG-LRU scan.  x, a, gate_i: (B, T, W) -> y (B, T, W), h_T (B, W)."""
+    """RG-LRU scan.  x, a, gate_i: (B, T, W) -> y (B, T, W), h_T (B, W).
+
+    Stored-state scans (``h0 is not None`` — the R2D2 training path) always
+    take the associative-scan implementation with its linear-memory custom
+    VJP: the Pallas kernel starts from zero state and has no backward, so
+    routing it there would raise on TPU at the first learner trace.  The
+    kernel serves the zero-state (inference/prefill) path it was built for.
+    """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if impl == "pallas" or interpret:
+    if (impl == "pallas" or interpret) and h0 is None:
         from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
 
         return rglru_scan_pallas(x, a, gate_i, h0, interpret=interpret)

@@ -16,6 +16,12 @@ Priorities follow PER (Schaul et al., 2016): new items enter at the current
 maximum priority, sampling is ``p_i^alpha``-proportional, and the learner
 corrects the induced bias with importance weights
 (repro/rl/losses.py:per_importance_weights).
+
+The slot layout is structure-agnostic: a slot stores one batch element of
+whatever pytree it was initialized with, so R2D2's per-sequence stored
+state (``Trajectory.init_carry``, a (B, W) leaf) rides the ring with no
+replay-side code — insert scatters it, sample gathers it, bit-exact
+(tests/test_recurrent.py).
 """
 
 from __future__ import annotations

@@ -95,6 +95,33 @@ def test_rglru_matches_ref(B, T, W, bt, bw, dtype):
     assert jnp.abs(h_p - h_ref).max() < tol
 
 
+def test_rglru_h0_custom_vjp_matches_scan_autodiff():
+    """The linear-memory custom VJP on the h0 != None path (the R2D2
+    stored-state unroll) must produce the same gradients — including dh0
+    and the h_T output cotangent — as plain autodiff through the
+    sequential lax.scan reference."""
+    ks = jax.random.split(jax.random.key(7), 4)
+    B, T, W = 2, 24, 8
+    x = jax.random.normal(ks[0], (B, T, W))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, T, W)))
+    gi = jax.nn.sigmoid(jax.random.normal(ks[2], (B, T, W)))
+    h0 = jax.random.normal(ks[3], (B, W))
+    cy = jax.random.normal(jax.random.key(9), (B, T, W))
+    ch = jax.random.normal(jax.random.key(10), (B, W))
+
+    def loss(fn):
+        def inner(x, a, gi, h0):
+            y, hT = fn(x, a, gi, h0)
+            return jnp.sum(y * cy) + jnp.sum(hT * ch)
+
+        return jax.grad(inner, argnums=(0, 1, 2, 3))
+
+    g_ops = loss(lambda *args: _assoc_scan(*args))(x, a, gi, h0)
+    g_ref = loss(rglru_scan_ref)(x, a, gi, h0)
+    for go, gr in zip(g_ops, g_ref):
+        assert jnp.abs(go - gr).max() < 1e-4
+
+
 def test_rglru_carry_state():
     """Scan from h0 equals splitting the sequence in two (ops path)."""
     ks = jax.random.split(jax.random.key(0), 3)

@@ -1,0 +1,507 @@
+"""Recurrent-agent (R2D2) carry semantics, ISSUE 4 acceptance:
+
+  * the fused actor resets the carry on episode boundaries (discount
+    channel) — bit-identical to manually zeroing those rows;
+  * the carry entering step 0 of a slice is stored and drains as
+    ``Trajectory.init_carry`` (R2D2 stored state), bit-exact;
+  * stored state round-trips the replay ring bit-exact;
+  * burn-in cuts the gradient tape exactly — grads w.r.t. burn-in steps
+    are exactly zero;
+  * the sequence unroll (rglru kernel wrapper AND the pure-lax reference
+    core) matches the actor's step-by-step path with resets;
+  * feed-forward agents pass through the carry plumbing untouched
+    (empty-() carry, no new buffer leaves) — the PR 2/3 bit-exact pins in
+    test_trajectory_buffer.py / test_learner_pipeline.py run against the
+    same act-step and keep guarding the numerics;
+  * agent-protocol and burn-in validation fail fast, not in a jit trace;
+  * end-to-end: recurrent agents train through both the on-policy and the
+    replay (true R2D2) Sebulba paths on the CPU mesh.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.agents.recurrent import (
+    RecurrentImpalaAgent,
+    RecurrentMLPActorCritic,
+    RecurrentReplayImpalaAgent,
+)
+from repro.configs.base import ReplayConfig
+from repro.core.sebulba import Sebulba, SebulbaConfig
+from repro.data.trajectory import Trajectory
+from repro.envs import BatchedHostEnv, HostBandit
+from repro.replay import ReplayBuffer
+
+B, T, OBS, W = 4, 6, 4, 8
+
+
+def _make_seb(burn_in=0, traj_len=T, batch=B, replay=None, agent_cls=None,
+              core="rglru"):
+    cfg = SebulbaConfig(
+        num_actor_cores=1, threads_per_actor_core=1, actor_batch_size=batch,
+        trajectory_length=traj_len, burn_in=burn_in, replay=replay,
+    )
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=W, core=core)
+    agent_cls = agent_cls or (
+        RecurrentReplayImpalaAgent if replay else RecurrentImpalaAgent
+    )
+    seb = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=net, optimizer=optim.adam(1e-3), config=cfg,
+        agent=agent_cls(net, cfg),
+    )
+    return seb, net
+
+
+def _traj(rng: np.random.RandomState, discounts=None, batch=B, traj_len=T):
+    if discounts is None:
+        discounts = np.full((batch, traj_len), 0.99, np.float32)
+    return Trajectory(
+        obs=jnp.asarray(rng.rand(batch, traj_len, OBS), jnp.float32),
+        actions=jnp.asarray(
+            rng.randint(0, 4, (batch, traj_len)), jnp.int32
+        ),
+        rewards=jnp.asarray(rng.rand(batch, traj_len), jnp.float32),
+        discounts=jnp.asarray(discounts, jnp.float32),
+        behaviour_logp=jnp.asarray(
+            np.log(rng.uniform(0.2, 0.9, (batch, traj_len))), jnp.float32
+        ),
+        bootstrap_obs=jnp.asarray(rng.rand(batch, OBS), jnp.float32),
+        init_carry=jnp.asarray(rng.rand(batch, W), jnp.float32),
+    )
+
+
+# ----------------------------------------------------- fused actor carry
+
+
+def test_actor_resets_carry_on_episode_boundary_bit_exact():
+    """Rows whose previous step ended (discount channel == 0) must restart
+    from the initial state: the fused step with those discounts must be
+    bit-identical to manually zeroing those carry rows and passing
+    non-terminal discounts."""
+    seb, net = _make_seb()
+    params, _ = seb.init(jax.random.key(0), (OBS,))
+    device = seb.split.actor_devices[0]
+    rng = np.random.RandomState(3)
+    obs = jax.device_put(
+        jnp.asarray(rng.rand(B, OBS), jnp.float32), device
+    )
+    carry = jnp.asarray(rng.rand(B, W), jnp.float32)
+    rewards = rng.rand(B).astype(np.float32)
+    disc_ended = np.full((B,), 0.9, np.float32)
+    disc_ended[[0, 2]] = 0.0  # rows 0 and 2 closed their episodes
+
+    def run(disc, c):
+        buf = seb._make_actor_buffer(params, obs, device)
+        hd = jax.device_put(np.stack([rewards, disc]), device)
+        # the fused step donates its carry; hand it a private copy so the
+        # caller's array survives for the comparisons below
+        actions, buf, _, new_carry = seb._act_step(
+            params, buf, jax.device_put(jax.random.key(5), device), obs,
+            hd, jnp.copy(jax.device_put(c, device)),
+        )
+        return actions, new_carry, buf
+
+    act_a, carry_a, buf_a = run(disc_ended, carry)
+    manual = carry.at[jnp.asarray([0, 2])].set(0.0)
+    act_b, carry_b, buf_b = run(np.full((B,), 0.9, np.float32), manual)
+
+    np.testing.assert_array_equal(np.asarray(act_a), np.asarray(act_b))
+    np.testing.assert_array_equal(np.asarray(carry_a), np.asarray(carry_b))
+    # the stored slice-initial state is the POST-reset carry in both runs
+    np.testing.assert_array_equal(
+        np.asarray(buf_a.carry0), np.asarray(manual)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(buf_b.carry0), np.asarray(manual)
+    )
+
+
+def test_stored_state_snapshot_survives_drain_bit_exact():
+    """The carry entering step 0 drains as Trajectory.init_carry, and the
+    LIVE carry persists across the drain into the next slice's snapshot."""
+    seb, net = _make_seb(traj_len=3)
+    params, _ = seb.init(jax.random.key(0), (OBS,))
+    device = seb.split.actor_devices[0]
+    rng = np.random.RandomState(7)
+    c0 = jnp.asarray(rng.rand(B, W), jnp.float32)
+    carry = jnp.copy(jax.device_put(c0, device))  # donated by the 1st step
+    buf = None
+    hd = jax.device_put(
+        jnp.concatenate(
+            [jnp.zeros((1, B)), jnp.full((1, B), 0.9)]
+        ).astype(jnp.float32),
+        device,
+    )
+    for t in range(3):
+        obs = jax.device_put(
+            jnp.asarray(rng.rand(B, OBS), jnp.float32), device
+        )
+        if buf is None:
+            buf = seb._make_actor_buffer(params, obs, device)
+        _, buf, _, carry = seb._act_step(
+            params, buf, jax.device_put(jax.random.key(t), device), obs,
+            jnp.copy(hd), carry,
+        )
+    live = jnp.copy(carry)  # drain must not touch the live carry
+    traj, fresh = seb._drain(
+        buf, jnp.copy(hd),
+        jax.device_put(jnp.zeros((B, OBS), jnp.float32), device),
+    )
+    np.testing.assert_array_equal(np.asarray(traj.init_carry), np.asarray(c0))
+    np.testing.assert_array_equal(np.asarray(fresh.carry0), 0.0)
+    # next slice: its t==0 snapshot is the live carry, not the old one
+    obs = jax.device_put(jnp.asarray(rng.rand(B, OBS), jnp.float32), device)
+    _, fresh, _, _ = seb._act_step(
+        params, fresh, jax.device_put(jax.random.key(9), device), obs,
+        jnp.copy(hd), carry,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fresh.carry0), np.asarray(live)
+    )
+
+
+def test_feedforward_agents_pass_through_untouched():
+    """ff agents keep the () carry end to end: no carry leaves in the ring,
+    () back from the fused step, () init_carry on the drained trajectory
+    (the PR 2/3 pins then guard the numerics on this same path)."""
+    from repro.agents import BatchedMLPActorCritic
+
+    seb = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.adam(1e-3),
+        config=SebulbaConfig(
+            num_actor_cores=1, actor_batch_size=B, trajectory_length=2
+        ),
+    )
+    assert not seb._recurrent
+    params, _ = seb.init(jax.random.key(0), (OBS,))
+    device = seb.split.actor_devices[0]
+    obs = jax.device_put(jnp.ones((B, OBS), jnp.float32), device)
+    buf = seb._make_actor_buffer(params, obs, device)
+    assert buf.carry0 == ()
+    hd = jax.device_put(jnp.zeros((2, B), jnp.float32), device)
+    _, buf, _, carry = seb._act_step(
+        params, buf, jax.device_put(jax.random.key(1), device), obs, hd, ()
+    )
+    assert carry == ()
+    _, buf, _, _ = seb._act_step(
+        params, buf, jax.device_put(jax.random.key(2), device), obs,
+        jnp.copy(hd), ()
+    )
+    traj, _ = seb._drain(buf, jnp.copy(hd), obs)
+    assert traj.init_carry == ()
+
+
+# ------------------------------------------------- replay ring round trip
+
+
+def test_replay_roundtrip_stored_state_bit_exact():
+    """insert -> sample must hand back the stored init_carry (and every
+    other leaf) bit-for-bit — replayed sequences unroll from the exact
+    state the actor recorded."""
+    rng = np.random.RandomState(11)
+    traj = _traj(rng, batch=8)
+    buf = ReplayBuffer(capacity=8, prioritized=True)
+    state = buf.init(traj)
+    state = buf.insert(state, traj)
+    sampled, idx, _ = buf.sample(state, jax.random.key(0), 32)
+    idx = np.asarray(idx)
+    for name, stored, got in zip(traj._fields, traj, sampled):
+        for a, b in zip(jax.tree.leaves(stored), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(
+                np.asarray(a)[idx], np.asarray(b),
+                err_msg=f"{name} did not round-trip the ring bit-exact",
+            )
+    assert sampled.init_carry.shape == (32, W)
+    assert sampled.init_carry.dtype == jnp.float32
+
+
+# ----------------------------------------------------- learner-side unroll
+
+
+@pytest.mark.parametrize("core", ["rglru", "lax"])
+def test_unroll_matches_stepwise_actor_path_with_resets(core):
+    """apply_seq (either core) over a trajectory with mid-slice episode
+    boundaries must match the actor's step-by-step path: same logits,
+    values, and final carry (the reset folded into the decay gate is the
+    same computation the actor does by zeroing the carry)."""
+    seb, net = _make_seb(core=core)
+    agent = seb.agent
+    params, _ = seb.init(jax.random.key(0), (OBS,))
+    rng = np.random.RandomState(0)
+    disc = np.full((B, T), 0.99, np.float32)
+    disc[0, 2] = 0.0  # episode boundary inside the slice
+    disc[2, 0] = 0.0
+    disc[3, 4] = 0.0
+    traj = _traj(rng, discounts=disc)
+    reset = agent._reset_mask(traj.discounts)
+    logits, values, h_last = net.apply_seq(
+        params, traj.obs, traj.init_carry, reset
+    )
+
+    h = traj.init_carry
+    outs = []
+    for t in range(T):
+        h = jnp.where(reset[:, t][:, None], 0.0, h)
+        lg, v, h = net.apply_step(params, traj.obs[:, t], h)
+        outs.append((lg, v))
+    np.testing.assert_allclose(
+        np.asarray(logits),
+        np.asarray(jnp.stack([o[0] for o in outs], axis=1)),
+        rtol=2e-5, atol=2e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(values),
+        np.asarray(jnp.stack([o[1] for o in outs], axis=1)),
+        rtol=2e-5, atol=2e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(h_last), np.asarray(h), rtol=2e-5, atol=2e-6
+    )
+
+
+def test_rglru_and_lax_cores_agree():
+    seb_a, net_a = _make_seb(core="rglru")
+    seb_b, net_b = _make_seb(core="lax")
+    params = net_a.init(jax.random.key(0), (OBS,))
+    rng = np.random.RandomState(5)
+    obs = jnp.asarray(rng.rand(B, T, OBS), jnp.float32)
+    h0 = jnp.asarray(rng.rand(B, W), jnp.float32)
+    reset = jnp.zeros((B, T), bool).at[1, 3].set(True)
+    la, va, ha = net_a.apply_seq(params, obs, h0, reset)
+    lb, vb, hb = net_b.apply_seq(params, obs, h0, reset)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hb),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_burn_in_gradient_mask_exactly_zero():
+    """Grads w.r.t. the burn-in window (obs steps < K, and the stored
+    init_carry, whose only consumer is that window) must be EXACTLY zero —
+    stop_gradient cuts the tape, it doesn't just shrink the numbers — while
+    the trained window's grads are live."""
+    K = 2
+    seb, net = _make_seb(burn_in=K)
+    agent = seb.agent
+    params, _ = seb.init(jax.random.key(0), (OBS,))
+    traj = _traj(np.random.RandomState(1))
+
+    g_obs, g_carry = jax.grad(
+        lambda o, c: agent.loss(
+            params, traj._replace(obs=o, init_carry=c)
+        )[0],
+        argnums=(0, 1),
+    )(traj.obs, traj.init_carry)
+    g_obs = np.asarray(g_obs)
+    assert np.all(g_obs[:, :K] == 0.0), "burn-in obs grads must be exact 0"
+    assert np.abs(g_obs[:, K:]).max() > 0.0, "trained window grads missing"
+    assert np.all(np.asarray(g_carry) == 0.0)
+
+    # without burn-in the stored state IS on the tape
+    seb0, _ = _make_seb(burn_in=0)
+    g_carry0 = jax.grad(
+        lambda c: seb0.agent.loss(params, traj._replace(init_carry=c))[0]
+    )(traj.init_carry)
+    assert np.abs(np.asarray(g_carry0)).max() > 0.0
+
+
+def test_burn_in_loss_trains_suffix_only():
+    """burn_in=K must equal scoring only the last T-K steps: perturbing a
+    burn-in step's reward leaves the loss bit-identical."""
+    K = 2
+    seb, _ = _make_seb(burn_in=K)
+    params, _ = seb.init(jax.random.key(0), (OBS,))
+    traj = _traj(np.random.RandomState(2))
+    base, _ = seb.agent.loss(params, traj)
+    bumped = traj._replace(
+        rewards=traj.rewards.at[:, 0].add(100.0)
+    )
+    pert, _ = seb.agent.loss(params, bumped)
+    assert float(base) == float(pert)
+    trained = traj._replace(rewards=traj.rewards.at[:, K].add(100.0))
+    pert2, _ = seb.agent.loss(params, trained)
+    assert float(base) != float(pert2)
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_burn_in_requires_recurrent_agent():
+    from repro.agents import BatchedMLPActorCritic
+
+    with pytest.raises(ValueError, match="recurrent-agent feature"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=BatchedMLPActorCritic(4, hidden=(16,)),
+            optimizer=optim.adam(1e-3),
+            config=SebulbaConfig(
+                num_actor_cores=1, actor_batch_size=B,
+                trajectory_length=4, burn_in=1,
+            ),
+        )
+
+
+def test_burn_in_must_leave_trained_steps():
+    with pytest.raises(ValueError, match="at least one"):
+        _make_seb(burn_in=T, traj_len=T)
+
+
+def test_recurrent_agent_needs_carry_arg_in_act():
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=W)
+
+    class BadAgent(RecurrentImpalaAgent):
+        def act(self, params, obs, rng):  # lost the carry
+            raise NotImplementedError
+
+    with pytest.raises(ValueError, match="act\\(params, obs, rng, carry\\)"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=net, optimizer=optim.adam(1e-3),
+            config=SebulbaConfig(
+                num_actor_cores=1, actor_batch_size=B, trajectory_length=4
+            ),
+            agent=BadAgent(net, SebulbaConfig()),
+        )
+
+
+def test_replay_protocol_agent_rejected_onpolicy():
+    """The recurrent replay agent shares ReplayImpalaAgent's aux protocol
+    (metrics, td) without its base class — the on-policy guard must key on
+    the protocol marker, not isinstance, and reject it too."""
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=W)
+    with pytest.raises(ValueError, match="requires SebulbaConfig.replay"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=net, optimizer=optim.adam(1e-3),
+            config=SebulbaConfig(
+                num_actor_cores=1, actor_batch_size=B, trajectory_length=4
+            ),
+            agent=RecurrentReplayImpalaAgent(net, SebulbaConfig()),
+        )
+
+
+def test_defaulted_carry_arg_accepted_both_ways():
+    """act(..., carry=None) on a recurrent agent satisfies the 4-positional
+    call; an optional 4th arg on a feed-forward agent is harmless (it never
+    receives it) — neither may be rejected."""
+
+    class DefaultCarry(RecurrentImpalaAgent):
+        def act(self, params, obs, rng, carry=None):
+            return super().act(params, obs, rng, carry)
+
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=W)
+    cfg = SebulbaConfig(
+        num_actor_cores=1, actor_batch_size=B, trajectory_length=4
+    )
+    seb = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=net, optimizer=optim.adam(1e-3), config=cfg,
+        agent=DefaultCarry(net, cfg),
+    )
+    assert seb._recurrent
+
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core.sebulba import ImpalaAgent
+
+    class OptionalExtra(ImpalaAgent):
+        def act(self, params, obs, rng, greedy=False):
+            return super().act(params, obs, rng)
+
+    ff_net = BatchedMLPActorCritic(4, hidden=(16,))
+    seb_ff = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=ff_net, optimizer=optim.adam(1e-3), config=cfg,
+        agent=OptionalExtra(ff_net, cfg),
+    )
+    assert not seb_ff._recurrent
+
+
+def test_nonzero_initial_carry_rejected():
+    """Both reset mechanisms (actor jnp.where, learner decay-gate fold)
+    restore zero state; an agent advertising a nonzero initial carry would
+    silently diverge them and must be rejected at construction."""
+
+    class NonZero(RecurrentImpalaAgent):
+        def initial_carry(self, batch_size):
+            return jnp.ones((batch_size, W), jnp.float32)
+
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=W)
+    with pytest.raises(ValueError, match="must be all zeros"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=net, optimizer=optim.adam(1e-3),
+            config=SebulbaConfig(
+                num_actor_cores=1, actor_batch_size=B, trajectory_length=4
+            ),
+            agent=NonZero(net, SebulbaConfig()),
+        )
+
+
+def test_carrying_act_without_initial_carry_rejected():
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=W)
+
+    class NoMarker:
+        def __init__(self):
+            self.net = net
+
+        def init(self, rng, obs_shape):
+            return net.init(rng, obs_shape)
+
+        def act(self, params, obs, rng, carry):
+            raise NotImplementedError
+
+        def loss(self, params, traj):
+            raise NotImplementedError
+
+    with pytest.raises(ValueError, match="initial_carry"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=net, optimizer=optim.adam(1e-3),
+            config=SebulbaConfig(
+                num_actor_cores=1, actor_batch_size=B, trajectory_length=4
+            ),
+            agent=NoMarker(),
+        )
+
+
+# ------------------------------------------------------------ end to end
+
+
+def test_e2e_recurrent_onpolicy_trains():
+    """Recurrent agent through the on-policy donated learner path (carry
+    threads the fused actor, init_carry rides the learner shards)."""
+    seb, _ = _make_seb(burn_in=1, traj_len=4, batch=6)
+    out = seb.run(jax.random.key(0), (OBS,), total_frames=240)
+    assert out["updates"] > 0
+    assert np.isfinite(out["metrics"]["loss"])
+
+
+def test_e2e_recurrent_replay_trains_r2d2():
+    """ISSUE 4 acceptance: true R2D2 — recurrent net, stored state riding
+    the prioritized replay ring, burn-in — trains end to end on the CPU
+    mesh through the fused off-policy update."""
+    replay = ReplayConfig(
+        capacity=64, sample_batch_size=6, min_size=12, prioritized=True
+    )
+    seb, _ = _make_seb(burn_in=1, traj_len=4, batch=6, replay=replay)
+    out = seb.run(jax.random.key(0), (OBS,), total_frames=480)
+    assert out["updates"] > 0
+    assert out["replay_size"] > 0
+    assert np.isfinite(out["metrics"]["loss"])

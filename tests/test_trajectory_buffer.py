@@ -205,8 +205,8 @@ def test_fused_act_step_bit_exact_vs_legacy_accumulate():
             hd_dev = jax.device_put(host_data, device)
             if buf is None:
                 buf = seb._make_actor_buffer(params, obs_dev, device)
-            actions, buf, rng = seb._act_step(
-                params, buf, rng, obs_dev, hd_dev
+            actions, buf, rng, _ = seb._act_step(
+                params, buf, rng, obs_dev, hd_dev, ()
             )
             next_obs, rewards, dones = env.step(np.asarray(actions))
             host_data = np.stack(
