@@ -153,12 +153,13 @@ def _run_legacy(seb, params, env, device, steps: int, inference) -> float:
     for _ in range(steps):
         rng, a_rng = jax.random.split(rng)
         obs_dev = jax.device_put(obs, device)
-        actions, logp, extras = inference(params, obs_dev, a_rng)
+        # canonical repro.api act: (actions, ActAux(logp, extras), carry)
+        actions, aux, _ = inference(params, obs_dev, a_rng, ())
         actions_host = np.asarray(actions)
         next_obs, rewards, dones = env.step(actions_host)
         discounts = (~dones).astype(np.float32) * cfg.discount
         acc.add(obs_dev, actions, jax.device_put(rewards, device),
-                jax.device_put(discounts, device), logp, extras)
+                jax.device_put(discounts, device), aux.logp, aux.extras)
         obs = next_obs
         if acc.full:
             traj = acc.drain(bootstrap_obs=jax.device_put(obs, device))

@@ -23,6 +23,13 @@ def main() -> None:
     ap.add_argument("--actor-cores", type=int, default=2)
     ap.add_argument("--actor-batch", type=int, default=32)
     ap.add_argument("--trajectory", type=int, default=20)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist param_version-stamped checkpoints here "
+                         "(the runner owns persistence — see repro.api)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint every N learner updates")
+    ap.add_argument("--restore-from", default=None,
+                    help="warm-start params from a checkpoint file or dir")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -50,12 +57,15 @@ def main() -> None:
             trajectory_length=args.trajectory,
         ),
     )
-    out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=args.frames,
-                  log_every=25)
+    out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=25,
+                  checkpoint_dir=args.checkpoint_dir,
+                  checkpoint_every=args.checkpoint_every,
+                  restore_from=args.restore_from)
     print(
         f"\n{out['frames']:,} frames in {out['seconds']:.1f}s "
         f"-> {out['fps']:,.0f} FPS, {out['updates']} updates, "
-        f"mean return {out['mean_return']:.2f}"
+        f"mean return {out['mean_return']:.2f}, "
+        f"{out['checkpoints_saved']} checkpoints"
     )
 
 

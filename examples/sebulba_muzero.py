@@ -2,6 +2,17 @@
 §Sebulba / Fig. 4c), including the batch-splitting trick that decouples
 acting batch size from learning batch size (learner_microbatches).
 
+Protocol notes (repro.api): ``MuZeroAgent`` declares
+``AgentSpec(extras_keys=("visit_probs",))`` — the per-step MCTS visit
+distributions ride the device trajectory ring as a NAMED extra
+(``Trajectory.extras["visit_probs"]``), validated against the declaration
+when the ring is allocated.  That named channel is exactly what the
+roadmap's MuZero-reanalyze needs to read back out of replay (sample a
+trajectory, re-run MCTS under fresh params, overwrite ``visit_probs``) —
+a reanalyze agent would declare ``AgentSpec(replay=True,
+extras_keys=("visit_probs",))`` and plug into Sebulba replay mode
+unchanged; this example is the on-policy template for it.
+
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/sebulba_muzero.py --frames 10000
 """
@@ -21,7 +32,24 @@ def main() -> None:
     ap.add_argument("--frames", type=int, default=10_000)
     ap.add_argument("--simulations", type=int, default=16)
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--actor-batch", type=int, default=16)
+    ap.add_argument("--trajectory", type=int, default=12)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist param_version-stamped checkpoints here")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint every N learner updates")
     args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    actor_cores = min(2, n_dev - 1) if n_dev > 1 else 1
+    learners = max(n_dev - actor_cores, 1)
+    # the batch shards across learner cores AND splits into microbatches
+    mult = learners * args.microbatches
+    actor_batch = -(-args.actor_batch // mult) * mult
+    if actor_batch != args.actor_batch:
+        print(f"actor batch {args.actor_batch} -> {actor_batch} "
+              f"(multiple of {learners} learners x {args.microbatches} "
+              "microbatches)")
 
     agent = MuZeroAgent(
         HostPong.num_actions,
@@ -34,14 +62,15 @@ def main() -> None:
         optimizer=optim.adam(1e-3, clip_norm=1.0),
         agent=agent,
         config=SebulbaConfig(
-            num_actor_cores=2 if len(jax.devices()) > 1 else 1,
-            actor_batch_size=16,
-            trajectory_length=12,
+            num_actor_cores=actor_cores,
+            actor_batch_size=actor_batch,
+            trajectory_length=args.trajectory,
             learner_microbatches=args.microbatches,  # the paper's trick
         ),
     )
-    out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=args.frames,
-                  log_every=10)
+    out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=10,
+                  checkpoint_dir=args.checkpoint_dir,
+                  checkpoint_every=args.checkpoint_every)
     print(
         f"\n{out['frames']:,} frames, {out['fps']:,.0f} FPS "
         f"(search-based acting), mean return {out['mean_return']:.2f}"

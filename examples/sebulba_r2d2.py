@@ -84,6 +84,10 @@ def main() -> None:
                     help="linearly anneal the PER importance exponent "
                          "(beta) to 1.0 over this many learner updates "
                          "(0 keeps it fixed)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist param_version-stamped checkpoints here")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint every N learner updates")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -135,8 +139,9 @@ def main() -> None:
         config=config,
         agent=RecurrentReplayImpalaAgent(net, config),
     )
-    out = seb.run(jax.random.key(0), (16, 16, 1), total_frames=args.frames,
-                  log_every=25)
+    out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=25,
+                  checkpoint_dir=args.checkpoint_dir,
+                  checkpoint_every=args.checkpoint_every)
     print(
         f"\n{out['frames']:,} frames in {out['seconds']:.1f}s "
         f"-> {out['fps']:,.0f} FPS, {out['updates']} updates, "

@@ -1,8 +1,14 @@
+"""Agent zoo — every class here implements the canonical ``repro.api``
+agent protocol and declares its capabilities via ``AgentSpec`` (see
+ARCHITECTURE.md §Protocol for the capability matrix)."""
+
 from repro.agents.actor_critic import (  # noqa: F401
     BatchedMLPActorCritic,
     MLPActorCritic,
 )
-from repro.agents.impala import ConvActorCritic  # noqa: F401
+from repro.agents.impala import ConvActorCritic, ImpalaAgent  # noqa: F401
+from repro.agents.muzero import MuZeroAgent, MuZeroConfig  # noqa: F401
+from repro.agents.ppo import PPOAgent, PPOConfig  # noqa: F401
 from repro.agents.recurrent import (  # noqa: F401
     RecurrentConvActorCritic,
     RecurrentImpalaAgent,

@@ -1,6 +1,12 @@
 """Small MLP actor-critic network for Anakin (grid-world scale, as in the
 paper's Colab demo).  Operates on a SINGLE observation (no batch dim) —
 Anakin vmaps it across the per-core environment batch.
+
+These are *networks*, not agents: Anakin consumes them directly (its loss
+is the differentiated env unroll), while Sebulba mounts them behind a
+``repro.api`` agent — ``ImpalaAgent(BatchedMLPActorCritic(...), cfg)`` is
+the vector-obs Sebulba configuration (registered as ``actor_critic`` in
+``repro.api.registry``).
 """
 
 from __future__ import annotations

@@ -1,9 +1,14 @@
-"""IMPALA-style conv actor-critic network for Sebulba.
+"""IMPALA for Sebulba: the conv actor-critic network and the V-trace agent.
 
 Batched apply (Sebulba actors do *batched* inference on an actor core —
 paper Fig. 3).  The torso is a small residual conv stack (the IMPALA
 "shallow" net scaled to HostPong frames); the paper's data-efficiency
 experiments scale channels/blocks, which `channels`/`blocks` expose.
+
+``ImpalaAgent`` is the default Sebulba agent and the reference
+implementation of the ``repro.api`` protocol (see repro/api/agent.py):
+feed-forward (empty () carry), on-policy (no importance weights, no
+priorities), no extras — the all-defaults ``AgentSpec``.
 """
 
 from __future__ import annotations
@@ -13,7 +18,9 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.api import ActAux, AgentSpec, LossAux
 from repro.param import ParamBuilder, fan_in_init, zeros_init
+from repro.rl import losses
 
 
 def _conv(params, x: jax.Array, stride: int = 1) -> jax.Array:
@@ -101,3 +108,75 @@ class ConvActorCritic:
         logits = x @ params["policy"]["w"] + params["policy"]["b"]
         values = (x @ params["value"]["w"] + params["value"]["b"])[:, 0]
         return logits, values
+
+
+class ImpalaAgent:
+    """Default Sebulba agent: batched-inference actor + V-trace learner.
+
+    Implements the canonical ``repro.api`` agent protocol with the
+    all-defaults capability spec — any network with ``init(rng,
+    obs_shape)`` / ``apply(params, obs) -> (logits, values)`` plugs in
+    (ConvActorCritic for frames, BatchedMLPActorCritic for vector obs).
+    """
+
+    spec = AgentSpec()  # feed-forward, on-policy, no extras
+
+    def __init__(self, network, config):
+        self.net = network
+        self.cfg = config  # a SebulbaConfig (loss coefficients + clips)
+
+    def init(self, rng, obs_shape):
+        return self.net.init(rng, obs_shape)
+
+    def initial_carry(self, batch: int):
+        return ()  # feed-forward: nothing to thread
+
+    def act(self, params, obs, rng, carry=()):
+        """Batched acting: (params, obs (B, ...), rng, () carry) ->
+        (actions (B,), ActAux(logp (B,), () extras), () carry).  Traced
+        inside Sebulba's fused donated act-step, so it must be jit-pure
+        and extras must be a fixed-shape pytree (its storage is
+        preallocated in the device trajectory ring via ``jax.eval_shape``).
+        """
+        logits, _ = self.net.apply(params, obs)
+        actions = jax.random.categorical(rng, logits)
+        logp = losses.log_prob(logits, actions)
+        return actions, ActAux(logp), ()
+
+    def _forward(self, params, traj):
+        """Run the net over a trajectory batch -> (logits (B,T,A),
+        values (B,T), bootstrap values (B,)).  Shared by the on-policy and
+        replay losses so the flatten/bootstrap plumbing exists once."""
+        B, T = traj.actions.shape
+        obs_flat = jax.tree.map(
+            lambda o: o.reshape((B * T,) + o.shape[2:]), traj.obs
+        )
+        logits, values = self.net.apply(params, obs_flat)
+        logits = logits.reshape(B, T, -1)
+        values = values.reshape(B, T)
+        _, bootstrap = self.net.apply(params, traj.bootstrap_obs)
+        return logits, values, bootstrap
+
+    @staticmethod
+    def _metrics(out) -> dict:
+        return {
+            "loss": out.total, "pg": out.pg, "value": out.value,
+            "entropy": out.entropy, "rho": out.mean_rho,
+        }
+
+    def loss(self, params, traj, weights=None):
+        if weights is not None:
+            raise ValueError(
+                "ImpalaAgent is on-policy (AgentSpec.replay=False) and "
+                "does not apply importance weights; use ReplayImpalaAgent "
+                "for weighted replay losses"
+            )
+        cfg = self.cfg
+        logits, values, bootstrap = self._forward(params, traj)
+        out = losses.impala_loss(
+            logits, values, traj.actions, traj.behaviour_logp,
+            traj.rewards, traj.discounts, bootstrap,
+            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
+            clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
+        )
+        return out.total, LossAux(self._metrics(out))

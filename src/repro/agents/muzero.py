@@ -5,9 +5,11 @@ Representation / dynamics / prediction MLPs + the pure-JAX MCTS
 unrolled value/reward/policy losses, no Reanalyse — matching the paper's
 "MuZero (no Reanalyse)") for learning.
 
-Implements the Sebulba *agent* interface (see repro/core/sebulba.py):
-    act(params, obs, rng)   -> (actions, extras)  [runs MCTS on actor cores]
-    loss(params, trajectory) -> (scalar, metrics)
+Implements the canonical ``repro.api`` agent protocol with
+``AgentSpec(extras_keys=("visit_probs",))``: acting runs MCTS on the actor
+cores and emits the (B, A) visit distribution as the named trajectory
+extra the K-step unrolled loss trains the policy head against — the same
+channel a future MuZero-reanalyze worker reads back out of replay.
 """
 
 from __future__ import annotations
@@ -19,6 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import ActAux, AgentSpec, LossAux
 from repro.param import ParamBuilder, fan_in_init, zeros_init
 from repro.rl import returns as rets
 from repro.rl.mcts import mcts_search
@@ -96,6 +99,8 @@ class MuZeroNets:
 class MuZeroAgent:
     """Sebulba agent: MCTS acting + K-step unrolled MuZero loss."""
 
+    spec = AgentSpec(extras_keys=("visit_probs",))
+
     def __init__(self, num_actions: int, cfg: MuZeroConfig = MuZeroConfig()):
         self.cfg = cfg
         self.num_actions = num_actions
@@ -104,12 +109,16 @@ class MuZeroAgent:
     def init(self, rng: jax.Array, obs_shape):
         return self.nets.init(rng, obs_shape)
 
+    def initial_carry(self, batch: int):
+        return ()  # the MCTS tree is rebuilt per step; no carried state
+
     # -- acting (runs on actor cores, batched) -------------------------------
 
-    def act(self, params, obs, rng):
+    def act(self, params, obs, rng, carry=()):
         """MCTS acting.  Traced inside Sebulba's fused donated act-step;
-        the (B, A) visit-probability extras get a preallocated (B, T, A)
-        slot in the device trajectory ring via ``jax.eval_shape``."""
+        the (B, A) ``visit_probs`` extra (declared in the AgentSpec) gets
+        a preallocated (B, T, A) slot in the device trajectory ring via
+        ``jax.eval_shape``."""
         out = mcts_search(
             params, obs, rng,
             representation=self.nets.representation,
@@ -125,12 +134,19 @@ class MuZeroAgent:
         # (the MuZero policy target)
         p = jnp.take_along_axis(out.visit_probs, out.action[:, None], axis=-1)
         logp = jnp.log(jnp.maximum(p[:, 0], 1e-9))
-        return out.action, logp, out.visit_probs
+        return out.action, ActAux(logp, {"visit_probs": out.visit_probs}), ()
 
     # -- learning (runs on learner cores, per shard) -----------------------
 
-    def loss(self, params, traj):
-        """traj.extras holds the MCTS visit distributions (B, T, A)."""
+    def loss(self, params, traj, weights=None):
+        """``traj.extras["visit_probs"]`` holds the MCTS visit
+        distributions (B, T, A) recorded by act."""
+        if weights is not None:
+            raise ValueError(
+                "MuZeroAgent is on-policy (AgentSpec.replay=False) and "
+                "does not apply importance weights; a reanalyze variant "
+                "would declare AgentSpec(replay=True)"
+            )
         cfg = self.cfg
         B, T = traj.actions.shape
         K = min(cfg.unroll_steps, T - 1)
@@ -158,7 +174,7 @@ class MuZeroAgent:
         for k in range(K):
             logits, v = jax.vmap(nets.prediction, in_axes=(None, 0))(params, h)
             pi_target = jax.lax.dynamic_slice_in_dim(
-                traj.extras, k, S, axis=1
+                traj.extras["visit_probs"], k, S, axis=1
             ).reshape(B * S, -1)
             v_target = jax.lax.dynamic_slice_in_dim(
                 targets, k, S, axis=1
@@ -187,4 +203,4 @@ class MuZeroAgent:
             "loss": total, "pi": total_pi / K, "value": total_v / K,
             "reward_pred": total_r / K,
         }
-        return total, metrics
+        return total, LossAux(metrics)

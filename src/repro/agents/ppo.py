@@ -14,6 +14,7 @@ import dataclasses
 
 import jax
 
+from repro.api import ActAux, AgentSpec, LossAux
 from repro.data.trajectory import Trajectory
 from repro.rl import losses
 
@@ -27,6 +28,8 @@ class PPOConfig:
 
 
 class PPOAgent:
+    spec = AgentSpec()  # feed-forward, on-policy, no extras
+
     def __init__(self, network, config: PPOConfig = PPOConfig()):
         self.net = network
         self.cfg = config
@@ -34,16 +37,24 @@ class PPOAgent:
     def init(self, rng, obs_shape):
         return self.net.init(rng, obs_shape)
 
-    def act(self, params, obs, rng):
+    def initial_carry(self, batch: int):
+        return ()
+
+    def act(self, params, obs, rng, carry=()):
         """Batched acting; traced inside Sebulba's fused donated act-step
         (must be jit-pure; extras must be a fixed-shape pytree — storage
         for them is preallocated in the device trajectory ring)."""
         logits, _ = self.net.apply(params, obs)
         actions = jax.random.categorical(rng, logits)
         logp = losses.log_prob(logits, actions)
-        return actions, logp, ()
+        return actions, ActAux(logp), ()
 
-    def loss(self, params, traj: Trajectory):
+    def loss(self, params, traj: Trajectory, weights=None):
+        if weights is not None:
+            raise ValueError(
+                "PPOAgent is on-policy (AgentSpec.replay=False) and does "
+                "not apply importance weights"
+            )
         cfg = self.cfg
         B, T = traj.actions.shape
         obs_flat = jax.tree.map(
@@ -63,4 +74,4 @@ class PPOAgent:
             "loss": out.total, "pg": out.pg, "value": out.value,
             "entropy": out.entropy, "clip_frac": out.clip_frac,
         }
-        return out.total, metrics
+        return out.total, LossAux(metrics)

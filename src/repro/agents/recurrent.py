@@ -32,10 +32,11 @@ Three pieces of R2D2 live here; the plumbing they need is in
     remaining T-K steps from the refreshed carry.  Gradients w.r.t. the
     burn-in window are exactly zero.
 
-Agent protocol (what Sebulba keys on): ``initial_carry(batch)`` marks an
-agent as recurrent, ``act(params, obs, rng, carry)`` returns a 4-tuple
-ending in the new carry.  Feed-forward agents keep the 3-arg protocol and
-are untouched.
+Agent protocol (``repro.api``): these agents declare
+``AgentSpec(recurrent=True)`` — the runner threads (and stores, and
+episode-resets) the carry their canonical ``act(params, obs, rng, carry)``
+returns.  The replay variant additionally declares ``replay=True`` (PER
+importance weights in, per-sequence TD priorities out).
 """
 
 from __future__ import annotations
@@ -46,8 +47,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.agents.impala import apply_conv_torso, init_conv_torso
-from repro.core.sebulba import ImpalaAgent
+from repro.agents.impala import ImpalaAgent, apply_conv_torso, init_conv_torso
+from repro.api import ActAux, AgentSpec, LossAux
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref, rglru_step_ref
 from repro.param import ParamBuilder, constant_init, fan_in_init, zeros_init
@@ -232,6 +233,8 @@ class RecurrentImpalaAgent:
     ``SebulbaConfig`` (``burn_in`` selects the gradient-free prefix).
     """
 
+    spec = AgentSpec(recurrent=True)
+
     def __init__(self, network: _RecurrentActorCritic, config):
         self.net = network
         self.cfg = config
@@ -239,19 +242,20 @@ class RecurrentImpalaAgent:
     def init(self, rng, obs_shape):
         return self.net.init(rng, obs_shape)
 
-    def initial_carry(self, batch_size: int):
-        """Zeroed RG-LRU state — the marker Sebulba's carry protocol keys
-        on.  Episode-boundary resets restore exactly this value."""
-        return self.net.initial_state(batch_size)
+    def initial_carry(self, batch: int):
+        """Zeroed RG-LRU state (the ``AgentSpec(recurrent=True)``
+        contract).  Episode-boundary resets restore exactly this value."""
+        return self.net.initial_state(batch)
 
     def act(self, params, obs, rng, carry):
-        """(params, obs (B, ...), rng, carry (B, W)) -> (actions, log-prob,
-        extras, new carry).  Traced inside Sebulba's fused donated
-        act-step; the carry it receives is already episode-reset."""
+        """(params, obs (B, ...), rng, carry (B, W)) -> (actions,
+        ActAux(log-prob, extras), new carry).  Traced inside Sebulba's
+        fused donated act-step; the carry it receives is already
+        episode-reset."""
         logits, _, carry = self.net.apply_step(params, obs, carry)
         actions = jax.random.categorical(rng, logits)
         logp = losses.log_prob(logits, actions)
-        return actions, logp, (), carry
+        return actions, ActAux(logp), carry
 
     @staticmethod
     def _reset_mask(discounts: jax.Array) -> jax.Array:
@@ -311,7 +315,13 @@ class RecurrentImpalaAgent:
     # packed on-device accumulator layout cannot silently diverge
     _metrics = staticmethod(ImpalaAgent._metrics)
 
-    def loss(self, params, traj):
+    def loss(self, params, traj, weights=None):
+        if weights is not None:
+            raise ValueError(
+                "RecurrentImpalaAgent is on-policy (AgentSpec.replay="
+                "False) and does not apply importance weights; use "
+                "RecurrentReplayImpalaAgent for weighted replay losses"
+            )
         cfg = self.cfg
         logits, values, bootstrap = self._unroll(params, traj)
         actions, blogp, rewards, discounts = self._loss_window(traj)
@@ -320,21 +330,22 @@ class RecurrentImpalaAgent:
             entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
             clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
         )
-        return out.total, self._metrics(out)
+        return out.total, LossAux(self._metrics(out))
 
 
 class RecurrentReplayImpalaAgent(RecurrentImpalaAgent):
     """Off-policy (replay) recurrent agent — true R2D2 on Sebulba.
 
-    Same actor as ``RecurrentImpalaAgent``; the learner protocol is the
-    replay one (``loss(params, traj, weights) -> (total, (metrics,
-    per_seq_td))``): PER importance weights correct the sampling bias,
-    V-trace the policy lag, and the per-sequence TD magnitudes (computed
-    over the post-burn-in window only — burn-in steps are state refresh,
-    not training signal) go back into the ring as fresh priorities.
+    Same actor as ``RecurrentImpalaAgent``; the declared capabilities add
+    ``replay=True``: ``loss(params, traj, weights)`` applies the PER
+    importance weights (sampling-bias correction; V-trace handles the
+    policy lag) and returns per-sequence TD magnitudes as
+    ``LossAux.priorities`` (computed over the post-burn-in window only —
+    burn-in steps are state refresh, not training signal), which go back
+    into the ring as fresh priorities.
     """
 
-    replay_protocol = True  # see ReplayImpalaAgent: aux = (metrics, td)
+    spec = AgentSpec(recurrent=True, replay=True)
 
     def loss(self, params, traj, weights=None):
         cfg = self.cfg
@@ -346,4 +357,4 @@ class RecurrentReplayImpalaAgent(RecurrentImpalaAgent):
             entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
             clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
         )
-        return out.total, (self._metrics(out), out.per_seq_td)
+        return out.total, LossAux(self._metrics(out), out.per_seq_td)

@@ -5,26 +5,25 @@ sampling), but the learner consumes *mixed* online/replay batches: V-trace
 corrects the policy lag of replayed trajectories via its rho/c clipping
 (exactly why the paper pairs Sebulba with V-trace), and PER importance
 weights correct the prioritized-sampling bias.  The loss additionally
-returns per-sequence TD magnitudes, which Sebulba writes back into the
-replay ring as fresh priorities.
+returns per-sequence TD magnitudes as ``LossAux.priorities``, which
+Sebulba writes back into the replay ring as fresh priorities.
 
-The off-policy learner protocol is ``loss(params, traj, weights) ->
-(total, (metrics, per_seq_priority))`` — any agent implementing it (e.g. a
-future MuZero-with-reanalyze) plugs into ``Sebulba`` replay mode unchanged.
+Capability declaration (``repro.api``): ``AgentSpec(replay=True)`` — the
+canonical ``loss(params, traj, weights)`` applies the weights
+(``weights=None`` means unweighted, e.g. the uniform-sampling mode) and
+emits priorities.  Any agent declaring the same spec (a future
+MuZero-with-reanalyze) plugs into Sebulba replay mode unchanged.
 """
 
 from __future__ import annotations
 
-from repro.core.sebulba import ImpalaAgent
+from repro.agents.impala import ImpalaAgent
+from repro.api import AgentSpec, LossAux
 from repro.rl import losses
 
 
 class ReplayImpalaAgent(ImpalaAgent):
-    # loss aux is (metrics, per_seq_priorities) — only Sebulba's replay
-    # mode understands it; the on-policy learner guard keys on this marker
-    # (an isinstance check would miss the recurrent replay agent, which
-    # shares the protocol but not this base class)
-    replay_protocol = True
+    spec = AgentSpec(replay=True)
 
     def loss(self, params, traj, weights=None):
         cfg = self.cfg
@@ -36,4 +35,4 @@ class ReplayImpalaAgent(ImpalaAgent):
             entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
             clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
         )
-        return out.total, (self._metrics(out), out.per_seq_td)
+        return out.total, LossAux(self._metrics(out), out.per_seq_td)

@@ -1,0 +1,36 @@
+"""repro.api — the unified Podracer agent/runner protocol.
+
+One typed agent contract (``Agent``/``AgentSpec``, repro/api/agent.py) and
+one runner surface (``Runner``/``make_result``/checkpoint helpers,
+repro/api/runner.py) front every architecture in the repo.  See
+ARCHITECTURE.md §Protocol for the capability matrix and migration notes.
+"""
+
+from repro.api.agent import (  # noqa: F401
+    ActAux,
+    Agent,
+    AgentSpec,
+    LossAux,
+    is_legacy_adapter,
+    resolve_agent,
+    validate_agent,
+    validate_extras,
+)
+from repro.api.registry import (  # noqa: F401
+    AgentFixture,
+    make_agent,
+    register_agent,
+    registered_agents,
+)
+from repro.api.runner import (  # noqa: F401
+    RESULT_KEYS,
+    CheckpointPolicy,
+    Runner,
+    checkpoint_path,
+    latest_checkpoint,
+    make_result,
+    restore_checkpoint,
+    restore_for_fit,
+    save_checkpoint,
+    updates_for_frames,
+)

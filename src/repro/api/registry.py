@@ -1,0 +1,136 @@
+"""Registry of the repo's agents, keyed by name (`repro.api`).
+
+Exists so protocol tooling — the conformance suite in
+tests/test_api_protocol.py, future CLI entry points — can enumerate every
+agent the repo ships and hold each to the canonical contract without
+maintaining a parallel list by hand.  Factories build LAPTOP-SCALE
+fixtures (tiny nets, tiny obs) and import lazily, so importing
+``repro.api`` never drags in the agent zoo.
+
+Each factory returns an ``AgentFixture``: the agent (with its declared
+``AgentSpec``), the observation shape its ``init`` expects, and the number
+of actions — everything a generic harness needs to init params, act, and
+build a synthetic trajectory for the loss contract.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+
+class AgentFixture(NamedTuple):
+    agent: Any
+    obs_shape: tuple[int, ...]
+    num_actions: int
+
+
+_REGISTRY: dict[str, Callable[[], AgentFixture]] = {}
+
+
+def register_agent(name: str):
+    """Decorator: register a zero-arg AgentFixture factory under ``name``."""
+
+    def deco(factory: Callable[[], AgentFixture]):
+        if name in _REGISTRY:
+            raise ValueError(f"agent {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def registered_agents() -> tuple[str, ...]:
+    """All registered agent names, sorted (stable test parametrization)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def make_agent(name: str) -> AgentFixture:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown agent {name!r}; registered: {registered_agents()}"
+        ) from None
+    return factory()
+
+
+def _sebulba_config(**overrides):
+    from repro.core.sebulba import SebulbaConfig
+
+    kwargs = dict(
+        num_actor_cores=1, threads_per_actor_core=1, actor_batch_size=4,
+        trajectory_length=5,
+    )
+    kwargs.update(overrides)
+    return SebulbaConfig(**kwargs)
+
+
+@register_agent("impala")
+def _impala() -> AgentFixture:
+    from repro.agents.impala import ConvActorCritic, ImpalaAgent
+
+    net = ConvActorCritic(3, channels=(8,), blocks=1, hidden=32)
+    return AgentFixture(ImpalaAgent(net, _sebulba_config()), (8, 8, 1), 3)
+
+
+@register_agent("actor_critic")
+def _actor_critic() -> AgentFixture:
+    """The vector-obs MLP actor-critic, run through the IMPALA agent (the
+    network itself is runner-agnostic; Anakin vmaps its single-obs twin)."""
+    from repro.agents.actor_critic import BatchedMLPActorCritic
+    from repro.agents.impala import ImpalaAgent
+
+    net = BatchedMLPActorCritic(4, hidden=(16,))
+    return AgentFixture(ImpalaAgent(net, _sebulba_config()), (4,), 4)
+
+
+@register_agent("ppo")
+def _ppo() -> AgentFixture:
+    from repro.agents.actor_critic import BatchedMLPActorCritic
+    from repro.agents.ppo import PPOAgent
+
+    return AgentFixture(PPOAgent(BatchedMLPActorCritic(4, hidden=(16,))),
+                        (4,), 4)
+
+
+@register_agent("replay_impala")
+def _replay_impala() -> AgentFixture:
+    from repro.agents.actor_critic import BatchedMLPActorCritic
+    from repro.agents.replay_impala import ReplayImpalaAgent
+
+    net = BatchedMLPActorCritic(4, hidden=(16,))
+    return AgentFixture(ReplayImpalaAgent(net, _sebulba_config()), (4,), 4)
+
+
+@register_agent("recurrent_impala")
+def _recurrent_impala() -> AgentFixture:
+    from repro.agents.recurrent import (
+        RecurrentImpalaAgent,
+        RecurrentMLPActorCritic,
+    )
+
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=8)
+    return AgentFixture(RecurrentImpalaAgent(net, _sebulba_config()), (4,), 4)
+
+
+@register_agent("recurrent_replay_impala")
+def _recurrent_replay_impala() -> AgentFixture:
+    from repro.agents.recurrent import (
+        RecurrentMLPActorCritic,
+        RecurrentReplayImpalaAgent,
+    )
+
+    net = RecurrentMLPActorCritic(4, hidden=(16,), rnn_width=8)
+    return AgentFixture(
+        RecurrentReplayImpalaAgent(net, _sebulba_config(burn_in=1)), (4,), 4
+    )
+
+
+@register_agent("muzero")
+def _muzero() -> AgentFixture:
+    from repro.agents.muzero import MuZeroAgent, MuZeroConfig
+
+    agent = MuZeroAgent(3, MuZeroConfig(
+        hidden_dim=16, num_simulations=4, max_depth=3, unroll_steps=2
+    ))
+    return AgentFixture(agent, (6, 6, 1), 3)

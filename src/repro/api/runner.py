@@ -1,0 +1,282 @@
+"""The unified Podracer runner surface (`repro.api`).
+
+Both Podracer architectures front the same training contract:
+
+    runner.fit(rng, total_frames, *, log_every=0,
+               checkpoint_dir=None, checkpoint_every=0,
+               restore_from=None) -> result dict
+
+and every training entry point — on-policy Sebulba, off-policy (replay)
+Sebulba, Anakin — returns ONE documented result schema (``RESULT_KEYS``).
+Counters a given architecture does not have (Anakin never publishes params
+or queues trajectories) are reported as 0, never missing, so downstream
+tooling reads one shape.
+
+Result schema (``make_result`` fills the defaults and rejects unknown
+keys):
+
+    params             final parameters (device pytree)
+    updates            learner/optimizer updates applied
+    frames             env frames generated
+    fps                frames / seconds
+    seconds            wall-clock of the fit
+    param_version      logical params version (Sebulba: publish version the
+                       actors observe; Anakin: update count)
+    publishes_sent     actor-core param transfers dispatched (Sebulba)
+    publishes_skipped  overlap-aware publish skips (Sebulba)
+    put_blocked        full-queue retry intervals on the actor side
+    traj_dropped       trajectories dropped at shutdown
+    replay_size        filled replay slots at exit (off-policy Sebulba)
+    checkpoints_saved  checkpoints written by the runner
+    mean_return        mean episode return (NaN when untracked)
+    metrics            drained learner metrics (means since last drain)
+
+Checkpointing: the runner owns persistence so examples stop hand-rolling
+it.  Every ``checkpoint_every`` updates (and once more at the end of a
+fit) the runner writes a ``param_version``-stamped npz via
+``repro.checkpoint``; ``restore_from`` accepts a checkpoint file or a
+directory (the latest stamp wins).  The save syncs params to host, so it
+costs one device->host pull per boundary — like metric drains, it never
+touches the steady-state donated update loop.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import re
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro import checkpoint
+
+PyTree = Any
+
+RESULT_KEYS = (
+    "params",
+    "updates",
+    "frames",
+    "fps",
+    "seconds",
+    "param_version",
+    "publishes_sent",
+    "publishes_skipped",
+    "put_blocked",
+    "traj_dropped",
+    "replay_size",
+    "checkpoints_saved",
+    "mean_return",
+    "metrics",
+)
+
+_COUNTER_DEFAULTS = {
+    "param_version": 0,
+    "publishes_sent": 0,
+    "publishes_skipped": 0,
+    "put_blocked": 0,
+    "traj_dropped": 0,
+    "replay_size": 0,
+    "checkpoints_saved": 0,
+}
+
+
+@runtime_checkable
+class Runner(Protocol):
+    """Anything that trains an Agent to a frame budget — Sebulba, Anakin,
+    and whatever the next Podracer is.  ``fit`` owns the whole loop:
+    initialization (or ``restore_from``), training, periodic checkpoints,
+    and the unified result dict."""
+
+    def fit(
+        self,
+        rng: jax.Array,
+        total_frames: int,
+        *,
+        log_every: int = 0,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
+        restore_from: str | None = None,
+    ) -> dict: ...
+
+
+def make_result(
+    *,
+    params: PyTree,
+    updates: int,
+    frames: int,
+    seconds: float,
+    metrics: dict,
+    mean_return: float = float("nan"),
+    **counters: int,
+) -> dict:
+    """Assemble the unified runner result.  Unset counters default to 0;
+    a counter outside the schema is a programming error and raises."""
+    unknown = set(counters) - set(_COUNTER_DEFAULTS)
+    if unknown:
+        raise TypeError(f"unknown result counters: {sorted(unknown)}")
+    out = {
+        "params": params,
+        "updates": int(updates),
+        "frames": int(frames),
+        "fps": float(frames) / seconds if seconds > 0 else 0.0,
+        "seconds": float(seconds),
+        "mean_return": float(mean_return),
+        "metrics": dict(metrics),
+    }
+    for key, default in _COUNTER_DEFAULTS.items():
+        out[key] = int(counters.get(key, default))
+    return out
+
+
+# ------------------------------------------------------------ checkpoints
+
+# \d+ (not \d{8}): the zero-padded stamp is min-width, so versions past
+# 10^8 write 9+ digit names — they must stay visible to restore
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+
+
+def checkpoint_path(directory: str, param_version: int) -> str:
+    return os.path.join(directory, f"ckpt_{param_version:08d}.npz")
+
+
+def save_checkpoint(
+    directory: str,
+    params: PyTree,
+    *,
+    param_version: int,
+    updates: int = 0,
+    frames: int = 0,
+) -> str:
+    """Write a ``param_version``-stamped checkpoint (atomic npz) and
+    return its path.  The stamp names the file, so a directory of
+    checkpoints sorts by version and ``latest_checkpoint`` needs no
+    sidecar index."""
+    path = checkpoint_path(directory, param_version)
+    checkpoint.save(path, {"params": params, "meta": _meta(
+        param_version=param_version, updates=updates, frames=frames
+    )})
+    return path
+
+
+def _meta(**values: int) -> dict:
+    return {k: np.asarray(v, np.int64) for k, v in values.items()}
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    """Highest-``param_version`` checkpoint in ``directory`` (None if the
+    directory is missing or holds no checkpoints).  Compared numerically —
+    lexical order breaks once stamps outgrow the 8-digit zero padding."""
+    if not os.path.isdir(directory):
+        return None
+    best, best_version = None, -1
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m and int(m.group(1)) > best_version:
+            best, best_version = name, int(m.group(1))
+    return os.path.join(directory, best) if best else None
+
+
+def restore_checkpoint(path: str, params_like: PyTree) -> tuple[PyTree, dict]:
+    """Restore ``(params, meta)`` from a checkpoint file, or from the
+    latest checkpoint when ``path`` is a directory.  ``params_like``
+    supplies the target structure (shapes validated by repro.checkpoint);
+    ``meta`` holds the int stamps (param_version, updates, frames)."""
+    if os.path.isdir(path):
+        latest = latest_checkpoint(path)
+        if latest is None:
+            raise FileNotFoundError(f"no ckpt_*.npz checkpoints in {path}")
+        path = latest
+    like = {
+        "params": params_like,
+        "meta": _meta(param_version=0, updates=0, frames=0),
+    }
+    tree = checkpoint.restore(path, like)
+    meta = {k: int(v) for k, v in tree["meta"].items()}
+    return tree["params"], meta
+
+
+def restore_for_fit(
+    restore_from: str, params_like: PyTree, opt, sharding
+) -> tuple[PyTree, PyTree, dict]:
+    """The shared runner warm-start: restore params from a checkpoint (or
+    a directory's latest), place them on ``sharding``, and build a FRESH
+    optimizer state for them (research-checkpoint semantics — only params
+    persist).  Returns ``(params, opt_state, meta)``; the caller
+    continues its version line from ``meta`` so post-restore stamps sort
+    above the restored one."""
+    restored, meta = restore_checkpoint(restore_from, params_like)
+    params = jax.device_put(restored, sharding)
+    opt_state = jax.device_put(opt.init(params), sharding)
+    return params, opt_state, meta
+
+
+class CheckpointPolicy:
+    """Host-side boundary logic shared by the runners: save every
+    ``every`` updates plus a final save, count what was written, and keep
+    the donated update loop untouched in between.  Inert (zero branches
+    taken) when ``directory`` is None or ``every`` is 0 — except that a
+    bare ``directory`` still gets the final save, so ``fit(...,
+    checkpoint_dir=...)`` alone persists the result."""
+
+    def __init__(self, directory: str | None, every: int,
+                 base_updates: int = 0):
+        if every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if every and not directory:
+            raise ValueError(
+                "checkpoint_every requires checkpoint_dir: the runner "
+                "needs somewhere to write the stamped checkpoints"
+            )
+        self.directory = directory
+        self.every = every
+        self.saved = 0
+        self._last_version = None
+        # seed the boundary from the restored update count, so a resumed
+        # fit's first save lands at the NEXT boundary instead of
+        # re-writing a near-duplicate of the just-restored params
+        self._base_updates = base_updates
+        self._last_boundary = base_updates // every if every else 0
+
+    def _save(self, params, *, param_version: int, updates: int,
+              frames: int) -> None:
+        save_checkpoint(
+            self.directory, params, param_version=param_version,
+            updates=updates, frames=frames,
+        )
+        self.saved += 1
+        self._last_version = param_version
+
+    def maybe_save(self, params, *, param_version: int, updates: int,
+                   frames: int) -> None:
+        """Call whenever the update count advances (by one — Sebulba — or
+        by a compiled block — Anakin); saves once per crossed ``every``
+        boundary.  Cheap int check unless it fires."""
+        if not (self.directory and self.every):
+            return
+        boundary = updates // self.every
+        if boundary > self._last_boundary:
+            self._last_boundary = boundary
+            self._save(params, param_version=param_version, updates=updates,
+                       frames=frames)
+
+    def final_save(self, params, *, param_version: int, updates: int,
+                   frames: int) -> None:
+        """End-of-fit save, skipped when the boundary save already caught
+        this exact version — or when THIS fit trained nothing (``updates``
+        is cumulative; a resumed fit that did zero new updates would
+        otherwise re-write the just-restored params)."""
+        if (
+            self.directory
+            and updates > self._base_updates
+            and self._last_version != param_version
+        ):
+            self._save(params, param_version=param_version, updates=updates,
+                       frames=frames)
+
+
+def updates_for_frames(total_frames: int, frames_per_update: int) -> int:
+    """Minimum updates covering ``total_frames`` (ceil division) — shared
+    by runners that step in fixed frame chunks (Anakin)."""
+    return max(1, math.ceil(total_frames / frames_per_update))

@@ -30,13 +30,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import optim
+from repro import api, optim
 from repro.compat import shard_map
 from repro.rl import losses
 
@@ -250,6 +251,96 @@ class Anakin:
         for _ in range(num_calls):
             state, metrics = self._run(state)
         return state, metrics
+
+    def fit(
+        self,
+        rng: jax.Array,
+        total_frames: int,
+        *,
+        log_every: int = 0,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
+        restore_from: str | None = None,
+    ) -> dict:
+        """The unified ``repro.api.Runner`` entry point: init (or
+        ``restore_from``), run enough compiled blocks to cover
+        ``total_frames`` env steps, checkpoint every ``checkpoint_every``
+        updates, and return the unified Podracer result schema.
+
+        Counters that only exist on decomposed architectures (publishes,
+        queue back-pressure, replay) are reported as 0 — Anakin has one
+        program and no transport.  ``param_version`` is the update count:
+        every optimizer step is a new logical params version, there being
+        no publish step for versions to lag behind (cumulative across
+        ``restore_from``, so resumed stamps keep sorting above the
+        restored checkpoint's).  ``log_every`` is in
+        learner updates, rounded up to the compiled-block granularity
+        (``iterations_per_call`` updates per host visit — metrics are
+        means over each block, already reduced on device).
+        """
+        cfg = self.cfg
+        state = self.init_state(rng)
+        base_updates = base_frames = 0
+        if restore_from is not None:
+            params, opt_state, meta = api.restore_for_fit(
+                restore_from, state.params, self.opt,
+                NamedSharding(self.mesh, P()),
+            )
+            state = state._replace(params=params, opt_state=opt_state)
+            # continue the checkpoint's version line so new stamps sort
+            # above the restored one (see Sebulba.run)
+            base_updates = meta["param_version"]
+            base_frames = meta["frames"]
+        ckpt = api.CheckpointPolicy(
+            checkpoint_dir, checkpoint_every, base_updates=base_updates
+        )
+        frames_per_call = self.steps_per_call
+        num_calls = api.updates_for_frames(total_frames, frames_per_call)
+        metrics = None
+        # round UP to block granularity, as documented: log_every=150 with
+        # 100-update blocks logs every 200 updates, not every 100
+        calls_per_log = max(1, -(-log_every // cfg.iterations_per_call))
+        t0 = time.time()
+        for call in range(num_calls):
+            state, metrics = self._run(state)
+            updates = base_updates + (call + 1) * cfg.iterations_per_call
+            ckpt.maybe_save(
+                state.params, param_version=updates, updates=updates,
+                frames=base_frames + (call + 1) * frames_per_call,
+            )
+            if log_every and (call + 1) % calls_per_log == 0:
+                drained = {k: float(v) for k, v in metrics.items()}
+                # both counters cumulative — `updates` already includes the
+                # restored base, so frames must too or resumed logs read
+                # as a frames-per-update collapse
+                print(
+                    f"update {updates} frames "
+                    f"{base_frames + (call + 1) * frames_per_call} " +
+                    " ".join(f"{k}={v:.3f}" for k, v in drained.items())
+                )
+        updates = num_calls * cfg.iterations_per_call
+        frames = num_calls * frames_per_call
+        ckpt.final_save(
+            state.params, param_version=base_updates + updates,
+            updates=base_updates + updates, frames=base_frames + frames,
+        )
+        dt = time.time() - t0
+        drained = (
+            {k: float(v) for k, v in metrics.items()} if metrics else {}
+        )
+        result = api.make_result(
+            params=state.params,
+            updates=updates,
+            frames=frames,
+            seconds=dt,
+            metrics=drained,
+            param_version=base_updates + updates,
+            checkpoints_saved=ckpt.saved,
+        )
+        # architecture-specific extra: the full donated AnakinState, so
+        # callers can keep stepping the compiled block where fit left off
+        result["state"] = state
+        return result
 
     @property
     def steps_per_call(self) -> int:

@@ -47,22 +47,28 @@ inside one fused ``shard_map`` step: insert -> sample -> weighted V-trace
 update -> priority write-back, with the ring buffers donated so nothing
 round-trips through the host.
 
-Recurrent agents (R2D2, repro/agents/recurrent.py): an agent that exposes
-``initial_carry(batch)`` and ``act(params, obs, rng, carry)`` gets its
-recurrent state threaded through the fused act-step (donated, reset on
-episode boundaries via the discount channel), the carry entering step 0 of
-each trajectory slice stored alongside it (``Trajectory.init_carry`` — the
+Agents plug in through the canonical ``repro.api`` protocol — ``init`` /
+``initial_carry`` / ``act(params, obs, rng, carry)`` / ``loss(params,
+traj, weights)`` with capabilities DECLARED on an ``AgentSpec``
+(``recurrent``, ``replay``, ``extras_keys``) and validated once at
+construction (``api.resolve_agent``), never sniffed from signatures at
+runtime.  Recurrent agents (R2D2, repro/agents/recurrent.py) get their
+carry threaded through the fused act-step (donated, reset on episode
+boundaries via the discount channel), the carry entering step 0 of each
+trajectory slice stored alongside it (``Trajectory.init_carry`` — the
 R2D2 "stored state", which rides the replay ring like any other leaf), and
 a learner-side burn-in (``SebulbaConfig.burn_in``) that re-unrolls the
 first K steps gradient-free to refresh the stale stored state before the
-V-trace loss.  Feed-forward agents keep the 3-arg ``act`` and an empty ()
-carry — zero extra leaves, bit-identical programs.  See ARCHITECTURE.md.
+V-trace loss.  Feed-forward agents declare no capabilities and thread the
+empty () carry — zero extra leaves, bit-identical programs.  The protocol
+costs the hot path nothing: the NamedTuple auxes flatten to the same
+leaves, so every donated jit traces to the pre-protocol program.  See
+ARCHITECTURE.md §Protocol.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import inspect
 import queue
 import threading
 import time
@@ -74,7 +80,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import optim
+from repro import api, optim
+# ImpalaAgent moved to repro/agents/impala.py with the repro.api redesign;
+# re-exported here for back-compat with pre-protocol imports.
+from repro.agents.impala import ImpalaAgent  # noqa: F401
 from repro.compat import shard_map
 from repro.configs.base import ReplayConfig
 from repro.core.topology import CoreSplit, split_devices
@@ -120,64 +129,6 @@ class SebulbaConfig:
     replay: ReplayConfig | None = None  # set -> off-policy (replay) mode
 
 
-class ImpalaAgent:
-    """Default Sebulba agent: batched-inference actor + V-trace learner.
-
-    Any object with the same three methods (init / act / loss) plugs into
-    Sebulba — MuZeroAgent (repro/agents/muzero.py) is the search-based one.
-    """
-
-    def __init__(self, network, config: "SebulbaConfig"):
-        self.net = network
-        self.cfg = config
-
-    def init(self, rng, obs_shape):
-        return self.net.init(rng, obs_shape)
-
-    def act(self, params, obs, rng):
-        """Batched acting: (params, obs (B, ...), rng) -> (actions (B,),
-        log-prob (B,), extras).  Traced inside Sebulba's fused donated
-        act-step, so it must be jit-pure and extras must be a fixed-shape
-        pytree (its storage is preallocated in the device trajectory ring
-        via ``jax.eval_shape``)."""
-        logits, _ = self.net.apply(params, obs)
-        actions = jax.random.categorical(rng, logits)
-        logp = losses.log_prob(logits, actions)
-        return actions, logp, ()
-
-    def _forward(self, params, traj: Trajectory):
-        """Run the net over a trajectory batch -> (logits (B,T,A),
-        values (B,T), bootstrap values (B,)).  Shared by the on-policy and
-        replay losses so the flatten/bootstrap plumbing exists once."""
-        B, T = traj.actions.shape
-        obs_flat = jax.tree.map(
-            lambda o: o.reshape((B * T,) + o.shape[2:]), traj.obs
-        )
-        logits, values = self.net.apply(params, obs_flat)
-        logits = logits.reshape(B, T, -1)
-        values = values.reshape(B, T)
-        _, bootstrap = self.net.apply(params, traj.bootstrap_obs)
-        return logits, values, bootstrap
-
-    @staticmethod
-    def _metrics(out) -> dict:
-        return {
-            "loss": out.total, "pg": out.pg, "value": out.value,
-            "entropy": out.entropy, "rho": out.mean_rho,
-        }
-
-    def loss(self, params, traj: Trajectory):
-        cfg = self.cfg
-        logits, values, bootstrap = self._forward(params, traj)
-        out = losses.impala_loss(
-            logits, values, traj.actions, traj.behaviour_logp,
-            traj.rewards, traj.discounts, bootstrap,
-            entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
-            clip_rho=cfg.clip_rho, clip_c=cfg.clip_c,
-        )
-        return out.total, self._metrics(out)
-
-
 class Sebulba:
     def __init__(
         self,
@@ -197,7 +148,14 @@ class Sebulba:
                 agent = ReplayImpalaAgent(network, config)
             else:
                 agent = ImpalaAgent(network, config)
-        self.agent = agent
+        # One protocol, validated once: signature conformance, the
+        # zero-carry invariant, and legacy-agent adaptation all live in
+        # repro.api — this class never sniffs arities or class markers.
+        self._agent_name = type(agent).__name__
+        self.agent, self.spec = api.resolve_agent(
+            agent, replay_hint=config.replay is not None
+        )
+        self._recurrent = self.spec.recurrent
         self.opt = optimizer
         self.env_factory = env_factory
         self.make_batched_env = make_batched_env
@@ -226,91 +184,30 @@ class Sebulba:
                     "update inserts the full online shard, and a ring "
                     "smaller than one insert would write duplicate slots"
                 )
-            # fail here, not in a jit trace on the first learner update.
-            # The fused step calls loss positionally, so only
-            # positional-capable parameters count (a keyword-only
-            # `*, weights` would still blow up inside the trace).
-            sig_params = inspect.signature(self.agent.loss).parameters
-            has_var_pos = any(
-                p.kind is inspect.Parameter.VAR_POSITIONAL
-                for p in sig_params.values()
-            )
-            n_pos = sum(
-                p.kind in (inspect.Parameter.POSITIONAL_ONLY,
-                           inspect.Parameter.POSITIONAL_OR_KEYWORD)
-                for p in sig_params.values()
-            )
-            if not has_var_pos and n_pos < 3:
+            # capability check, not an arity sniff: replay mode needs the
+            # declared replay contract (weights in, priorities out).
+            # Fail here, not in a jit trace on the first learner update.
+            if not self.spec.replay:
                 raise ValueError(
                     "replay mode needs agent.loss(params, trajectory, "
-                    "importance_weights) callable with three positional "
-                    f"arguments; {type(self.agent).__name__}.loss accepts "
-                    f"{n_pos}"
+                    "importance_weights) returning LossAux(metrics, "
+                    f"priorities); {self._agent_name} declares AgentSpec("
+                    "replay=False) — declare AgentSpec(replay=True) and "
+                    "emit per-sequence priorities for the write-back"
                 )
             self._replay = ShardedReplay(
                 self.learner_mesh, rcfg.capacity,
                 prioritized=rcfg.prioritized,
                 priority_exponent=rcfg.priority_exponent,
             )
-        elif getattr(self.agent, "replay_protocol", False):
+        elif self.spec.replay:
             raise ValueError(
-                f"{type(self.agent).__name__} requires SebulbaConfig."
-                "replay: its loss aux is (metrics, td_priorities), which "
-                "the on-policy learner would mis-treat as the metrics dict"
+                f"{self._agent_name} requires SebulbaConfig.replay: it "
+                "declares AgentSpec(replay=True) — its loss expects "
+                "importance weights and emits replay priorities the "
+                "on-policy learner has no ring to write back into"
             )
 
-        # ---- agent carry protocol (recurrent vs feed-forward) ----
-        # Recurrent agents expose initial_carry(batch) and act with a 4th
-        # positional carry arg; feed-forward agents keep the 3-arg act and
-        # an empty () carry threads through the fused step untouched (no
-        # leaves -> bit-identical XLA program).  Validate here, not in a
-        # jit trace on the first actor step.
-        self._recurrent = callable(getattr(self.agent, "initial_carry", None))
-        act_sig = inspect.signature(self.agent.act).parameters
-        pos_kinds = (inspect.Parameter.POSITIONAL_ONLY,
-                     inspect.Parameter.POSITIONAL_OR_KEYWORD)
-        # capable: can be filled positionally (defaults included) — what
-        # the recurrent 4-positional call needs.  required: default-less —
-        # what betrays a carry parameter on an unmarked agent (an optional
-        # 4th arg on a feed-forward agent is fine; it just never gets it).
-        n_act_capable = sum(p.kind in pos_kinds for p in act_sig.values())
-        n_act_required = sum(
-            p.kind in pos_kinds and p.default is inspect.Parameter.empty
-            for p in act_sig.values()
-        )
-        has_var_pos_act = any(
-            p.kind is inspect.Parameter.VAR_POSITIONAL
-            for p in act_sig.values()
-        )
-        if self._recurrent and not has_var_pos_act and n_act_capable < 4:
-            raise ValueError(
-                "recurrent agents (initial_carry present) must accept "
-                "act(params, obs, rng, carry); "
-                f"{type(self.agent).__name__}.act takes {n_act_capable} "
-                "positional arguments"
-            )
-        if not self._recurrent and n_act_required > 3:
-            raise ValueError(
-                f"{type(self.agent).__name__}.act requires "
-                f"{n_act_required} positional arguments but the agent has "
-                "no initial_carry; recurrent agents must expose "
-                "initial_carry(batch_size) so Sebulba knows to thread "
-                "(and store) a carry"
-            )
-        if self._recurrent:
-            # both reset mechanisms restore ZERO state: the actor's
-            # jnp.where against initial_carry, and the learner's
-            # decay-gate fold (a := 0), which mathematically zeroes the
-            # entering state.  A nonzero initial carry would silently
-            # diverge the two — reject it here.
-            for leaf in jax.tree.leaves(self.agent.initial_carry(1)):
-                if np.any(np.asarray(leaf) != 0):
-                    raise ValueError(
-                        "initial_carry must be all zeros: episode resets "
-                        "in the fused actor step and the learner's "
-                        "decay-gate reset fold (repro/agents/recurrent.py)"
-                        " both restore zero state"
-                    )
         if config.burn_in < 0:
             raise ValueError("burn_in must be >= 0")
         if config.burn_in:
@@ -445,6 +342,10 @@ class Sebulba:
         from the agent's initial state before acting.  The post-reset carry
         is what ``buffer_add`` snapshots at t == 0 — the R2D2 stored state
         for the slice.
+
+        Every agent takes the canonical ``act(params, obs, rng, carry)``
+        (repro.api); the reset branch keys on the DECLARED capability at
+        trace time, so the protocol adds zero traced ops either way.
         """
         rng, a_rng = jax.random.split(rng)
         if self._recurrent:
@@ -457,13 +358,10 @@ class Sebulba:
                 ),
                 carry, init,
             )
-            actions, logp, extras, new_carry = self.agent.act(
-                params, obs, a_rng, carry
-            )
-        else:
-            actions, logp, extras = self.agent.act(params, obs, a_rng)
-            new_carry = carry  # () threads through untouched
-        buf = buffer_add(buf, obs, actions, logp, extras, rew_disc, carry)
+        actions, aux, new_carry = self.agent.act(params, obs, a_rng, carry)
+        buf = buffer_add(
+            buf, obs, actions, aux.logp, aux.extras, rew_disc, carry
+        )
         return actions, buf, rng, new_carry
 
     def _initial_carry(self, device):
@@ -477,26 +375,25 @@ class Sebulba:
 
     def _make_actor_buffer(self, params, obs_dev, device):
         """Preallocate this thread's device trajectory ring, deriving the
-        action/logp/extras/carry storage shapes from the agent's act
-        signature (no tracing side effects — ``eval_shape`` is abstract)."""
+        action/logp/extras/carry storage shapes from the agent's canonical
+        act (no tracing side effects — ``eval_shape`` is abstract).  Also
+        the one place act's extras structure meets the declared
+        ``AgentSpec.extras_keys`` — checked here, once per thread, never
+        on the hot path (legacy-adapted agents predate the declaration and
+        keep their unchecked pytree extras)."""
         as_spec = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
         obs_spec = jax.tree.map(as_spec, obs_dev)
-        if self._recurrent:
-            carry_spec = jax.tree.map(
-                as_spec, self.agent.initial_carry(self.cfg.actor_batch_size)
-            )
-            act_spec, logp_spec, extras_spec, _ = jax.eval_shape(
-                self.agent.act, params, obs_spec, jax.random.key(0),
-                carry_spec,
-            )
-        else:
-            carry_spec = ()
-            act_spec, logp_spec, extras_spec = jax.eval_shape(
-                self.agent.act, params, obs_spec, jax.random.key(0)
-            )
+        carry_spec = jax.tree.map(
+            as_spec, self.agent.initial_carry(self.cfg.actor_batch_size)
+        )
+        act_spec, aux_spec, _ = jax.eval_shape(
+            self.agent.act, params, obs_spec, jax.random.key(0), carry_spec
+        )
+        if not api.is_legacy_adapter(self.agent):
+            api.validate_extras(aux_spec.extras, self.spec, self._agent_name)
         buf = device_buffer_init(
-            self.cfg.trajectory_length, obs_spec, act_spec, logp_spec,
-            extras_spec, carry_spec,
+            self.cfg.trajectory_length, obs_spec, act_spec, aux_spec.logp,
+            aux_spec.extras, carry_spec,
         )
         return jax.device_put(buf, device)
 
@@ -638,10 +535,10 @@ class Sebulba:
         def shard_update(params, opt_state, traj):
             def micro_step(carry, mb: Trajectory):
                 params, opt_state = carry
-                params, opt_state, metrics = self._sgd_step(
+                params, opt_state, aux = self._sgd_step(
                     params, opt_state, lambda p: self.agent.loss(p, mb)
                 )
-                metrics = jax.lax.pmean(metrics, "batch")
+                metrics = jax.lax.pmean(aux.metrics, "batch")
                 return (params, opt_state), metrics
 
             if cfg.learner_microbatches > 1:
@@ -784,11 +681,12 @@ class Sebulba:
                 [jnp.ones((B_on,), jnp.float32), w_replay]
             )
 
-            params, opt_state, (metrics, td) = self._sgd_step(
+            params, opt_state, aux = self._sgd_step(
                 params, opt_state,
                 lambda p: self.agent.loss(p, mixed, weights),
             )
-            metrics = jax.lax.pmean(metrics, "batch")
+            td = aux.priorities  # per-sequence TD magnitudes (AgentSpec.replay)
+            metrics = jax.lax.pmean(aux.metrics, "batch")
             if rcfg.prioritized:
                 # fresh TD priorities for the sampled replay slots, then the
                 # just-inserted online slots (uniform mode never reads
@@ -831,10 +729,44 @@ class Sebulba:
         obs_shape,
         total_frames: int,
         log_every: int = 0,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
+        restore_from: str | None = None,
     ) -> dict:
-        """Train until ``total_frames`` host env frames have been generated."""
+        """Train until ``total_frames`` host env frames have been generated.
+
+        Returns the unified Podracer result schema (``repro.api.runner``).
+        ``checkpoint_dir``/``checkpoint_every`` make the runner persist
+        ``param_version``-stamped checkpoints every N learner updates
+        (plus a final one); ``restore_from`` warm-starts params from a
+        checkpoint file or directory before training (the optimizer state
+        restarts fresh — research-checkpoint semantics — while the version
+        line and cumulative update/frame stamps continue from the
+        checkpoint, so resuming into the same directory keeps
+        ``latest_checkpoint`` honest).  Checkpoint
+        writes sync params to host, so like metric drains they only ever
+        happen on boundaries, never in the steady-state donated loop.
+        """
         cfg = self.cfg
         params, opt_state = self.init(rng, obs_shape)
+        base_updates = base_frames = 0
+        if restore_from is not None:
+            params, opt_state, meta = api.restore_for_fit(
+                restore_from, params, self.opt,
+                NamedSharding(self.learner_mesh, P()),
+            )
+            # continue the checkpoint's version line (and cumulative
+            # update/frame stamps) so new saves sort ABOVE the restored
+            # one — otherwise a resume into the same checkpoint_dir would
+            # stamp below it and latest_checkpoint would keep resolving
+            # to the stale pre-restore params
+            self._params_version = meta["param_version"]
+            base_updates = meta["updates"]
+            base_frames = meta["frames"]
+            self._publish_params(params, force=True)
+        ckpt = api.CheckpointPolicy(
+            checkpoint_dir, checkpoint_every, base_updates=base_updates
+        )
 
         threads = []
         tid = 0
@@ -906,6 +838,11 @@ class Sebulba:
                     )
                 self._publish_params(params)
                 updates += 1
+                ckpt.maybe_save(
+                    params, param_version=self._params_version,
+                    updates=base_updates + updates,
+                    frames=base_frames + self.frames,
+                )
                 if log_every and updates % log_every == 0:
                     m = self._drain_macc(macc)
                     if m is not None:
@@ -931,31 +868,63 @@ class Sebulba:
             m = self._drain_macc(macc)
             if m is not None:
                 last_metrics = m
+        ckpt.final_save(
+            params, param_version=self._params_version,
+            updates=base_updates + updates, frames=base_frames + self.frames,
+        )
         dt = time.time() - t0
-        return {
-            "params": params,
-            "updates": updates,
+        return api.make_result(
+            params=params,
+            updates=updates,
+            frames=self.frames,
+            seconds=dt,
+            metrics=last_metrics,
+            mean_return=(
+                float(np.mean(self.episode_returns))
+                if self.episode_returns else float("nan")
+            ),
             # logical publish version actors observe via the versioned
             # slots: init's publish + one per learner update (throttled
             # cores skip transfers, not versions)
-            "param_version": self._params_version,
-            "publishes_sent": self.publishes_sent,
-            "publishes_skipped": self.publishes_skipped,
-            # learner back-pressure / shutdown accounting (satellite: the
-            # actor loop retries full-queue puts instead of dropping)
-            "put_blocked": sum(self._thread_put_blocked),
-            "traj_dropped": sum(self._thread_traj_dropped),
-            "replay_size": (
+            param_version=self._params_version,
+            publishes_sent=self.publishes_sent,
+            publishes_skipped=self.publishes_skipped,
+            # learner back-pressure / shutdown accounting (the actor loop
+            # retries full-queue puts instead of dropping)
+            put_blocked=sum(self._thread_put_blocked),
+            traj_dropped=sum(self._thread_traj_dropped),
+            replay_size=(
                 self._replay.size(replay_state)
                 if self._replay is not None and replay_state is not None
                 else 0
             ),
-            "frames": self.frames,
-            "fps": self.frames / dt,
-            "seconds": dt,
-            "mean_return": (
-                float(np.mean(self.episode_returns))
-                if self.episode_returns else float("nan")
-            ),
-            "metrics": dict(last_metrics),
-        }
+            checkpoints_saved=ckpt.saved,
+        )
+
+    def fit(
+        self,
+        rng: jax.Array,
+        total_frames: int,
+        *,
+        obs_shape=None,
+        log_every: int = 0,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
+        restore_from: str | None = None,
+    ) -> dict:
+        """The unified ``repro.api.Runner`` entry point (same loop as
+        ``run``).  ``obs_shape`` defaults to what the env factory reports:
+        a probe env is constructed for its ``.obs_shape`` and closed if it
+        supports closing — pass ``obs_shape`` explicitly when env
+        construction is expensive."""
+        if obs_shape is None:
+            probe = self.env_factory(0)
+            obs_shape = probe.obs_shape
+            close = getattr(probe, "close", None)
+            if callable(close):
+                close()
+        return self.run(
+            rng, obs_shape, total_frames, log_every=log_every,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            restore_from=restore_from,
+        )

@@ -393,10 +393,12 @@ def test_replay_protocol_agent_rejected_onpolicy():
         )
 
 
-def test_defaulted_carry_arg_accepted_both_ways():
-    """act(..., carry=None) on a recurrent agent satisfies the 4-positional
-    call; an optional 4th arg on a feed-forward agent is harmless (it never
-    receives it) — neither may be rejected."""
+def test_defaulted_carry_arg_accepted_and_knobs_stay_keyword_only():
+    """act(..., carry=None) on a recurrent agent satisfies the canonical
+    4-positional call.  Extra acting knobs must be keyword-only — the
+    runner passes the carry in positional slot 4 on every step, so a knob
+    parked there would silently receive (); the protocol rejects that at
+    construction with a fix-it."""
 
     class DefaultCarry(RecurrentImpalaAgent):
         def act(self, params, obs, rng, carry=None):
@@ -417,18 +419,30 @@ def test_defaulted_carry_arg_accepted_both_ways():
     from repro.agents import BatchedMLPActorCritic
     from repro.core.sebulba import ImpalaAgent
 
-    class OptionalExtra(ImpalaAgent):
-        def act(self, params, obs, rng, greedy=False):
-            return super().act(params, obs, rng)
+    class KeywordKnob(ImpalaAgent):
+        def act(self, params, obs, rng, carry=(), *, greedy=False):
+            return super().act(params, obs, rng, carry)
 
     ff_net = BatchedMLPActorCritic(4, hidden=(16,))
     seb_ff = Sebulba(
         env_factory=lambda seed: HostBandit(seed=seed),
         make_batched_env=lambda f, n: BatchedHostEnv(f, n),
         network=ff_net, optimizer=optim.adam(1e-3), config=cfg,
-        agent=OptionalExtra(ff_net, cfg),
+        agent=KeywordKnob(ff_net, cfg),
     )
     assert not seb_ff._recurrent
+
+    class PositionalKnob(ImpalaAgent):
+        def act(self, params, obs, rng, greedy=False):  # knob in the
+            return super().act(params, obs, rng)        # carry's slot
+
+    with pytest.raises(ValueError, match="keyword-only"):
+        Sebulba(
+            env_factory=lambda seed: HostBandit(seed=seed),
+            make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+            network=ff_net, optimizer=optim.adam(1e-3), config=cfg,
+            agent=PositionalKnob(ff_net, cfg),
+        )
 
 
 def test_nonzero_initial_carry_rejected():

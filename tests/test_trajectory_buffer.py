@@ -184,12 +184,13 @@ def test_fused_act_step_bit_exact_vs_legacy_accumulate():
         for _ in range(T):
             rng, a_rng = jax.random.split(rng)
             obs_dev = jax.device_put(obs, device)
-            actions, logp, extras = inference(params, obs_dev, a_rng)
+            # canonical repro.api act: (actions, ActAux(logp, extras), carry)
+            actions, aux, _ = inference(params, obs_dev, a_rng, ())
             next_obs, rewards, dones = env.step(np.asarray(actions))
             discounts = (~dones).astype(np.float32) * cfg.discount
             acc.add(
                 obs_dev, actions, jax.device_put(rewards, device),
-                jax.device_put(discounts, device), logp, extras,
+                jax.device_put(discounts, device), aux.logp, aux.extras,
             )
             obs = next_obs
         return acc.drain(bootstrap_obs=jax.device_put(obs, device))
