@@ -1,0 +1,164 @@
+"""Host vs device environment stepping (before/after for the device fleet).
+
+Measures the same Pong game driven through both Podracer env regimes, with
+an identical light MLP policy in the loop so env + glue dominate:
+
+  * ``host``   — ``BatchedHostEnv`` of numpy ``HostPong`` envs on the
+    shared thread pool, jitted inference, and the per-step round trip the
+    host path cannot avoid: obs host->device, a blocking action sync
+    device->host, then Python env stepping;
+  * ``device`` — a ``DeviceEnvFleet`` of pure-JAX ``Pong`` twins with env
+    step + action sampling fused into ONE donated jit per step.  Nothing
+    leaves the device inside the loop; the only sync is the end-of-window
+    ``block_until_ready``.
+
+Both sides run the bit-exact twin of the same game (tests/test_device_envs
+.py), so the delta is purely host-loop overhead vs on-device stepping —
+the gap the Podracer paper's Anakin/Sebulba split is about.
+
+``benchmarks/run.py --suite envs`` writes ``BENCH_envs.json``:
+
+    {"batch_<B>": {
+         "host_us_per_step", "host_steps_per_s", "host_fps",
+         "device_us_per_step", "device_steps_per_s", "device_fps",
+         "speedup", "batch"}}
+
+(``*_fps`` = env frames/s = batch * steps/s; ``speedup`` = host us /
+device us.)
+
+Honest timing: both loops warm up (jit compile + pool spin-up never land
+in a measurement), each timed window is best-of-3, and the host loop's
+action sync is counted (it is part of that architecture, not an artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._timing import csv_line
+
+BATCHES = (4, 32)
+MEASURE_STEPS = 60
+
+
+def _policy(batch_hint: int):
+    from repro.agents.actor_critic import BatchedMLPActorCritic
+
+    net = BatchedMLPActorCritic(num_actions=3, hidden=(32,))
+    params = net.init(jax.random.key(0), (16, 16, 1))
+
+    def act(params, obs, rng):
+        logits, _ = net.apply(params, obs)
+        return jax.random.categorical(rng, logits)
+
+    return params, act
+
+
+def bench_host(batch: int, steps: int = MEASURE_STEPS) -> float:
+    """-> best-of-3 seconds for ``steps`` batched host env steps."""
+    from repro.envs import BatchedHostEnv, HostPong
+
+    params, act = _policy(batch)
+    jit_act = jax.jit(act)
+    benv = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=batch)
+    try:
+        def window() -> float:
+            obs = benv.reset()
+            rng = jax.random.key(1)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                rng, a_rng = jax.random.split(rng)
+                actions = jit_act(params, jnp.asarray(obs), a_rng)
+                # the host path's inherent per-step device->host sync
+                obs, _, _ = benv.step(np.asarray(actions))
+            return time.perf_counter() - t0
+
+        window()  # warm: jit compile + pool thread spin-up
+        return min(window() for _ in range(3))
+    finally:
+        benv.close()
+
+
+def bench_device(batch: int, steps: int = MEASURE_STEPS) -> float:
+    """-> best-of-3 seconds for ``steps`` fused fleet steps."""
+    from repro.envs import DeviceEnvFleet, Pong
+
+    params, act = _policy(batch)
+    fleet = DeviceEnvFleet(Pong, batch)
+
+    def fused(params, env_state, obs, rng):
+        rng, a_rng = jax.random.split(rng)
+        actions = act(params, obs, a_rng)
+        env_state, ts = fleet.step(env_state, actions)
+        return env_state, ts.obs, rng
+
+    step = jax.jit(fused, donate_argnums=(1, 2, 3))
+
+    def window() -> float:
+        env_state = fleet.init(jax.random.key(1))
+        obs = fleet.observe(env_state)
+        rng = jax.random.key(2)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            env_state, obs, rng = step(params, env_state, obs, rng)
+        jax.block_until_ready(obs)
+        return time.perf_counter() - t0
+
+    window()  # warm: jit compile
+    return min(window() for _ in range(3))
+
+
+def bench_batch(batch: int, steps: int = MEASURE_STEPS) -> dict:
+    out = {"batch": batch}
+    for name, fn in (("host", bench_host), ("device", bench_device)):
+        us = fn(batch, steps) / steps * 1e6
+        out[f"{name}_us_per_step"] = round(us, 1)
+        out[f"{name}_steps_per_s"] = round(1e6 / us, 1)
+        out[f"{name}_fps"] = round(batch * 1e6 / us)
+    out["speedup"] = round(
+        out["host_us_per_step"] / out["device_us_per_step"], 2
+    )
+    return out
+
+
+def csv_lines(results: dict) -> list[str]:
+    lines = []
+    for key, r in results.items():
+        b = r["batch"]
+        lines.append(csv_line(
+            f"env_step_host_b{b}", r["host_us_per_step"],
+            f"fps={r['host_fps']:,}"))
+        lines.append(csv_line(
+            f"env_step_device_b{b}", r["device_us_per_step"],
+            f"fps={r['device_fps']:,} speedup={r['speedup']}x"))
+    return lines
+
+
+def main(json_path: str | None = None,
+         steps: int = MEASURE_STEPS) -> list[str]:
+    results = {f"batch_{b}": bench_batch(b, steps) for b in BATCHES}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return csv_lines(results)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_envs.json")
+    ap.add_argument("--steps", type=int, default=MEASURE_STEPS)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(
+        json_path="BENCH_envs.json" if args.json else None, steps=args.steps
+    ):
+        print(line)
+    if args.json:
+        print("wrote BENCH_envs.json")

@@ -107,6 +107,18 @@ def _learner_suite(lines: list[str]) -> None:
     )
 
 
+def _envs_suite(lines: list[str]) -> None:
+    """--suite envs: host BatchedHostEnv loop vs fused device fleet step
+    at B=4/32 -> BENCH_envs.json (the env-pipeline perf trajectory)."""
+    from benchmarks import env_bench
+
+    _section(
+        "env stepping (host pool vs device fleet)",
+        lambda: env_bench.main(json_path="BENCH_envs.json"),
+        lines,
+    )
+
+
 def _recurrent_suite(lines: list[str]) -> None:
     """--suite recurrent: R2D2 learner step — rglru-kernel vs lax-scan
     temporal core, burn-in 0 vs K overhead -> BENCH_recurrent.json (the
@@ -126,13 +138,15 @@ def main() -> None:
                     help="fast sections only")
     ap.add_argument("--suite",
                     choices=["all", "replay", "sebulba", "learner",
-                             "recurrent"],
+                             "recurrent", "envs"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
                          "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
                          "'learner' -> BENCH_learner.json only (donated "
                          "learner update + publish throttling); 'recurrent' "
-                         "-> BENCH_recurrent.json only (R2D2 core + burn-in)")
+                         "-> BENCH_recurrent.json only (R2D2 core + burn-in); "
+                         "'envs' -> BENCH_envs.json only (host pool vs "
+                         "device fleet stepping)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -143,6 +157,7 @@ def main() -> None:
         "sebulba": _sebulba_suite,
         "learner": _learner_suite,
         "recurrent": _recurrent_suite,
+        "envs": _envs_suite,
     }
     if args.suite in suites:
         suites[args.suite](lines)
@@ -171,6 +186,7 @@ def main() -> None:
         _sebulba_suite(lines)
         _learner_suite(lines)
         _recurrent_suite(lines)
+        _envs_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

@@ -14,7 +14,7 @@ import jax
 from repro import optim
 from repro.agents.impala import ConvActorCritic
 from repro.core.sebulba import Sebulba, SebulbaConfig
-from repro.envs import BatchedHostEnv, HostPong
+from repro.envs import BatchedHostEnv, HostPong, Pong
 
 
 def main() -> None:
@@ -23,6 +23,9 @@ def main() -> None:
     ap.add_argument("--actor-cores", type=int, default=2)
     ap.add_argument("--actor-batch", type=int, default=32)
     ap.add_argument("--trajectory", type=int, default=20)
+    ap.add_argument("--device-envs", action="store_true",
+                    help="step the pure-JAX Pong twin on device (fused "
+                         "env+act actor step) instead of the host env pool")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="persist param_version-stamped checkpoints here "
                          "(the runner owns persistence — see repro.api)")
@@ -45,9 +48,15 @@ def main() -> None:
           f"{learners} learner cores")
 
     net = ConvActorCritic(HostPong.num_actions, channels=(16, 32), blocks=1)
+    env_kwargs = (
+        {"device_env": Pong}
+        if args.device_envs
+        else {
+            "env_factory": lambda seed: HostPong(seed=seed),
+            "make_batched_env": lambda f, n: BatchedHostEnv(f, n),
+        }
+    )
     seb = Sebulba(
-        env_factory=lambda seed: HostPong(seed=seed),
-        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
         network=net,
         optimizer=optim.rmsprop(3e-4, clip_norm=1.0),
         config=SebulbaConfig(
@@ -56,6 +65,7 @@ def main() -> None:
             actor_batch_size=actor_batch,
             trajectory_length=args.trajectory,
         ),
+        **env_kwargs,
     )
     out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=25,
                   checkpoint_dir=args.checkpoint_dir,

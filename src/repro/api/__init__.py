@@ -16,6 +16,13 @@ from repro.api.agent import (  # noqa: F401
     validate_agent,
     validate_extras,
 )
+from repro.api.env import (  # noqa: F401
+    DeviceEnv,
+    ScenarioMix,
+    resolve_scenarios,
+    scenario_rows,
+    validate_device_env,
+)
 from repro.api.registry import (  # noqa: F401
     AgentFixture,
     make_agent,

@@ -1,0 +1,225 @@
+"""Device-environment capability on the `repro.api` runner contract.
+
+The Podracer paper prescribes two env regimes: host environments that
+"cannot be compiled to TPU" (Sebulba's batched host envs) and pure-JAX
+environments that live on the accelerator (Anakin).  This module makes the
+second regime a first-class, *declared* capability — mirroring how
+``AgentSpec`` declares agent capabilities — so runners branch on a
+validated contract instead of sniffing env objects at runtime:
+
+    env.num_actions : int
+    env.obs_shape   : tuple
+    env.init(rng)           -> state            (pure, vmappable)
+    env.observe(state)      -> obs              (pure, vmappable)
+    env.step(state, action) -> (state, TimeStep) (pure, vmappable,
+                               auto-resets: discount == 0 marks the
+                               episode end and the returned obs already
+                               belongs to the NEXT episode)
+
+``validate_device_env`` checks the contract once at construction with
+fix-it errors (the ``resolve_agent`` discipline applied to envs); nothing
+here ever runs inside a jit trace.
+
+Scenario-mix training (ROADMAP: "as many scenarios as you can imagine as a
+config, not a fork"): a weighted portfolio of device envs/difficulties is
+expressed as ``ScenarioMix(name, weight, env_factory)`` entries.
+``resolve_scenarios`` normalizes a bare env (or factory) into a one-entry
+portfolio and validates cross-scenario compatibility (every scenario must
+share ``obs_shape``/``num_actions`` — one agent acts across all of them);
+``scenario_rows`` deterministically apportions a fleet batch across the
+portfolio by weight (largest-remainder, every scenario gets >= 1 row).
+The fleet itself lives in ``repro/envs/device_env.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax
+
+PyTree = Any
+
+
+@runtime_checkable
+class DeviceEnv(Protocol):
+    """A pure-JAX batched-able environment (the Anakin contract)."""
+
+    num_actions: int
+    obs_shape: tuple
+
+    def init(self, rng: jax.Array) -> PyTree: ...
+
+    def observe(self, state: PyTree) -> jax.Array: ...
+
+    def step(self, state: PyTree, action: jax.Array) -> tuple[PyTree, Any]: ...
+
+
+class ScenarioMix(NamedTuple):
+    """One entry of a scenario portfolio: a named, weighted env source.
+
+    ``env_factory`` is a zero-argument callable returning a ``DeviceEnv``
+    (env objects are stateless parameter holders — all mutable state lives
+    in the pytree ``init`` returns — so one instance is safely shared by
+    every fleet/thread).  ``weight`` is the relative share of fleet rows
+    (and therefore of training frames) this scenario receives.
+    """
+
+    name: str
+    weight: float
+    env_factory: Callable[[], DeviceEnv]
+
+
+def validate_device_env(env, name: str | None = None) -> None:
+    """Check ``env`` against the DeviceEnv contract, raising ValueError
+    with a fix-it message on the first violation.  Runs once at runner (or
+    fleet) construction — never inside a trace."""
+    name = name or type(env).__name__
+    for attr in ("num_actions", "obs_shape"):
+        if not hasattr(env, attr):
+            raise ValueError(
+                f"{name} does not implement the repro.api.DeviceEnv "
+                f"contract: missing {attr} — see repro/api/env.py"
+            )
+    for method in ("init", "observe", "step"):
+        if not callable(getattr(env, method, None)):
+            raise ValueError(
+                f"{name} does not implement the repro.api.DeviceEnv "
+                f"contract: missing {method}() — device envs are pure-JAX "
+                "(init(rng) -> state, observe(state) -> obs, step(state, "
+                "action) -> (state, TimeStep)); host-API envs (reset/step) "
+                "belong on the BatchedHostEnv path instead"
+            )
+    # abstract round trip: init -> observe/step must be evaluable and the
+    # observation must match the declared obs_shape.  eval_shape never
+    # executes device code, so this costs a trace, not a compile.
+    state_spec = jax.eval_shape(env.init, jax.random.key(0))
+    obs_spec = jax.eval_shape(env.observe, state_spec)
+    if tuple(obs_spec.shape) != tuple(env.obs_shape):
+        raise ValueError(
+            f"{name}.observe returns shape {tuple(obs_spec.shape)} but "
+            f"declares obs_shape {tuple(env.obs_shape)}"
+        )
+    new_state, ts = jax.eval_shape(
+        env.step, state_spec, jax.ShapeDtypeStruct((), jax.numpy.int32)
+    )
+    if jax.tree.structure(new_state) != jax.tree.structure(state_spec):
+        raise ValueError(
+            f"{name}.step must return a state with the same pytree "
+            "structure init produced (the fleet threads it through a "
+            "donated jit)"
+        )
+    for field in ("obs", "reward", "discount"):
+        if not hasattr(ts, field):
+            raise ValueError(
+                f"{name}.step must return (state, TimeStep) with "
+                f"obs/reward/discount fields (repro/envs/types.py); the "
+                f"returned timestep has no {field!r}"
+            )
+
+
+def resolve_scenarios(env_or_scenarios) -> tuple[ScenarioMix, ...]:
+    """Normalize a device-env argument to a validated scenario portfolio.
+
+    Accepts a bare ``DeviceEnv`` instance, a zero-arg factory, a single
+    ``ScenarioMix``, or a sequence of them.  Factories are called once here
+    (instances are reused — see ``ScenarioMix``), every env is validated
+    against the contract, weights must be positive, names unique, and all
+    scenarios must agree on ``obs_shape``/``num_actions``.
+
+    Returns the normalized portfolio with ``env_factory`` replaced by a
+    constant factory over the materialized instance, so downstream code
+    (fleets on several actor threads) never re-runs user factories.
+    """
+    if isinstance(env_or_scenarios, ScenarioMix):
+        scenarios = [env_or_scenarios]
+    elif isinstance(env_or_scenarios, (list, tuple)):
+        scenarios = list(env_or_scenarios)
+        if not scenarios:
+            raise ValueError("scenario portfolio is empty")
+        for s in scenarios:
+            if not isinstance(s, ScenarioMix):
+                raise ValueError(
+                    "scenario portfolios are sequences of ScenarioMix("
+                    f"name, weight, env_factory); got {type(s).__name__}"
+                )
+    else:
+        env = _materialize(env_or_scenarios)
+        scenarios = [ScenarioMix(type(env).__name__, 1.0, _const(env))]
+
+    seen: set[str] = set()
+    resolved = []
+    for s in scenarios:
+        if not s.name or s.name in seen:
+            raise ValueError(
+                f"scenario names must be unique and non-empty; got "
+                f"{s.name!r} twice" if s.name else "empty scenario name"
+            )
+        seen.add(s.name)
+        if not (s.weight > 0):
+            raise ValueError(
+                f"scenario {s.name!r} has weight {s.weight}; weights must "
+                "be > 0 (drop the entry instead of zero-weighting it)"
+            )
+        env = _materialize(s.env_factory)
+        validate_device_env(env, name=f"scenario {s.name!r} env")
+        resolved.append(ScenarioMix(s.name, float(s.weight), _const(env)))
+    first = resolved[0].env_factory()
+    for s in resolved[1:]:
+        env = s.env_factory()
+        if (
+            tuple(env.obs_shape) != tuple(first.obs_shape)
+            or env.num_actions != first.num_actions
+        ):
+            raise ValueError(
+                "scenario mix trains ONE agent across the portfolio, so "
+                "every scenario must share obs_shape and num_actions; "
+                f"{resolved[0].name!r} has obs_shape "
+                f"{tuple(first.obs_shape)} / {first.num_actions} actions "
+                f"but {s.name!r} has {tuple(env.obs_shape)} / "
+                f"{env.num_actions}"
+            )
+    return tuple(resolved)
+
+
+def _const(env) -> Callable[[], DeviceEnv]:
+    return lambda: env
+
+
+def _materialize(source):
+    """An env source is an instance, a zero-arg factory, or the env class
+    itself.  A class always needs calling — ``hasattr(cls, "step")`` is
+    true for the unbound method, but ``obs_shape`` only exists after
+    ``__init__`` runs."""
+    if isinstance(source, type) or (
+        callable(source) and not hasattr(source, "step")
+    ):
+        return source()
+    return source
+
+
+def scenario_rows(
+    scenarios: tuple[ScenarioMix, ...], batch: int
+) -> tuple[int, ...]:
+    """Apportion ``batch`` fleet rows across the portfolio by weight.
+
+    Largest-remainder (Hamilton) apportionment after guaranteeing every
+    scenario at least one row — deterministic, exact (rows sum to
+    ``batch``), and stable under weight rescaling.  Raises when the batch
+    cannot seat every scenario.
+    """
+    n = len(scenarios)
+    if batch < n:
+        raise ValueError(
+            f"fleet batch {batch} cannot seat {n} scenarios (each needs "
+            ">= 1 row); raise the batch or trim the portfolio"
+        )
+    total_w = sum(s.weight for s in scenarios)
+    spare = batch - n  # one seat per scenario is already guaranteed
+    quotas = [spare * s.weight / total_w for s in scenarios]
+    rows = [1 + int(q) for q in quotas]
+    remainders = sorted(
+        range(n), key=lambda i: (quotas[i] - int(quotas[i]), -i), reverse=True
+    )
+    for i in remainders[: batch - sum(rows)]:
+        rows[i] += 1
+    return tuple(rows)

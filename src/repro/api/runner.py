@@ -30,6 +30,10 @@ keys):
     checkpoints_saved  checkpoints written by the runner
     mean_return        mean episode return (NaN when untracked)
     metrics            drained learner metrics (means since last drain)
+    scenarios          per-scenario counters when training on a device-env
+                       scenario mix ({name: {weight, rows, episodes,
+                       reward_sum, return_sum, mean_return, [replay_slots]}},
+                       empty dict otherwise)
 
 Checkpointing: the runner owns persistence so examples stop hand-rolling
 it.  Every ``checkpoint_every`` updates (and once more at the end of a
@@ -69,6 +73,7 @@ RESULT_KEYS = (
     "checkpoints_saved",
     "mean_return",
     "metrics",
+    "scenarios",
 )
 
 _COUNTER_DEFAULTS = {
@@ -109,6 +114,7 @@ def make_result(
     seconds: float,
     metrics: dict,
     mean_return: float = float("nan"),
+    scenarios: dict | None = None,
     **counters: int,
 ) -> dict:
     """Assemble the unified runner result.  Unset counters default to 0;
@@ -124,6 +130,7 @@ def make_result(
         "seconds": float(seconds),
         "mean_return": float(mean_return),
         "metrics": dict(metrics),
+        "scenarios": dict(scenarios) if scenarios else {},
     }
     for key, default in _COUNTER_DEFAULTS.items():
         out[key] = int(counters.get(key, default))

@@ -37,8 +37,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+import numpy as np
+
 from repro import api, optim
 from repro.compat import shard_map
+from repro.envs.device_env import DeviceEnvFleet
 from repro.rl import losses
 
 PyTree = Any
@@ -83,6 +86,36 @@ class Anakin:
         self.mesh = Mesh(devices, ("batch",))
         self.num_devices = len(devices)
         self.global_batch = self.num_devices * config.batch_per_device
+        # scenario-mix fleet support: Anakin reuses the same DeviceEnvFleet
+        # Sebulba's device actor drives.  The per-env vmap path stays
+        # untouched for single envs; a fleet swaps in the batched unroll
+        # (the fleet steps the whole row batch, heterogeneous scenarios
+        # included, inside the scan).
+        self._fleet = env if isinstance(env, DeviceEnvFleet) else None
+        if self._fleet is not None:
+            if self._fleet.num_envs != self.global_batch:
+                raise ValueError(
+                    f"fleet has {self._fleet.num_envs} envs but Anakin's "
+                    f"global batch is {self.global_batch} ({self.num_devices}"
+                    f" devices x batch_per_device {config.batch_per_device})"
+                )
+            if self._fleet.shards % self.num_devices:
+                raise ValueError(
+                    f"fleet is laid out in {self._fleet.shards} scenario "
+                    f"blocks, which does not tile across {self.num_devices} "
+                    "devices — build it with shards equal to (a multiple "
+                    "of) the device count"
+                )
+            # shard_map sees per-device slices, so the loss steps a LOCAL
+            # fleet whose block layout matches this device's slice of the
+            # global rows (jit/GSPMD mode operates on the global batch)
+            self._loss_fleet = (
+                DeviceEnvFleet(
+                    self._fleet.scenarios, config.batch_per_device,
+                    shards=self._fleet.shards // self.num_devices,
+                )
+                if config.mode == "shard_map" else self._fleet
+            )
         self._run = self._build()
 
     # ------------------------------------------------------------------
@@ -92,8 +125,14 @@ class Anakin:
         params = self.net.init(net_rng, self.env.obs_shape)
         opt_state = self.opt.init(params)
         env_rngs = jax.random.split(rng, self.global_batch)
-        env_state = jax.vmap(self.env.init)(env_rngs)
-        obs = jax.vmap(self.env.observe)(env_state)
+        if self._fleet is not None:
+            # the fleet splits its own per-row keys; env_rngs stay the
+            # per-row ACTION keys either way
+            env_state = self.env.init(jax.random.fold_in(rng, 1))
+            obs = self.env.observe(env_state)
+        else:
+            env_state = jax.vmap(self.env.init)(env_rngs)
+            obs = jax.vmap(self.env.observe)(env_state)
         state = AnakinState(
             params=params,
             opt_state=opt_state,
@@ -143,13 +182,51 @@ class Anakin:
             (env_state, obs, rng),
         )
 
+    def _fleet_unroll(self, fleet, params, env_state, obs, rng):
+        """The batched twin of ``_unroll_and_loss``: the fleet steps its
+        whole row batch (a heterogeneous scenario portfolio) inside the
+        scan, so one program drives every scenario.  Per-row action keys
+        split in lockstep; outputs are transposed to the (B, T, ...) the
+        loss expects."""
+        cfg = self.cfg
+        apply = jax.vmap(self.net.apply, in_axes=(None, 0))
+
+        def one_step(carry, _):
+            env_state, obs, rng = carry
+            keys = jax.vmap(jax.random.split)(rng)  # (B, 2)
+            rng, a_rng = keys[:, 0], keys[:, 1]
+            logits, values = apply(params, obs)
+            actions = jax.vmap(jax.random.categorical)(a_rng, logits)
+            env_state, ts = fleet.step(env_state, actions)
+            out = (logits, values, actions, ts.reward, ts.discount)
+            return (env_state, ts.obs, rng), out
+
+        (env_state, obs, rng), outs = jax.lax.scan(
+            one_step, (env_state, obs, rng), None, cfg.unroll_length
+        )
+        logits, values, actions, rewards, discounts = jax.tree.map(
+            lambda x: jnp.swapaxes(x, 0, 1), outs
+        )
+        _, bootstrap = apply(params, obs)
+        return (
+            (logits, values, actions, rewards, discounts, bootstrap),
+            (env_state, obs, rng),
+        )
+
     def _loss_fn(self, params, env_state, obs, rng):
         cfg = self.cfg
-        # vmap the minimal unit over this device's batch of environments
-        (logits, values, actions, rewards, discounts, bootstrap), carry = jax.vmap(
-            self._unroll_and_loss, in_axes=(None, 0, 0, 0)
-        )(params, env_state, obs, rng)
-        # vmap output is (B, T, ...) — exactly what the loss wants
+        if self._fleet is not None:
+            (logits, values, actions, rewards, discounts, bootstrap), carry = (
+                self._fleet_unroll(
+                    self._loss_fleet, params, env_state, obs, rng
+                )
+            )
+        else:
+            # vmap the minimal unit over this device's batch of environments
+            (logits, values, actions, rewards, discounts, bootstrap), carry = jax.vmap(
+                self._unroll_and_loss, in_axes=(None, 0, 0, 0)
+            )(params, env_state, obs, rng)
+        # (B, T, ...) — exactly what the loss wants
         out = losses.a2c_loss(
             logits, values, actions, rewards, discounts, bootstrap,
             entropy_cost=cfg.entropy_cost, value_cost=cfg.value_cost,
@@ -160,6 +237,26 @@ class Anakin:
             "entropy": out.entropy, "reward": jnp.mean(rewards),
             "episodes": jnp.sum(discounts == 0.0),
         }
+        if self._fleet is not None:
+            # per-scenario RATES (per row per step), so the values are
+            # invariant under the cross-replica pmean (every replica holds
+            # the same scenario composition) and identical in both modes
+            lf = self._loss_fleet
+            seg = jnp.asarray(lf.scenario_ids)
+            denom = jnp.asarray(
+                np.array(lf.rows, np.float32) * rewards.shape[1]
+            )
+            metrics["reward_per_scenario"] = (
+                jax.ops.segment_sum(
+                    jnp.sum(rewards, axis=1), seg, lf.num_scenarios
+                ) / denom
+            )
+            metrics["episodes_per_scenario"] = (
+                jax.ops.segment_sum(
+                    jnp.sum((discounts == 0.0).astype(jnp.float32), axis=1),
+                    seg, lf.num_scenarios,
+                ) / denom
+            )
         return out.total, (carry, metrics)
 
     def _update_once(self, state: AnakinState, sync: Callable) -> tuple[AnakinState, dict]:
@@ -187,10 +284,13 @@ class Anakin:
             state, metrics = jax.lax.scan(
                 body, state, None, cfg.iterations_per_call
             )
-            # reduce the per-iteration metrics stack on device: one scalar
+            # reduce the per-iteration metrics stack on device: one value
             # per metric leaves the compiled block instead of an
-            # (iterations,) array per metric per call
-            return state, jax.tree.map(jnp.mean, metrics)
+            # (iterations,) stack per metric per call (axis 0 only, so the
+            # (S,) per-scenario vectors keep their scenario axis)
+            return state, jax.tree.map(
+                lambda x: jnp.mean(x, axis=0), metrics
+            )
 
         if cfg.mode == "shard_map":
             def sync(tree):
@@ -309,7 +409,10 @@ class Anakin:
                 frames=base_frames + (call + 1) * frames_per_call,
             )
             if log_every and (call + 1) % calls_per_log == 0:
-                drained = {k: float(v) for k, v in metrics.items()}
+                drained = {
+                    k: float(v) for k, v in metrics.items()
+                    if np.ndim(v) == 0
+                }
                 # both counters cumulative — `updates` already includes the
                 # restored base, so frames must too or resumed logs read
                 # as a frames-per-update collapse
@@ -326,14 +429,30 @@ class Anakin:
         )
         dt = time.time() - t0
         drained = (
-            {k: float(v) for k, v in metrics.items()} if metrics else {}
+            {k: float(v) for k, v in metrics.items() if np.ndim(v) == 0}
+            if metrics else {}
         )
+        # fleet mode: the (S,) per-scenario rate metrics become the unified
+        # ``scenarios`` result key (rates over the final compiled block;
+        # Sebulba reports exact cumulative counters on its side)
+        scenarios = {}
+        if self._fleet is not None and metrics is not None:
+            rew = np.asarray(metrics["reward_per_scenario"])
+            eps = np.asarray(metrics["episodes_per_scenario"])
+            for i, s in enumerate(self._fleet.scenarios):
+                scenarios[s.name] = {
+                    "weight": s.weight,
+                    "rows": self._fleet.rows[i],
+                    "reward_per_step": float(rew[i]),
+                    "episodes_per_step": float(eps[i]),
+                }
         result = api.make_result(
             params=state.params,
             updates=updates,
             frames=frames,
             seconds=dt,
             metrics=drained,
+            scenarios=scenarios,
             param_version=base_updates + updates,
             checkpoints_saved=ckpt.saved,
         )

@@ -87,6 +87,7 @@ from repro.agents.impala import ImpalaAgent  # noqa: F401
 from repro.compat import shard_map
 from repro.configs.base import ReplayConfig
 from repro.core.topology import CoreSplit, split_devices
+from repro.envs.device_env import DeviceEnvFleet, FleetStats  # noqa: F401
 from repro.data.trajectory import (
     Trajectory,
     buffer_add,
@@ -132,15 +133,23 @@ class SebulbaConfig:
 class Sebulba:
     def __init__(
         self,
-        env_factory: Callable[[int], object],  # seed -> batched-able host env
-        make_batched_env: Callable[[Callable, int], object],
+        env_factory: Callable[[int], object] = None,  # seed -> host env
+        make_batched_env: Callable[[Callable, int], object] = None,
         network=None,
         optimizer: optim.GradientTransformation = None,
         config: SebulbaConfig = SebulbaConfig(),
         devices=None,
         agent=None,
+        device_env=None,  # DeviceEnv / factory / ScenarioMix(es) / fleet
     ):
         self.cfg = config
+        if device_env is None and (env_factory is None or make_batched_env is None):
+            raise ValueError(
+                "Sebulba needs an environment: either the host pair "
+                "(env_factory, make_batched_env) or device_env= (a "
+                "repro.api.DeviceEnv, a zero-arg factory, ScenarioMix "
+                "entries, or a prebuilt DeviceEnvFleet)"
+            )
         if agent is None:
             if config.replay is not None:
                 from repro.agents.replay_impala import ReplayImpalaAgent
@@ -164,6 +173,33 @@ class Sebulba:
         self.L = self.split.num_learners
         if (config.actor_batch_size % self.L) != 0:
             raise ValueError("actor batch must divide evenly across learners")
+
+        # device-resident env fleet (the Anakin-style regime): the actor
+        # loop fuses env.step + agent.act into one donated jit and never
+        # syncs actions to the host.  The fleet is sharded L-ways so each
+        # learner's slice of the batch carries the same scenario mix.
+        self._fleet: DeviceEnvFleet | None = None
+        if device_env is not None:
+            if isinstance(device_env, DeviceEnvFleet):
+                if device_env.num_envs != config.actor_batch_size:
+                    raise ValueError(
+                        f"device fleet has {device_env.num_envs} envs but "
+                        f"actor_batch_size is {config.actor_batch_size}; "
+                        "size the fleet to the actor batch"
+                    )
+                if device_env.shards % self.L:
+                    raise ValueError(
+                        f"device fleet is laid out in {device_env.shards} "
+                        f"scenario blocks, which does not tile across "
+                        f"{self.L} learner cores — build the fleet with "
+                        "shards equal to (a multiple of) the learner count "
+                        "so every learner sees the same scenario mix"
+                    )
+                self._fleet = device_env
+            else:
+                self._fleet = DeviceEnvFleet(
+                    device_env, config.actor_batch_size, shards=self.L
+                )
 
         self._replay: ShardedReplay | None = None
         if config.replay is not None:
@@ -200,6 +236,23 @@ class Sebulba:
                 prioritized=rcfg.prioritized,
                 priority_exponent=rcfg.priority_exponent,
             )
+            # scenario-mix replay strata: per-learner ring slots are
+            # written sequentially (insert_slots), so when the local ring
+            # capacity is a multiple of the local online shard, slot s
+            # permanently holds scenario scenario_ids[s % local_B] — the
+            # ring is structurally stratified by scenario, per learner
+            if self._fleet is not None and self._fleet.num_scenarios > 1:
+                local_cap = rcfg.capacity // self.L
+                local_B = config.actor_batch_size // self.L
+                if local_cap % local_B:
+                    raise ValueError(
+                        "scenario-mix replay needs the per-learner ring "
+                        f"capacity ({local_cap}) to be a multiple of the "
+                        f"per-learner online shard ({local_B}) so replay "
+                        "slots stay scenario-pure (each slot always holds "
+                        "the same scenario's trajectories); round "
+                        "ReplayConfig.capacity accordingly"
+                    )
         elif self.spec.replay:
             raise ValueError(
                 f"{self._agent_name} requires SebulbaConfig.replay: it "
@@ -207,6 +260,19 @@ class Sebulba:
                 "importance weights and emits replay priorities the "
                 "on-policy learner has no ring to write back into"
             )
+
+        # slot counts of the structural replay strata (per learner ring),
+        # reported through the per-scenario result counters
+        self.replay_strata: dict | None = None
+        if self._replay is not None and self._fleet is not None:
+            local_cap = config.replay.capacity // self.L
+            local_B = config.actor_batch_size // self.L
+            if local_cap % local_B == 0:
+                cycles = local_cap // local_B
+                self.replay_strata = {
+                    s.name: (self._fleet.rows[i] // self.L) * cycles
+                    for i, s in enumerate(self._fleet.scenarios)
+                }
 
         if config.burn_in < 0:
             raise ValueError("burn_in must be >= 0")
@@ -236,6 +302,13 @@ class Sebulba:
         # state writes), one donated-jit drain per trajectory (the outputs
         # alias the donated ring storage)
         self._act_step = jax.jit(self._act_step_fn, donate_argnums=(1, 2, 5))
+        # device-env mode: env.step fuses INTO the actor program — buffer,
+        # rng, env state, and carry all update in place, and nothing (not
+        # even the actions) syncs back to the host per step
+        self._device_act_step = (
+            jax.jit(self._device_act_step_fn, donate_argnums=(1, 2, 3, 6))
+            if self._fleet is not None else None
+        )
         self._drain = jax.jit(buffer_drain, donate_argnums=(0,))
         self._split_traj = jax.jit(
             lambda traj: split_for_learners(traj, self.L)
@@ -262,6 +335,10 @@ class Sebulba:
             self.split.learner_devices
         )
         self._thread_frames: list[int] = [0] * num_threads
+        # device-env mode: latest per-thread FleetStats snapshot (device
+        # arrays, cumulative) — stamped on trajectory boundaries, read by
+        # the learner thread only on log/result boundaries
+        self._thread_stats: list = [None] * num_threads
         self._thread_put_blocked: list[int] = [0] * num_threads
         self._thread_traj_dropped: list[int] = [0] * num_threads
         self._queue: queue.Queue = queue.Queue(maxsize=config.queue_capacity)
@@ -399,7 +476,10 @@ class Sebulba:
 
     def _actor_thread(self, thread_id: int, core_id: int, seed: int) -> None:
         try:
-            self._actor_loop(thread_id, core_id, seed)
+            if self._fleet is not None:
+                self._device_actor_loop(thread_id, core_id, seed)
+            else:
+                self._actor_loop(thread_id, core_id, seed)
         except BaseException as e:  # surface crashes to the learner loop
             self._actor_errors.append(e)
             self._stop.set()
@@ -411,6 +491,19 @@ class Sebulba:
         env = self.make_batched_env(
             lambda i: self.env_factory(seed * 10_000 + i), cfg.actor_batch_size
         )
+        try:
+            self._host_actor_loop(thread_id, core_id, seed, env, device)
+        finally:
+            # release the env's share of the host stepping pool (the shared
+            # ThreadPoolExecutor shuts down with its last reference)
+            close = getattr(env, "close", None)
+            if callable(close):
+                close()
+
+    def _host_actor_loop(
+        self, thread_id: int, core_id: int, seed: int, env, device
+    ) -> None:
+        cfg = self.cfg
         obs = env.reset()
         rng = jax.device_put(jax.random.key(seed), device)
         running_return = np.zeros(cfg.actor_batch_size)
@@ -465,6 +558,97 @@ class Sebulba:
             self._thread_frames[thread_id] += cfg.actor_batch_size
             obs = next_obs
             t += 1
+
+    # ------------------------------------------------- actor (device envs)
+
+    def _device_act_step_fn(
+        self, params, buf, rng, env_state, obs, rew_disc, carry, stats
+    ):
+        """The fused per-step actor program for device-resident envs: one
+        XLA dispatch covering RNG split, carry reset, policy inference, the
+        in-place ring write, the BATCHED ENV STEP, and the per-scenario
+        stats fold — with ``buf``, ``rng``, ``env_state``, and ``carry``
+        donated.  Where the host path syncs actions back for ``env.step``,
+        here the env consumes them inside the same program: the device
+        actor loop has NO per-step host sync at all.
+
+        ``rew_disc``/``obs`` are this step's inputs and next step's outputs
+        (same convention as the host path: the reward/discount written at
+        slot t belong to the step that produced obs_t), left undonated so
+        the trajectory drain can read them on boundaries.
+        """
+        rng, a_rng = jax.random.split(rng)
+        if self._recurrent:
+            B = rew_disc.shape[1]
+            ended = rew_disc[1] == 0.0  # prev step closed the episode
+            init = self.agent.initial_carry(B)
+            carry = jax.tree.map(
+                lambda c, c0: jnp.where(
+                    ended.reshape((B,) + (1,) * (c.ndim - 1)), c0, c
+                ),
+                carry, init,
+            )
+        actions, aux, new_carry = self.agent.act(params, obs, a_rng, carry)
+        buf = buffer_add(
+            buf, obs, actions, aux.logp, aux.extras, rew_disc, carry
+        )
+        env_state, ts = self._fleet.step(env_state, actions)
+        stats = self._fleet.update_stats(stats, ts)
+        # same discount convention as the host path: cfg.discount on live
+        # steps, 0 across episode boundaries (the env's discount channel
+        # supplies the boundary)
+        rew_disc = jnp.stack([
+            ts.reward,
+            (ts.discount != 0.0).astype(jnp.float32) * self.cfg.discount,
+        ])
+        return buf, rng, env_state, ts.obs, rew_disc, new_carry, stats
+
+    def _device_actor_loop(
+        self, thread_id: int, core_id: int, seed: int
+    ) -> None:
+        cfg = self.cfg
+        device = self.split.actor_devices[core_id]
+        fleet = self._fleet
+        env_key, rng = jax.random.split(jax.random.key(seed))
+        env_state = jax.device_put(fleet.init(env_key), device)
+        obs = jax.device_put(fleet.observe(env_state), device)
+        rew_disc = jax.device_put(
+            jnp.zeros((2, cfg.actor_batch_size), jnp.float32), device
+        )
+        stats = jax.device_put(fleet.init_stats(), device)
+        rng = jax.device_put(rng, device)
+        carry = self._initial_carry(device)
+        buf = None
+        t = 0
+        last_version = 0
+        try:
+            while not self._stop.is_set():
+                version, params = self._param_slots[core_id]
+                if version != last_version:
+                    last_version = version
+                    if self._slot_consumed[core_id] < version:
+                        self._slot_consumed[core_id] = version
+                if buf is None:
+                    buf = self._make_actor_buffer(params, obs, device)
+                if t == cfg.trajectory_length:
+                    traj, buf = self._drain(buf, rew_disc, obs)
+                    t = 0
+                    # stats is undonated and cumulative: publishing the
+                    # handle is the whole snapshot (no copy, no sync)
+                    self._thread_stats[thread_id] = stats
+                    shards = self._shard_for_learners(traj)
+                    if not self._queue_put(shards, thread_id):
+                        return
+                buf, rng, env_state, obs, rew_disc, carry, stats = (
+                    self._device_act_step(
+                        params, buf, rng, env_state, obs, rew_disc, carry,
+                        stats,
+                    )
+                )
+                self._thread_frames[thread_id] += cfg.actor_batch_size
+                t += 1
+        finally:
+            self._thread_stats[thread_id] = stats
 
     def _queue_put(self, shards, thread_id: int) -> bool:
         """Blocking put that never silently drops a trajectory.
@@ -721,6 +905,27 @@ class Sebulba:
 
         return jax.jit(update, donate_argnums=(0, 1, 2, 4)), core
 
+    def _scenario_snapshot(self):
+        """Aggregate the per-thread FleetStats snapshots into the
+        per-scenario counters dict (plus the overall mean completed-episode
+        return).  Reads — and therefore syncs on — the snapshot arrays, so
+        callers only hit this on log/result boundaries."""
+        snaps = [s for s in self._thread_stats if s is not None]
+        if not snaps:
+            return {}, float("nan")
+        # threads on different actor cores hold stats on different devices;
+        # pull each snapshot to host before summing (this IS the boundary
+        # sync the docstring describes)
+        snaps = [jax.device_get(s) for s in snaps]
+        total = jax.tree.map(lambda *xs: sum(xs), *snaps)
+        scenarios = self._fleet.stats_summary(total)
+        if self.replay_strata:
+            for name, slots in self.replay_strata.items():
+                scenarios[name]["replay_slots"] = slots
+        eps = sum(v["episodes"] for v in scenarios.values())
+        rets = sum(v["return_sum"] for v in scenarios.values())
+        return scenarios, (rets / eps if eps else float("nan"))
+
     # ----------------------------------------------------------------- run
 
     def run(
@@ -848,10 +1053,13 @@ class Sebulba:
                     if m is not None:
                         last_metrics = m
                         macc = self._fresh_macc()
-                    ret = (
-                        np.mean(self.episode_returns)
-                        if self.episode_returns else float("nan")
-                    )
+                    if self._fleet is not None:
+                        _, ret = self._scenario_snapshot()
+                    else:
+                        ret = (
+                            np.mean(self.episode_returns)
+                            if self.episode_returns else float("nan")
+                        )
                     print(
                         f"update {updates} frames {self.frames} "
                         f"return {ret:.2f} " +
@@ -873,16 +1081,22 @@ class Sebulba:
             updates=base_updates + updates, frames=base_frames + self.frames,
         )
         dt = time.time() - t0
+        if self._fleet is not None:
+            scenarios, mean_return = self._scenario_snapshot()
+        else:
+            scenarios = {}
+            mean_return = (
+                float(np.mean(self.episode_returns))
+                if self.episode_returns else float("nan")
+            )
         return api.make_result(
             params=params,
             updates=updates,
             frames=self.frames,
             seconds=dt,
             metrics=last_metrics,
-            mean_return=(
-                float(np.mean(self.episode_returns))
-                if self.episode_returns else float("nan")
-            ),
+            mean_return=mean_return,
+            scenarios=scenarios,
             # logical publish version actors observe via the versioned
             # slots: init's publish + one per learner update (throttled
             # cores skip transfers, not versions)
@@ -918,11 +1132,14 @@ class Sebulba:
         supports closing — pass ``obs_shape`` explicitly when env
         construction is expensive."""
         if obs_shape is None:
-            probe = self.env_factory(0)
-            obs_shape = probe.obs_shape
-            close = getattr(probe, "close", None)
-            if callable(close):
-                close()
+            if self._fleet is not None:
+                obs_shape = self._fleet.obs_shape
+            else:
+                probe = self.env_factory(0)
+                obs_shape = probe.obs_shape
+                close = getattr(probe, "close", None)
+                if callable(close):
+                    close()
         return self.run(
             rng, obs_shape, total_frames, log_every=log_every,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,

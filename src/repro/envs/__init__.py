@@ -1,5 +1,12 @@
 from repro.envs.catch import Catch  # noqa: F401
 from repro.envs.gridworld import GridWorld  # noqa: F401
+from repro.envs.pong import Pong, spawn_ball  # noqa: F401
 from repro.envs.host_env import HostPong  # noqa: F401
 from repro.envs.batched_env import BatchedHostEnv  # noqa: F401
 from repro.envs.bandit import Bandit, HostBandit  # noqa: F401
+from repro.envs.device_env import (  # noqa: F401
+    DeviceEnvFleet,
+    FleetStats,
+    HostDeviceEnv,
+)
+from repro.envs.types import TimeStep  # noqa: F401

@@ -1,0 +1,232 @@
+"""Device-resident environment fleet (Anakin-style batched pure-JAX envs).
+
+``BENCH_sebulba.json`` shows the fused actor pipeline's win collapsing as
+the batch grows because host env stepping + the per-step action sync
+dominate — the Podracer paper's own prescription for that regime is to
+put the environments on the accelerator.  ``DeviceEnvFleet`` is that
+path: a batch of ``repro.api.DeviceEnv`` environments exposed as three
+pure batched functions
+
+    fleet.init(rng)            -> FleetState            ((B, ...) leaves)
+    fleet.step(state, actions) -> (FleetState, TimeStep with (B,) fields)
+    fleet.observe(state)       -> obs (B, ...)
+
+that compose into ONE donated jit with the agent's ``act`` (Sebulba's
+device actor branch, core/sebulba.py) or into Anakin's compiled block —
+the interaction loop never touches the host, and the per-step action
+sync of the host path disappears entirely.
+
+Scenario mix: the fleet batch is apportioned across a weighted
+``ScenarioMix`` portfolio (repro/api/env.py).  Rows are laid out
+scenario-blocked *within each of ``shards`` equal blocks*, so slicing the
+batch across learner shards (or Anakin devices) gives every shard the
+same scenario composition — which also makes replay-ring slots
+scenario-pure when the ring capacity aligns (the per-scenario replay
+strata; see core/sebulba.py).  ``scenario_ids`` names each row's
+scenario; ``FleetStats`` accumulates per-scenario reward/episode counters
+on device inside the fused step (drained to host only on trajectory
+boundaries).
+
+``HostDeviceEnv`` adapts a single DeviceEnv to the imperative host API
+(``reset()/step(a) -> obs, reward, done, info``) by stepping it eagerly —
+the bit-exactness reference the jit+vmap fleet is pinned against
+(tests/test_device_envs.py), and a way to drive device envs through the
+BatchedHostEnv pipeline for A/B comparisons.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.env import (
+    ScenarioMix,
+    resolve_scenarios,
+    scenario_rows,
+)
+from repro.envs.types import TimeStep
+
+PyTree = Any
+
+
+class FleetStats(NamedTuple):
+    """Per-scenario counters, accumulated ON DEVICE inside the fused step.
+
+    ``running_return`` is the per-row return of the episode in flight;
+    completed episodes fold into the (S,) scenario aggregates.  All
+    counters are cumulative over the fleet's lifetime, so the host can
+    read a consistent snapshot at any boundary without resetting state.
+    """
+
+    running_return: jax.Array  # (B,) float32
+    reward_sum: jax.Array  # (S,) float32 — all rewards, complete or not
+    return_sum: jax.Array  # (S,) float32 — sum of COMPLETED episode returns
+    episodes: jax.Array  # (S,) float32 — completed episode count
+
+
+class DeviceEnvFleet:
+    """A batch of device envs (one scenario portfolio) as pure functions.
+
+    Stateless like the envs it wraps: all mutable state lives in the
+    ``FleetState`` pytree (a tuple of per-scenario stacked env states), so
+    one fleet instance serves every actor thread.  ``shards`` interleaves
+    the scenario layout so any split of the batch into ``shards`` equal
+    blocks preserves the scenario mix per block (batch must divide by
+    ``shards``).
+    """
+
+    def __init__(self, env_or_scenarios, num_envs: int, shards: int = 1):
+        self.scenarios: tuple[ScenarioMix, ...] = resolve_scenarios(
+            env_or_scenarios
+        )
+        if num_envs % shards:
+            raise ValueError(
+                f"fleet batch {num_envs} must divide across {shards} shards"
+            )
+        self.num_envs = num_envs
+        self.shards = shards
+        self.envs = tuple(s.env_factory() for s in self.scenarios)
+        self.num_actions = self.envs[0].num_actions
+        self.obs_shape = tuple(self.envs[0].obs_shape)
+        self.num_scenarios = len(self.scenarios)
+        # rows per scenario within ONE shard block, replicated over blocks
+        per_shard = scenario_rows(self.scenarios, num_envs // shards)
+        self.rows = tuple(r * shards for r in per_shard)
+        block = np.concatenate(
+            [np.full(r, i, np.int32) for i, r in enumerate(per_shard)]
+        )
+        self.scenario_ids = np.tile(block, shards)  # (B,) row -> scenario
+        # per-scenario row gather indices: scenario s owns the rows where
+        # scenario_ids == s (contiguous within each shard block)
+        self._gather = tuple(
+            np.flatnonzero(self.scenario_ids == i).astype(np.int32)
+            for i in range(self.num_scenarios)
+        )
+
+    # ------------------------------------------------------------- pure fns
+
+    def init(self, rng: jax.Array):
+        """Per-row keys -> tuple of per-scenario stacked env states."""
+        keys = jax.random.split(rng, self.num_envs)
+        return tuple(
+            jax.vmap(env.init)(keys[jnp.asarray(idx)])
+            for env, idx in zip(self.envs, self._gather)
+        )
+
+    def observe(self, state) -> jax.Array:
+        obs = [
+            jax.vmap(env.observe)(s) for env, s in zip(self.envs, state)
+        ]
+        return self._scatter(obs)
+
+    def step(self, state, actions: jax.Array):
+        """Batched step across the portfolio -> (state, TimeStep((B,) ...)).
+
+        Each scenario's sub-batch steps under its own vmapped ``step``;
+        the timestep fields scatter back to the fleet row order, so the
+        consumer sees one (B,) batch regardless of the mix.
+        """
+        new_state, steps = [], []
+        for env, idx, s in zip(self.envs, self._gather, state):
+            ns, ts = jax.vmap(env.step)(s, actions[jnp.asarray(idx)])
+            new_state.append(ns)
+            steps.append(ts)
+        ts = TimeStep(
+            obs=self._scatter([t.obs for t in steps]),
+            reward=self._scatter([t.reward for t in steps]),
+            discount=self._scatter([t.discount for t in steps]),
+            first=self._scatter([t.first for t in steps]),
+        )
+        return tuple(new_state), ts
+
+    def _scatter(self, parts: Sequence[jax.Array]) -> jax.Array:
+        """Per-scenario (r_s, ...) stacks -> fleet row order (B, ...)."""
+        if self.num_scenarios == 1:
+            return parts[0]
+        out = jnp.concatenate(parts, axis=0)
+        order = np.concatenate(self._gather)
+        inv = np.empty_like(order)
+        inv[order] = np.arange(len(order), dtype=np.int32)
+        return out[jnp.asarray(inv)]
+
+    # ------------------------------------------------------------ stats
+
+    def init_stats(self) -> FleetStats:
+        S = self.num_scenarios
+        return FleetStats(
+            running_return=jnp.zeros((self.num_envs,), jnp.float32),
+            reward_sum=jnp.zeros((S,), jnp.float32),
+            return_sum=jnp.zeros((S,), jnp.float32),
+            episodes=jnp.zeros((S,), jnp.float32),
+        )
+
+    def update_stats(self, stats: FleetStats, ts: TimeStep) -> FleetStats:
+        """Fold one batched step into the per-scenario counters (traced
+        inside the fused actor step — pure, no host sync)."""
+        seg = jnp.asarray(self.scenario_ids)
+        S = self.num_scenarios
+        done = (ts.discount == 0.0).astype(jnp.float32)
+        running = stats.running_return + ts.reward
+        return FleetStats(
+            running_return=running * (1.0 - done),
+            reward_sum=stats.reward_sum
+            + jax.ops.segment_sum(ts.reward, seg, S),
+            return_sum=stats.return_sum
+            + jax.ops.segment_sum(running * done, seg, S),
+            episodes=stats.episodes + jax.ops.segment_sum(done, seg, S),
+        )
+
+    def stats_summary(self, stats: FleetStats) -> dict:
+        """Host-side snapshot -> {scenario: counters} (syncs on ``stats``;
+        call on boundaries only)."""
+        reward = np.asarray(stats.reward_sum)
+        returns = np.asarray(stats.return_sum)
+        episodes = np.asarray(stats.episodes)
+        out = {}
+        for i, s in enumerate(self.scenarios):
+            n = float(episodes[i])
+            out[s.name] = {
+                "weight": s.weight,
+                "rows": self.rows[i],
+                "episodes": int(n),
+                "reward_sum": float(reward[i]),
+                "return_sum": float(returns[i]),
+                "mean_return": float(returns[i] / n) if n else float("nan"),
+            }
+        return out
+
+
+class HostDeviceEnv:
+    """A single DeviceEnv behind the imperative host API (eager stepping).
+
+    Device envs auto-reset inside ``step`` (the returned obs already opens
+    the next episode), so after the first call ``reset()`` is a no-op
+    returning the current observation — exactly what ``BatchedHostEnv``'s
+    done-handling expects, which keeps a pool of these bit-aligned with a
+    ``DeviceEnvFleet`` over the same seeds (the parity suite's harness).
+    """
+
+    def __init__(self, env, seed: int = 0):
+        self.env = env
+        self.num_actions = env.num_actions
+        self.obs_shape = tuple(env.obs_shape)
+        self._rng = jax.random.key(seed)
+        self._state = None
+
+    def reset(self) -> np.ndarray:
+        if self._state is None:
+            self._state = self.env.init(self._rng)
+        return np.asarray(self.env.observe(self._state))
+
+    def step(self, action):
+        if self._state is None:
+            self._state = self.env.init(self._rng)
+        self._state, ts = self.env.step(self._state, jnp.int32(action))
+        done = bool(np.asarray(ts.discount) == 0.0)
+        return np.asarray(ts.obs), np.float32(ts.reward), done, {}
+
+    def close(self) -> None:  # host-API symmetry; nothing to release
+        self._state = None

@@ -6,11 +6,23 @@ environment that cannot be compiled to TPU" of the paper (their Atari).
 rally of ``max_lives`` balls.  Observations are (H, W, 1) float32 frames.
 Deliberately implemented with numpy state mutation + a dm_env-style step
 API, so it exercises exactly the host<->device pipeline Sebulba exists for.
+
+Ball spawns come from the counter-based ``spawn_ball`` stream shared with
+the device twin (repro/envs/pong.py) — ``jax.random`` draws are
+deterministic and identical whether evaluated eagerly here or traced on
+the device, which is what makes the twins bit-exact under the parity
+suite (tests/test_device_envs.py).  The terminal miss keeps the board
+exactly as the agent saw it die: the ``done=True`` frame shows the missed
+ball at the bottom row, and the respawn draw happens in ``reset()``.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+import jax
+
+from repro.envs.pong import spawn_ball
 
 
 class HostPong:
@@ -22,17 +34,20 @@ class HostPong:
         self.w = width
         self.max_lives = max_lives
         self.obs_shape = (height, width, 1)
-        self._rng = np.random.RandomState(seed)
+        self._key = jax.random.key(seed)
+        self._spawn_n = 0
         self._reset_ball()
         self.paddle = self.w // 2
         self.lives = self.max_lives
         self.needs_reset = False
 
     def _reset_ball(self) -> None:
+        ball_x, vx = spawn_ball(self._key, self._spawn_n, self.w)
+        self._spawn_n += 1
         self.ball_y = 0.0
-        self.ball_x = float(self._rng.randint(1, self.w - 1))
+        self.ball_x = float(ball_x)
         self.vy = 1.0
-        self.vx = float(self._rng.choice([-1, 1]))
+        self.vx = float(vx)
 
     def reset(self) -> np.ndarray:
         self._reset_ball()
@@ -67,7 +82,11 @@ class HostPong:
             else:
                 reward = -1.0
                 self.lives -= 1
-                self._reset_ball()
+                if self.lives > 0:
+                    # mid-episode miss: respawn the ball.  The terminal
+                    # miss keeps the board intact so the done frame shows
+                    # the miss; reset() draws the next spawn.
+                    self._reset_ball()
         elif self.ball_y <= 0:
             self.vy = 1.0
         done = self.lives <= 0

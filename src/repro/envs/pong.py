@@ -1,0 +1,150 @@
+"""Pong — the device twin of ``HostPong``, pure JAX (Anakin contract).
+
+Same arcade game as repro/envs/host_env.py: a ball bounces around an
+(H x W) board, the agent moves a 3-cell-tolerance paddle on the bottom
+row, an episode is a rally of ``max_lives`` balls.  Implemented against
+the ``repro.api.DeviceEnv`` contract so the whole interaction loop can be
+jitted/vmapped on the accelerator (the fused env+act actor step,
+repro/envs/device_env.py).
+
+Bit-exact parity with the host twin (tests/test_device_envs.py) hinges on
+the randomness: both twins draw ball spawns from the SAME counter-based
+Philox stream (``spawn_ball`` — ``jax.random`` is deterministic and
+backend-independent, so the host twin evaluates the identical draw
+eagerly on CPU while the device env traces it).  Each spawn consumes one
+monotone counter tick per env lifetime; auto-reset (device) and
+``reset()`` (host) advance the same counter, so the obs/reward/done
+streams stay aligned through episode boundaries.
+
+Semantics mirrored from the (fixed) host twin exactly:
+
+  * a miss with lives remaining respawns the ball only (one spawn draw);
+  * the terminal miss keeps the board as the agent saw it die — no
+    mid-step respawn — and the auto-reset then rebuilds the full board
+    (fresh ball, centred paddle, full lives: one spawn draw), matching
+    ``HostPong.step`` returning the true terminal frame and
+    ``BatchedHostEnv`` fanning out ``reset()``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.types import TimeStep
+
+
+def spawn_ball(key: jax.Array, n, width: int):
+    """Ball spawn draw ``n`` of the env whose stream is ``key``:
+    -> (ball_x float32 in [1, width-2], vx float32 in {-1, +1}).
+
+    Counter-based so the numpy host twin and the jitted device env consume
+    the same stream: draw ``n`` depends only on (key, n), never on how
+    many times either side re-traced or batched the call.
+    """
+    k = jax.random.fold_in(key, n)
+    kx, kv = jax.random.split(k)
+    ball_x = jax.random.randint(kx, (), 1, width - 1).astype(jnp.float32)
+    vx = jnp.where(jax.random.bernoulli(kv), 1.0, -1.0).astype(jnp.float32)
+    return ball_x, vx
+
+
+class PongState(NamedTuple):
+    ball_y: jax.Array  # () float32
+    ball_x: jax.Array  # () float32
+    vy: jax.Array  # () float32
+    vx: jax.Array  # () float32
+    paddle: jax.Array  # () int32
+    lives: jax.Array  # () int32
+    key: jax.Array  # env stream key (constant per env lifetime)
+    spawn_n: jax.Array  # () int32 — monotone spawn counter (parity seam)
+
+
+class Pong:
+    num_actions = 3  # left / stay / right
+
+    def __init__(self, height: int = 16, width: int = 16, max_lives: int = 3):
+        self.h = height
+        self.w = width
+        self.max_lives = max_lives
+        self.obs_shape = (height, width, 1)
+        self.discount = 0.99
+
+    def init(self, rng: jax.Array) -> PongState:
+        ball_x, vx = spawn_ball(rng, 0, self.w)
+        return PongState(
+            ball_y=jnp.float32(0.0),
+            ball_x=ball_x,
+            vy=jnp.float32(1.0),
+            vx=vx,
+            paddle=jnp.int32(self.w // 2),
+            lives=jnp.int32(self.max_lives),
+            key=rng,
+            spawn_n=jnp.int32(1),
+        )
+
+    def observe(self, s: PongState) -> jax.Array:
+        obs = jnp.zeros(self.obs_shape, jnp.float32)
+        y = jnp.clip(jnp.round(s.ball_y), 0, self.h - 1).astype(jnp.int32)
+        x = jnp.clip(jnp.round(s.ball_x), 0, self.w - 1).astype(jnp.int32)
+        obs = obs.at[y, x, 0].set(1.0)
+        obs = obs.at[self.h - 1, s.paddle, 0].set(1.0)
+        return obs
+
+    def step(self, s: PongState, action: jax.Array) -> tuple[PongState, TimeStep]:
+        paddle = jnp.clip(s.paddle + (action - 1), 0, self.w - 1).astype(
+            jnp.int32
+        )
+        ball_y = s.ball_y + s.vy
+        ball_x = s.ball_x + s.vx
+        wall = (ball_x <= 0) | (ball_x >= self.w - 1)
+        vx = jnp.where(wall, -s.vx, s.vx)
+        ball_x = jnp.clip(ball_x, 0.0, float(self.w - 1))
+
+        at_bottom = ball_y >= self.h - 1
+        caught = at_bottom & (jnp.abs(ball_x - paddle) <= 1)
+        missed = at_bottom & ~caught
+        reward = jnp.where(caught, 1.0, jnp.where(missed, -1.0, 0.0))
+        vy = jnp.where(caught, -1.0, jnp.where(ball_y <= 0, 1.0, s.vy))
+        ball_y = jnp.where(caught, jnp.float32(self.h - 2), ball_y)
+        lives = s.lives - missed.astype(jnp.int32)
+        done = lives <= 0
+
+        # one spawn draw serves both branches (they are mutually exclusive):
+        # a non-terminal miss respawns the ball, the terminal miss defers
+        # the draw to the auto-reset below — matching the host twin, where
+        # ``step`` keeps the terminal board intact and ``reset()`` draws.
+        fresh_x, fresh_vx = spawn_ball(s.key, s.spawn_n, self.w)
+        respawn = missed & ~done
+        moved = PongState(
+            ball_y=jnp.where(respawn, 0.0, ball_y),
+            ball_x=jnp.where(respawn, fresh_x, ball_x),
+            vy=jnp.where(respawn, 1.0, vy),
+            vx=jnp.where(respawn, fresh_vx, vx),
+            paddle=paddle,
+            lives=lives,
+            key=s.key,
+            spawn_n=s.spawn_n + missed.astype(jnp.int32),
+        )
+        reset = PongState(
+            ball_y=jnp.float32(0.0),
+            ball_x=fresh_x,
+            vy=jnp.float32(1.0),
+            vx=fresh_vx,
+            paddle=jnp.int32(self.w // 2),
+            lives=jnp.int32(self.max_lives),
+            key=s.key,
+            spawn_n=s.spawn_n + 1,
+        )
+        new_state = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), reset, moved
+        )
+        ts = TimeStep(
+            obs=self.observe(new_state),
+            reward=reward.astype(jnp.float32),
+            discount=jnp.where(done, 0.0, self.discount).astype(jnp.float32),
+            first=done,
+        )
+        return new_state, ts

@@ -21,3 +21,13 @@ _MODULES = sorted(
 def test_benchmark_module_imports(name):
     mod = importlib.import_module(f"benchmarks.{name}")
     assert hasattr(mod, "main") or name == "_timing", name
+
+
+def test_run_registers_envs_suite():
+    """``--suite envs`` stays wired to env_bench -> BENCH_envs.json."""
+    import inspect
+
+    from benchmarks import run
+
+    assert '"envs": _envs_suite' in inspect.getsource(run.main)
+    assert "BENCH_envs.json" in inspect.getsource(run._envs_suite)

@@ -1,0 +1,463 @@
+"""Device env zoo: contract validation, host-twin bit-exact parity,
+jit/vmap invariance, fleet scenario mixing, and the fused env+act step."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, optim
+from repro.agents.actor_critic import BatchedMLPActorCritic, MLPActorCritic
+from repro.api import ScenarioMix, resolve_scenarios, scenario_rows
+from repro.configs.base import ReplayConfig
+from repro.core.anakin import Anakin, AnakinConfig
+from repro.core.sebulba import Sebulba, SebulbaConfig
+from repro.envs import (
+    Bandit,
+    Catch,
+    DeviceEnvFleet,
+    GridWorld,
+    HostDeviceEnv,
+    HostPong,
+    Pong,
+)
+
+# ------------------------------------------------------------- contract
+
+
+@pytest.mark.parametrize("env_cls", [Bandit, Catch, GridWorld, Pong])
+def test_device_env_contract(env_cls):
+    api.validate_device_env(env_cls())
+
+
+def test_contract_rejects_host_envs():
+    with pytest.raises(ValueError, match="BatchedHostEnv path"):
+        api.validate_device_env(HostPong())
+
+
+def test_contract_rejects_lying_obs_shape():
+    class LyingPong:
+        num_actions = 3
+        obs_shape = (4, 4, 1)  # declared shape != observe's real output
+
+        def __init__(self):
+            self._env = Pong()
+
+        def init(self, rng):
+            return self._env.init(rng)
+
+        def observe(self, state):
+            return self._env.observe(state)
+
+        def step(self, state, action):
+            return self._env.step(state, action)
+
+    with pytest.raises(ValueError, match="obs_shape"):
+        api.validate_device_env(LyingPong())
+
+
+# ------------------------------------------- host twin bit-exact parity
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_pong_matches_host_twin_bit_exact(seed):
+    """Same seed -> identical obs/reward/done streams from the numpy
+    HostPong and the pure-JAX Pong, through episode boundaries (the host
+    twin's reset() consumes the same spawn draw the device env's
+    auto-reset does)."""
+    host = HostPong(seed=seed)
+    dev = HostDeviceEnv(Pong(), seed=seed)
+    assert np.array_equal(host._observe(), dev.reset())
+    rng = np.random.RandomState(seed)
+    terminals = 0
+    for t in range(400):
+        a = int(rng.randint(3))
+        d_obs, d_rew, d_done, _ = dev.step(a)
+        h_obs, h_rew, h_done, _ = host.step(a)
+        assert h_rew == d_rew and h_done == d_done, f"step {t}"
+        if h_done:
+            terminals += 1
+            # the device obs already opened the next episode; the host
+            # twin gets there via reset(), consuming the same draw
+            assert np.array_equal(host.reset(), d_obs), f"step {t}"
+        else:
+            assert np.array_equal(h_obs, d_obs), f"step {t}"
+    assert terminals >= 3
+
+
+def test_hostpong_terminal_frame_shows_the_miss():
+    """The done frame is the true terminal board: the missed ball sits on
+    the bottom row, not respawned at the top (old bug)."""
+    env = HostPong(max_lives=1, seed=0)
+    for _ in range(100):
+        obs, _, done, _ = env.step(1)
+        if done:
+            break
+    assert done
+    assert obs[0].sum() == 0.0, "no freshly-spawned ball at the top"
+    assert obs[-1].sum() == 2.0, "miss frame: ball AND paddle on bottom row"
+    assert env.ball_y >= env.h - 1
+
+
+def test_spawn_stream_is_trace_invariant():
+    from repro.envs import spawn_ball
+
+    key = jax.random.key(7)
+    eager = [spawn_ball(key, n, 16) for n in range(5)]
+    jitted = jax.jit(lambda n: spawn_ball(key, n, 16))
+    for n, (x, v) in enumerate(eager):
+        jx, jv = jitted(n)
+        assert float(x) == float(jx) and float(v) == float(jv)
+        assert 1 <= float(x) <= 14 and float(v) in (-1.0, 1.0)
+
+
+# -------------------------------------------------- fleet vs eager envs
+
+
+@pytest.mark.parametrize(
+    "env_factory,steps",
+    [
+        (lambda: Bandit(), 30),
+        (lambda: Catch(), 60),
+        (lambda: GridWorld(size=5, horizon=12), 60),
+        (lambda: Pong(max_lives=1), 100),
+    ],
+)
+def test_fleet_matches_eager_env_streams(env_factory, steps):
+    """The jitted, vmapped fleet reproduces each row's single-env stream
+    bit-exactly, through auto-reset boundaries.  (The reference step is
+    jitted too: vmap is bit-exact, but XLA's fma fusion makes compiled
+    float arithmetic differ from eager by 1 ulp on some envs.)"""
+    B = 4
+    env = env_factory()
+    fleet = DeviceEnvFleet(env_factory, B)
+    root = jax.random.key(42)
+    fstate = fleet.init(root)
+    keys = jax.random.split(root, B)
+    estates = [env.init(keys[i]) for i in range(B)]
+    np.testing.assert_array_equal(
+        np.asarray(fleet.observe(fstate)),
+        np.stack([np.asarray(env.observe(s)) for s in estates]),
+    )
+    fstep = jax.jit(fleet.step)
+    estep = jax.jit(env.step)
+    rng = np.random.RandomState(0)
+    for t in range(steps):
+        actions = rng.randint(0, env.num_actions, size=B)
+        fstate, fts = fstep(fstate, jnp.asarray(actions, jnp.int32))
+        for i in range(B):
+            estates[i], ets = estep(estates[i], jnp.int32(actions[i]))
+            np.testing.assert_array_equal(
+                np.asarray(fts.obs)[i], np.asarray(ets.obs), f"row {i} t {t}"
+            )
+            assert float(fts.reward[i]) == float(ets.reward)
+            assert float(fts.discount[i]) == float(ets.discount)
+
+
+def test_hostdeviceenv_adapter_autoresets():
+    env = HostDeviceEnv(Catch(), seed=1)
+    obs = env.reset()
+    assert obs.shape == env.obs_shape
+    dones = 0
+    for _ in range(40):
+        obs, rew, done, _ = env.step(1)
+        dones += bool(done)
+        # reset after done is a no-op: the device env already reset
+        if done:
+            assert np.array_equal(env.reset(), obs)
+    assert dones >= 3
+
+
+# ------------------------------------------------------- scenario mixes
+
+
+def test_scenario_rows_apportionment():
+    mix = [
+        ScenarioMix("a", 2.0, Pong),
+        ScenarioMix("b", 1.0, Pong),
+        ScenarioMix("c", 1.0, Pong),
+    ]
+    scenarios = resolve_scenarios(mix)
+    rows = scenario_rows(scenarios, 16)
+    assert sum(rows) == 16 and all(r >= 1 for r in rows)
+    assert rows[0] > rows[1] == rows[2]
+    # every scenario is guaranteed a seat even at tiny batches
+    assert scenario_rows(scenarios, 3) == (1, 1, 1)
+    with pytest.raises(ValueError, match="cannot seat"):
+        scenario_rows(scenarios, 2)
+
+
+def test_resolve_scenarios_validation():
+    with pytest.raises(ValueError, match="unique"):
+        resolve_scenarios(
+            [ScenarioMix("x", 1.0, Pong), ScenarioMix("x", 1.0, Pong)]
+        )
+    with pytest.raises(ValueError, match="> 0"):
+        resolve_scenarios([ScenarioMix("x", 0.0, Pong)])
+    with pytest.raises(ValueError, match="share obs_shape"):
+        resolve_scenarios(
+            [ScenarioMix("p", 1.0, Pong), ScenarioMix("c", 1.0, Catch)]
+        )
+    # a bare env or factory normalizes to a one-entry portfolio
+    (only,) = resolve_scenarios(Pong())
+    assert only.name == "Pong" and only.weight == 1.0
+    (only,) = resolve_scenarios(Catch)
+    assert only.name == "Catch"
+
+
+def test_fleet_shard_layout_preserves_mix():
+    """Each of the ``shards`` equal blocks carries the same scenario
+    composition, so slicing across learner devices keeps the mix."""
+    mix = [
+        ScenarioMix("a", 1.0, lambda: Pong(max_lives=1)),
+        ScenarioMix("b", 1.0, Pong),
+    ]
+    fleet = DeviceEnvFleet(mix, 8, shards=2)
+    ids = fleet.scenario_ids
+    first, second = ids[:4], ids[4:]
+    np.testing.assert_array_equal(first, second)
+    assert fleet.rows == (4, 4)
+    with pytest.raises(ValueError, match="divide"):
+        DeviceEnvFleet(mix, 6, shards=4)
+
+
+def test_fleet_stats_counts_per_scenario():
+    """On-device segment counters match a host-side tally of the same
+    timestep stream, attributed to the right scenario rows."""
+    mix = [
+        ScenarioMix("lives1", 1.0, lambda: Pong(max_lives=1)),
+        ScenarioMix("lives3", 2.0, Pong),
+    ]
+    fleet = DeviceEnvFleet(mix, 5)
+    assert fleet.rows == (2, 3)
+    ids = np.asarray(fleet.scenario_ids)
+    state = fleet.init(jax.random.key(0))
+    stats = fleet.init_stats()
+    step = jax.jit(fleet.step)
+    rng = np.random.RandomState(1)
+    expect_eps = np.zeros(2)
+    expect_rew = np.zeros(2)
+    for _ in range(150):
+        actions = jnp.asarray(rng.randint(0, 3, size=5), jnp.int32)
+        state, ts = step(state, actions)
+        stats = fleet.update_stats(stats, ts)
+        done = np.asarray(ts.discount) == 0.0
+        rew = np.asarray(ts.reward)
+        for s in range(2):
+            expect_eps[s] += done[ids == s].sum()
+            expect_rew[s] += rew[ids == s].sum()
+    summary = fleet.stats_summary(stats)
+    assert expect_eps[0] > 0 and expect_eps[1] > 0
+    for s, name in enumerate(("lives1", "lives3")):
+        assert summary[name]["rows"] == fleet.rows[s]
+        assert summary[name]["episodes"] == expect_eps[s]
+        assert summary[name]["reward_sum"] == pytest.approx(expect_rew[s])
+    assert np.isfinite(summary["lives1"]["mean_return"])
+
+
+# ------------------------------------------- fused env+act step (Sebulba)
+
+
+def _device_sebulba(cfg=None, **kw):
+    cfg = cfg or SebulbaConfig(
+        num_actor_cores=1, threads_per_actor_core=1,
+        actor_batch_size=4, trajectory_length=4,
+    )
+    return Sebulba(
+        network=BatchedMLPActorCritic(num_actions=3, hidden=(16,)),
+        optimizer=optim.sgd(1e-3), config=cfg,
+        device_env=kw.pop("device_env", Pong), **kw,
+    )
+
+
+def test_fused_env_act_step_donation():
+    """The device actor program donates the ring, rng, env state, and
+    carry — the whole actor state updates in place, one dispatch a step."""
+    seb = _device_sebulba()
+    fleet = seb._fleet
+    device = seb.split.actor_devices[0]
+    params, _ = seb.init(jax.random.key(0), fleet.obs_shape)
+    env_state = jax.device_put(fleet.init(jax.random.key(1)), device)
+    obs = jax.device_put(fleet.observe(env_state), device)
+    rew_disc = jax.device_put(jnp.zeros((2, 4), jnp.float32), device)
+    stats = jax.device_put(fleet.init_stats(), device)
+    rng = jax.device_put(jax.random.key(2), device)
+    buf = seb._make_actor_buffer(params, obs, device)
+
+    old_buf, old_env = buf, env_state
+    buf_ptr = buf.obs.unsafe_buffer_pointer()
+    out = seb._device_act_step(
+        params, buf, rng, env_state, obs, rew_disc, (), stats
+    )
+    buf, rng, env_state, obs, rew_disc, carry, stats = out
+    jax.block_until_ready(out)
+    assert old_buf.obs.is_deleted(), "donated ring must be consumed"
+    assert buf.obs.unsafe_buffer_pointer() == buf_ptr, (
+        "donation must reuse the ring storage in place"
+    )
+    assert all(
+        leaf.is_deleted() for leaf in jax.tree.leaves(old_env)
+    ), "donated env state must be consumed"
+    assert not any(
+        leaf.is_deleted() for leaf in jax.tree.leaves(params)
+    ), "params are read-only"
+    assert int(buf.t) == 1
+
+
+def test_sebulba_device_env_end_to_end():
+    """Device-env Sebulba trains across a 2-scenario mix and reports
+    per-scenario counters through the unified result schema."""
+    seb = _device_sebulba(device_env=[
+        ScenarioMix("lives1", 1.0, lambda: Pong(max_lives=1)),
+        ScenarioMix("lives3", 1.0, Pong),
+    ])
+    res = seb.fit(jax.random.key(0), total_frames=800)
+    assert not (set(api.RESULT_KEYS) - set(res))
+    assert res["frames"] >= 800 and res["updates"] >= 1
+    assert set(res["scenarios"]) == {"lives1", "lives3"}
+    for name, counters in res["scenarios"].items():
+        assert counters["rows"] == 2
+        assert counters["episodes"] > 0
+    assert res["scenarios"]["lives1"]["episodes"] > (
+        res["scenarios"]["lives3"]["episodes"]
+    ), "1-life episodes end ~3x as often"
+    assert np.isfinite(res["mean_return"])
+
+
+def test_sebulba_device_loop_uses_fused_step():
+    """Actor threads drive the fused device step (env+act in one program);
+    the host path's per-step action sync never runs."""
+    calls = []
+    seb = _device_sebulba()
+    real_step = seb._device_act_step
+
+    def spying_step(*args):
+        calls.append(threading.current_thread().name)
+        return real_step(*args)
+
+    seb._device_act_step = spying_step
+    res = seb.fit(jax.random.key(0), total_frames=200)
+    assert res["frames"] >= 200
+    assert calls and all(name.startswith("actor-") for name in calls)
+
+
+def test_sebulba_requires_some_environment():
+    with pytest.raises(ValueError, match="needs an environment"):
+        Sebulba(network=BatchedMLPActorCritic(num_actions=3),
+                optimizer=optim.sgd(1e-3))
+
+
+def test_scenario_replay_strata_validation():
+    mix = [
+        ScenarioMix("a", 1.0, lambda: Pong(max_lives=1)),
+        ScenarioMix("b", 1.0, Pong),
+    ]
+    cfg = SebulbaConfig(
+        num_actor_cores=1, threads_per_actor_core=1, actor_batch_size=4,
+        trajectory_length=4,
+        replay=ReplayConfig(capacity=10, sample_batch_size=4, min_size=4),
+    )
+    net = BatchedMLPActorCritic(num_actions=3, hidden=(16,))
+    with pytest.raises(ValueError, match="scenario-pure"):
+        Sebulba(network=net, optimizer=optim.sgd(1e-3), config=cfg,
+                device_env=mix)
+    cfg = SebulbaConfig(
+        num_actor_cores=1, threads_per_actor_core=1, actor_batch_size=4,
+        trajectory_length=4,
+        replay=ReplayConfig(capacity=12, sample_batch_size=4, min_size=4),
+    )
+    seb = Sebulba(network=net, optimizer=optim.sgd(1e-3), config=cfg,
+                  device_env=mix)
+    # 12 slots cycle the 4-row layout 3 times: 2 rows each x 3
+    assert seb.replay_strata == {"a": 6, "b": 6}
+
+
+_MULTI_CORE_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=3"
+import sys; sys.path.insert(0, {src!r})
+import jax
+from repro import optim
+from repro.agents.actor_critic import BatchedMLPActorCritic
+from repro.api import ScenarioMix
+from repro.core.sebulba import Sebulba, SebulbaConfig
+from repro.envs import Pong
+
+seb = Sebulba(
+    network=BatchedMLPActorCritic(num_actions=3, hidden=(16,)),
+    optimizer=optim.sgd(1e-3),
+    config=SebulbaConfig(num_actor_cores=2, threads_per_actor_core=1,
+                         actor_batch_size=4, trajectory_length=4),
+    device_env=[ScenarioMix("a", 1.0, lambda: Pong(max_lives=1)),
+                ScenarioMix("b", 1.0, Pong)],
+)
+assert len(seb.split.actor_devices) == 2
+res = seb.fit(jax.random.key(0), total_frames=600)
+assert set(res["scenarios"]) == {{"a", "b"}}, res["scenarios"]
+# both actor cores contribute: 2 threads x 2 rows per scenario
+assert res["scenarios"]["a"]["episodes"] > 0
+assert res["scenarios"]["a"]["rows"] == 2
+print("MULTI_CORE_OK", res["scenarios"]["a"]["episodes"])
+"""
+
+
+@pytest.mark.slow
+def test_device_fleet_multi_actor_core_subprocess():
+    """Per-thread FleetStats live on each actor core's own device; the
+    snapshot aggregation must sum them across devices (3-device subprocess:
+    2 actor cores + 1 learner)."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _MULTI_CORE_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=420, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MULTI_CORE_OK" in proc.stdout
+
+
+# ------------------------------------------------------- Anakin (fleet)
+
+
+def _anakin_fleet(mode):
+    fleet = DeviceEnvFleet(
+        [ScenarioMix("easy", 2.0, lambda: Pong(max_lives=1)),
+         ScenarioMix("hard", 1.0, Pong)],
+        8,
+    )
+    cfg = AnakinConfig(unroll_length=4, batch_per_device=8,
+                       iterations_per_call=2, mode=mode)
+    return Anakin(fleet, MLPActorCritic(num_actions=3, hidden=(16,)),
+                  optim.sgd(1e-3), cfg)
+
+
+def test_anakin_fleet_modes_agree():
+    results = {}
+    for mode in ("shard_map", "jit"):
+        res = _anakin_fleet(mode).fit(jax.random.key(0), total_frames=200)
+        assert set(res["scenarios"]) == {"easy", "hard"}
+        assert res["scenarios"]["easy"]["rows"] == 5
+        results[mode] = res
+    for name in ("easy", "hard"):
+        a = results["shard_map"]["scenarios"][name]
+        b = results["jit"]["scenarios"][name]
+        assert a["reward_per_step"] == pytest.approx(
+            b["reward_per_step"], abs=1e-5
+        )
+        assert a["episodes_per_step"] == pytest.approx(
+            b["episodes_per_step"], abs=1e-5
+        )
+
+
+def test_anakin_fleet_batch_must_match():
+    fleet = DeviceEnvFleet(Pong, 4)
+    cfg = AnakinConfig(batch_per_device=8)
+    with pytest.raises(ValueError, match="global batch"):
+        Anakin(fleet, MLPActorCritic(num_actions=3), optim.sgd(1e-3), cfg)

@@ -94,3 +94,88 @@ def test_batched_env_autoreset():
     for env in benv.envs:
         assert env.lives >= 0
         assert not env.needs_reset
+
+
+# ------------------------------------------------ shared pool lifecycle
+
+
+def _fresh_pool_state():
+    """Isolate pool-lifecycle tests from envs other tests leaked (pre-
+    close() code never released references)."""
+    if BatchedHostEnv._shared_pool is not None:
+        BatchedHostEnv._shared_pool.shutdown(wait=False)
+    BatchedHostEnv._shared_pool = None
+    BatchedHostEnv._shared_refs = 0
+
+
+def test_shared_pool_honors_larger_request():
+    """A later caller needing more workers grows the shared pool instead
+    of being silently pinned to the first caller's size (old bug)."""
+    _fresh_pool_state()
+    small = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=2)
+    first_size = small.pool._max_workers
+    big = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=32)
+    assert big.pool is small.pool, "one process-wide pool"
+    assert big.pool._max_workers >= 32 > first_size
+    # and the grown pool actually runs 32-wide batches
+    big.reset()
+    obs, _, _ = big.step(np.zeros(32, np.int64))
+    assert obs.shape == (32,) + big.obs_shape
+    small.close()
+    big.close()
+
+
+def test_batched_env_close_releases_shared_pool():
+    """close() releases the env's pool reference; the last release shuts
+    the shared executor down (threads no longer outlive fit())."""
+    _fresh_pool_state()
+    a = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=2)
+    b = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=2)
+    pool = a.pool
+    a.close()
+    a.close()  # idempotent
+    assert BatchedHostEnv._shared_pool is pool, "b still holds a reference"
+    b.close()
+    assert BatchedHostEnv._shared_pool is None
+    assert pool._shutdown
+    # the next env transparently builds a fresh pool
+    c = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=2)
+    c.reset()
+    c.step(np.zeros(2, np.int64))
+    c.close()
+    assert BatchedHostEnv._shared_pool is None
+
+
+def test_batched_env_private_pool_untouched_by_close():
+    from concurrent.futures import ThreadPoolExecutor
+
+    _fresh_pool_state()
+    pool = ThreadPoolExecutor(max_workers=2)
+    env = BatchedHostEnv(lambda i: HostPong(seed=i), num_envs=2, pool=pool)
+    env.close()
+    assert not pool._shutdown, "caller-owned pools are the caller's to close"
+    pool.shutdown()
+
+
+def test_batched_env_reset_fans_out_over_pool():
+    """reset() steps the member envs on the pool (old code looped
+    serially on the calling thread)."""
+    import threading
+
+    _fresh_pool_state()
+    reset_threads = []
+
+    class RecordingPong(HostPong):
+        def reset(self):
+            reset_threads.append(threading.current_thread().name)
+            return super().reset()
+
+    benv = BatchedHostEnv(lambda i: RecordingPong(seed=i), num_envs=6)
+    obs = benv.reset()
+    assert obs.shape == (6,) + benv.obs_shape
+    assert len(reset_threads) == 6
+    assert all(name.startswith("env-pool") for name in reset_threads)
+    # fan-out returns envs in order: row i is env i's frame
+    for i, env in enumerate(benv.envs):
+        np.testing.assert_array_equal(obs[i], env._observe())
+    benv.close()

@@ -38,6 +38,8 @@ _RL_RUNS = {
     "sebulba_muzero": ["--frames", "300", "--simulations", "4",
                        "--actor-batch", "6", "--trajectory", "6",
                        "--microbatches", "2"],
+    "sebulba_scenarios": ["--frames", "400", "--actor-batch", "6",
+                          "--trajectory", "5"],
 }
 
 
