@@ -1,0 +1,157 @@
+"""Fault-tolerance cost and recovery: throughput degradation + latency.
+
+Measures what supervision (ISSUE 7) actually buys and what it costs, on
+the tiny HostBandit Sebulba topology (1 actor core x 2 threads) so env
+and transport overheads stay constant across conditions:
+
+  * ``no_fault``          — supervision enabled, empty fault plan: the
+    steady-state baseline every other condition is normalized against
+    (and the "supervision is free when nothing fails" claim);
+  * ``crash_restart``     — each actor slot is killed once mid-run by a
+    deterministic ``FaultPlan``; the supervisor restarts both.  Reports
+    the measured recovery latency (death -> replacement's first
+    trajectory put) alongside throughput;
+  * ``hang_watchdog``     — one slot hangs (heartbeats freeze) and the
+    watchdog must cancel + restart it; throughput rides on the surviving
+    slot until the stall budget expires;
+  * ``quarantine_degrade``— one slot crashes past ``max_restarts`` and is
+    quarantined early: the THROUGHPUT-DEGRADATION point — half the fleet
+    for essentially the whole run, normalized FPS against ``no_fault``.
+
+``benchmarks/run.py --suite fault`` writes ``BENCH_fault.json``:
+
+    {"<condition>": {
+        "fps", "frames", "seconds",
+        "actor_restarts", "actor_quarantined", "watchdog_stalls",
+        "throughput_vs_no_fault",              # fps / no_fault fps
+        "recovery_latency_s_mean", "recovery_latency_s_max"  # when any
+    }}
+
+Honest timing: one untimed warmup fit (a throwaway Sebulba on the same
+shapes) populates the in-process XLA compile cache before ANY condition
+is timed — otherwise the first condition eats every compile and the
+faulted conditions come out "faster than no-fault".  Faults are
+scheduled by step, not wall clock, so the schedule is reproducible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks._timing import csv_line
+
+TOTAL_FRAMES = 24_000
+STALL_TIMEOUT = 0.25
+
+
+def _sebulba(plan):
+    import repro.optim as optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    return Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.sgd(1e-3),
+        config=SebulbaConfig(
+            num_actor_cores=1, threads_per_actor_core=2,
+            actor_batch_size=4, trajectory_length=2, queue_capacity=2,
+            max_restarts=2, restart_backoff=0.01,
+            stall_timeout=STALL_TIMEOUT,
+        ),
+        fault_plan=plan,
+    )
+
+
+def _plans():
+    from repro.fault import FaultEvent, FaultPlan
+
+    return {
+        "no_fault": None,
+        "crash_restart": FaultPlan(events=(
+            FaultEvent(kind="crash", target="actor:0", step=50),
+            FaultEvent(kind="crash", target="actor:1", step=80),
+        ), seed=0),
+        "hang_watchdog": FaultPlan(events=(
+            FaultEvent(kind="hang", target="actor:1", step=50),
+        ), seed=0),
+        "quarantine_degrade": FaultPlan(events=tuple(
+            FaultEvent(kind="crash", target="actor:0", step=s)
+            for s in (10, 11, 12)
+        ), seed=0),
+    }
+
+
+def bench(total_frames: int = TOTAL_FRAMES) -> dict:
+    import jax
+
+    # warmup: compile the act/update programs once, outside every timed
+    # window (the cache is per-process, keyed by computation shape)
+    _sebulba(None).fit(jax.random.key(0), total_frames=256)
+
+    results: dict[str, dict] = {}
+    for name, plan in _plans().items():
+        seb = _sebulba(plan)
+        t0 = time.perf_counter()
+        res = seb.fit(jax.random.key(0), total_frames=total_frames)
+        dt = time.perf_counter() - t0
+        latencies = seb.supervisor.recovery_latencies()
+        entry = {
+            "fps": round(res["frames"] / dt, 1),
+            "frames": res["frames"],
+            "seconds": round(dt, 3),
+            "actor_restarts": res["actor_restarts"],
+            "actor_quarantined": res["actor_quarantined"],
+            "watchdog_stalls": res["watchdog_stalls"],
+        }
+        if latencies:
+            entry["recovery_latency_s_mean"] = round(
+                sum(latencies) / len(latencies), 4
+            )
+            entry["recovery_latency_s_max"] = round(max(latencies), 4)
+        results[name] = entry
+    base = results["no_fault"]["fps"]
+    for entry in results.values():
+        entry["throughput_vs_no_fault"] = round(entry["fps"] / base, 3)
+    return results
+
+
+def write_json(results: dict, path: str = "BENCH_fault.json") -> None:
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
+
+def main(total_frames: int = TOTAL_FRAMES,
+         json_path: str | None = None) -> list[str]:
+    results = bench(total_frames)
+    if json_path:
+        write_json(results, json_path)
+    lines = []
+    for name, r in results.items():
+        us_per_frame = 1e6 * r["seconds"] / max(1, r["frames"])
+        lines.append(csv_line(
+            f"fault/{name}", us_per_frame,
+            f"fps={r['fps']} vs_no_fault={r['throughput_vs_no_fault']} "
+            f"restarts={r['actor_restarts']} "
+            f"quarantined={r['actor_quarantined']} "
+            f"stalls={r['watchdog_stalls']}",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=TOTAL_FRAMES)
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_fault.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(total_frames=args.frames,
+                     json_path="BENCH_fault.json" if args.json else None):
+        print(line)
+    if args.json:
+        print("wrote BENCH_fault.json")

@@ -132,13 +132,27 @@ def _recurrent_suite(lines: list[str]) -> None:
     )
 
 
+def _fault_suite(lines: list[str]) -> None:
+    """--suite fault: supervised-Sebulba throughput-degradation curve
+    (no-fault / crash-restart / hang-watchdog / quarantine) + measured
+    recovery latency -> BENCH_fault.json (the fault-tolerance perf
+    trajectory)."""
+    from benchmarks import fault_bench
+
+    _section(
+        "fault suite (supervision degradation + recovery)",
+        lambda: fault_bench.main(json_path="BENCH_fault.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
     ap.add_argument("--suite",
                     choices=["all", "replay", "sebulba", "learner",
-                             "recurrent", "envs"],
+                             "recurrent", "envs", "fault"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
                          "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
@@ -146,7 +160,8 @@ def main() -> None:
                          "learner update + publish throttling); 'recurrent' "
                          "-> BENCH_recurrent.json only (R2D2 core + burn-in); "
                          "'envs' -> BENCH_envs.json only (host pool vs "
-                         "device fleet stepping)")
+                         "device fleet stepping); 'fault' -> BENCH_fault.json "
+                         "only (supervision degradation + recovery latency)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -158,6 +173,7 @@ def main() -> None:
         "learner": _learner_suite,
         "recurrent": _recurrent_suite,
         "envs": _envs_suite,
+        "fault": _fault_suite,
     }
     if args.suite in suites:
         suites[args.suite](lines)
@@ -187,6 +203,7 @@ def main() -> None:
         _learner_suite(lines)
         _recurrent_suite(lines)
         _envs_suite(lines)
+        _fault_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

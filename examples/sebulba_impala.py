@@ -33,6 +33,11 @@ def main() -> None:
                     help="checkpoint every N learner updates")
     ap.add_argument("--restore-from", default=None,
                     help="warm-start params from a checkpoint file or dir")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject a seeded FaultPlan (random crashes/hangs/"
+                         "stragglers across the actor fleet) to exercise "
+                         "supervision: restarts, watchdog, quarantine. Same "
+                         "seed, same schedule.")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -56,15 +61,42 @@ def main() -> None:
             "make_batched_env": lambda f, n: BatchedHostEnv(f, n),
         }
     )
+    threads_per_core = 2
+    fault_plan = None
+    chaos_kwargs = {}
+    if args.chaos is not None:
+        from repro.fault import FaultPlan
+
+        # per-slot steps ~ frames / (slots * batch); schedule over the
+        # first half so recoveries happen while there is run left to show
+        horizon = max(
+            20,
+            args.frames // (actor_cores * threads_per_core * actor_batch * 2),
+        )
+        fault_plan = FaultPlan.random(
+            args.chaos,
+            actors=actor_cores * threads_per_core,
+            horizon=horizon,
+            crash_rate=2.0 / horizon,   # ~2 crashes per slot
+            hang_rate=0.5 / horizon,    # ~1 hang across a 2-slot fleet
+            slow_rate=4.0 / horizon,
+        )
+        print(f"chaos seed {args.chaos}: {len(fault_plan.events)} "
+              "scheduled faults")
+        # a tight (but compile-safe: startup is grace-period exempt) stall
+        # budget so injected hangs are caught within the demo run
+        chaos_kwargs = dict(stall_timeout=5.0, restart_backoff=0.1)
     seb = Sebulba(
         network=net,
         optimizer=optim.rmsprop(3e-4, clip_norm=1.0),
         config=SebulbaConfig(
             num_actor_cores=actor_cores,
-            threads_per_actor_core=2,
+            threads_per_actor_core=threads_per_core,
             actor_batch_size=actor_batch,
             trajectory_length=args.trajectory,
+            **chaos_kwargs,
         ),
+        fault_plan=fault_plan,
         **env_kwargs,
     )
     out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=25,
@@ -77,6 +109,12 @@ def main() -> None:
         f"mean return {out['mean_return']:.2f}, "
         f"{out['checkpoints_saved']} checkpoints"
     )
+    if args.chaos is not None:
+        print(
+            f"chaos: {out['actor_restarts']} restarts, "
+            f"{out['watchdog_stalls']} watchdog stalls, "
+            f"{out['actor_quarantined']} quarantined"
+        )
 
 
 if __name__ == "__main__":

@@ -29,6 +29,10 @@ def main() -> None:
     ap.add_argument("--actor-cores", type=int, default=2)
     ap.add_argument("--actor-batch", type=int, default=32)
     ap.add_argument("--trajectory", type=int, default=20)
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject a seeded FaultPlan (random crashes/"
+                         "stragglers across the device-env actor fleet) to "
+                         "exercise supervision under the scenario mix")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -49,6 +53,27 @@ def main() -> None:
         ScenarioMix("marathon", 1.0, lambda: Pong(max_lives=5)),
     ]
 
+    threads_per_core = 2
+    fault_plan = None
+    chaos_kwargs = {}
+    if args.chaos is not None:
+        from repro.fault import FaultPlan
+
+        horizon = max(
+            20,
+            args.frames // (actor_cores * threads_per_core * actor_batch * 2),
+        )
+        fault_plan = FaultPlan.random(
+            args.chaos,
+            actors=actor_cores * threads_per_core,
+            horizon=horizon,
+            crash_rate=2.0 / horizon,
+            slow_rate=4.0 / horizon,
+        )
+        print(f"chaos seed {args.chaos}: {len(fault_plan.events)} "
+              "scheduled faults")
+        chaos_kwargs = dict(stall_timeout=5.0, restart_backoff=0.1)
+
     net = ConvActorCritic(Pong.num_actions, channels=(16, 32), blocks=1)
     seb = Sebulba(
         device_env=scenarios,
@@ -56,10 +81,12 @@ def main() -> None:
         optimizer=optim.rmsprop(3e-4, clip_norm=1.0),
         config=SebulbaConfig(
             num_actor_cores=actor_cores,
-            threads_per_actor_core=2,
+            threads_per_actor_core=threads_per_core,
             actor_batch_size=actor_batch,
             trajectory_length=args.trajectory,
+            **chaos_kwargs,
         ),
+        fault_plan=fault_plan,
     )
     out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=25)
     print(
@@ -67,6 +94,12 @@ def main() -> None:
         f"-> {out['fps']:,.0f} FPS, {out['updates']} updates, "
         f"mean return {out['mean_return']:.2f}"
     )
+    if args.chaos is not None:
+        print(
+            f"chaos: {out['actor_restarts']} restarts, "
+            f"{out['watchdog_stalls']} watchdog stalls, "
+            f"{out['actor_quarantined']} quarantined"
+        )
     for name, c in out["scenarios"].items():
         print(f"  {name:>9}: weight {c['weight']:.1f}, rows {c['rows']}, "
               f"episodes {c['episodes']:,}, "

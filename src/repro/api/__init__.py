@@ -34,8 +34,10 @@ from repro.api.runner import (  # noqa: F401
     CheckpointPolicy,
     Runner,
     checkpoint_path,
+    checkpoint_stamps,
     latest_checkpoint,
     make_result,
+    resolve_auto_resume,
     restore_checkpoint,
     restore_for_fit,
     save_checkpoint,

@@ -4,7 +4,7 @@ Both Podracer architectures front the same training contract:
 
     runner.fit(rng, total_frames, *, log_every=0,
                checkpoint_dir=None, checkpoint_every=0,
-               restore_from=None) -> result dict
+               restore_from=None, auto_resume=False) -> result dict
 
 and every training entry point — on-policy Sebulba, off-policy (replay)
 Sebulba, Anakin — returns ONE documented result schema (``RESULT_KEYS``).
@@ -28,6 +28,13 @@ keys):
     traj_dropped       trajectories dropped at shutdown
     replay_size        filled replay slots at exit (off-policy Sebulba)
     checkpoints_saved  checkpoints written by the runner
+    actor_restarts     supervised actor incarnations respawned after a
+                       crash or watchdog stall (Sebulba)
+    actor_quarantined  actor slots retired after max_restarts failures
+    watchdog_stalls    hung-actor detections (heartbeat older than
+                       stall_timeout)
+    checkpoint_fallbacks  damaged checkpoints skipped while restoring
+                       (restore fell back to the newest VALID stamp)
     mean_return        mean episode return (NaN when untracked)
     metrics            drained learner metrics (means since last drain)
     scenarios          per-scenario counters when training on a device-env
@@ -39,9 +46,12 @@ Checkpointing: the runner owns persistence so examples stop hand-rolling
 it.  Every ``checkpoint_every`` updates (and once more at the end of a
 fit) the runner writes a ``param_version``-stamped npz via
 ``repro.checkpoint``; ``restore_from`` accepts a checkpoint file or a
-directory (the latest stamp wins).  The save syncs params to host, so it
-costs one device->host pull per boundary — like metric drains, it never
-touches the steady-state donated update loop.
+directory (the newest VALID stamp wins — damaged checkpoints are skipped
+and counted as ``checkpoint_fallbacks``).  ``auto_resume=True`` makes
+``fit`` scan ``checkpoint_dir`` itself, so a preempted run relaunches
+from wherever it last persisted with no extra flags.  The save syncs
+params to host, so it costs one device->host pull per boundary — like
+metric drains, it never touches the steady-state donated update loop.
 """
 
 from __future__ import annotations
@@ -55,6 +65,7 @@ import jax
 import numpy as np
 
 from repro import checkpoint
+from repro.checkpoint import CheckpointCorruptError
 
 PyTree = Any
 
@@ -71,6 +82,10 @@ RESULT_KEYS = (
     "traj_dropped",
     "replay_size",
     "checkpoints_saved",
+    "actor_restarts",
+    "actor_quarantined",
+    "watchdog_stalls",
+    "checkpoint_fallbacks",
     "mean_return",
     "metrics",
     "scenarios",
@@ -84,6 +99,10 @@ _COUNTER_DEFAULTS = {
     "traj_dropped": 0,
     "replay_size": 0,
     "checkpoints_saved": 0,
+    "actor_restarts": 0,
+    "actor_quarantined": 0,
+    "watchdog_stalls": 0,
+    "checkpoint_fallbacks": 0,
 }
 
 
@@ -103,6 +122,7 @@ class Runner(Protocol):
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         restore_from: str | None = None,
+        auto_resume: bool = False,
     ) -> dict: ...
 
 
@@ -155,15 +175,17 @@ def save_checkpoint(
     param_version: int,
     updates: int = 0,
     frames: int = 0,
+    fault=None,
 ) -> str:
-    """Write a ``param_version``-stamped checkpoint (atomic npz) and
-    return its path.  The stamp names the file, so a directory of
-    checkpoints sorts by version and ``latest_checkpoint`` needs no
-    sidecar index."""
+    """Write a ``param_version``-stamped checkpoint (atomic npz with an
+    embedded checksum) and return its path.  The stamp names the file, so
+    a directory of checkpoints sorts by version and ``latest_checkpoint``
+    needs no sidecar index.  ``fault`` threads the deterministic
+    checkpoint injector (repro.fault) into the writer."""
     path = checkpoint_path(directory, param_version)
     checkpoint.save(path, {"params": params, "meta": _meta(
         param_version=param_version, updates=updates, frames=frames
-    )})
+    )}, fault=fault)
     return path
 
 
@@ -171,30 +193,29 @@ def _meta(**values: int) -> dict:
     return {k: np.asarray(v, np.int64) for k, v in values.items()}
 
 
-def latest_checkpoint(directory: str) -> str | None:
-    """Highest-``param_version`` checkpoint in ``directory`` (None if the
-    directory is missing or holds no checkpoints).  Compared numerically —
-    lexical order breaks once stamps outgrow the 8-digit zero padding."""
+def checkpoint_stamps(directory: str) -> list[tuple[int, str]]:
+    """Every ``ckpt_*.npz`` in ``directory`` as (version, path), newest
+    first.  Compared numerically — lexical order breaks once stamps
+    outgrow the 8-digit zero padding.  Non-checkpoint debris (e.g. the
+    tmp files a killed write leaves behind) is ignored."""
     if not os.path.isdir(directory):
-        return None
-    best, best_version = None, -1
+        return []
+    stamps = []
     for name in os.listdir(directory):
         m = _CKPT_RE.match(name)
-        if m and int(m.group(1)) > best_version:
-            best, best_version = name, int(m.group(1))
-    return os.path.join(directory, best) if best else None
+        if m:
+            stamps.append((int(m.group(1)), os.path.join(directory, name)))
+    return sorted(stamps, reverse=True)
 
 
-def restore_checkpoint(path: str, params_like: PyTree) -> tuple[PyTree, dict]:
-    """Restore ``(params, meta)`` from a checkpoint file, or from the
-    latest checkpoint when ``path`` is a directory.  ``params_like``
-    supplies the target structure (shapes validated by repro.checkpoint);
-    ``meta`` holds the int stamps (param_version, updates, frames)."""
-    if os.path.isdir(path):
-        latest = latest_checkpoint(path)
-        if latest is None:
-            raise FileNotFoundError(f"no ckpt_*.npz checkpoints in {path}")
-        path = latest
+def latest_checkpoint(directory: str) -> str | None:
+    """Highest-``param_version`` checkpoint in ``directory`` (None if the
+    directory is missing or holds no checkpoints)."""
+    stamps = checkpoint_stamps(directory)
+    return stamps[0][1] if stamps else None
+
+
+def _restore_file(path: str, params_like: PyTree) -> tuple[PyTree, dict]:
     like = {
         "params": params_like,
         "meta": _meta(param_version=0, updates=0, frames=0),
@@ -204,19 +225,72 @@ def restore_checkpoint(path: str, params_like: PyTree) -> tuple[PyTree, dict]:
     return tree["params"], meta
 
 
+def restore_checkpoint(path: str, params_like: PyTree) -> tuple[PyTree, dict]:
+    """Restore ``(params, meta)`` from a checkpoint file, or from the
+    newest VALID checkpoint when ``path`` is a directory: damaged stamps
+    (torn writes, corruption — ``CheckpointCorruptError``) are skipped
+    newest-to-oldest and counted in ``meta["fallbacks"]``, so a
+    checkpoint-write kill never strands a resumable run.  ``params_like``
+    supplies the target structure (shapes validated by repro.checkpoint);
+    ``meta`` holds the int stamps (param_version, updates, frames)."""
+    if not os.path.isdir(path):
+        params, meta = _restore_file(path, params_like)
+        meta["fallbacks"] = 0
+        return params, meta
+    stamps = checkpoint_stamps(path)
+    if not stamps:
+        raise FileNotFoundError(f"no ckpt_*.npz checkpoints in {path}")
+    skipped: list[str] = []
+    for _, ckpt_path in stamps:
+        try:
+            params, meta = _restore_file(ckpt_path, params_like)
+        except CheckpointCorruptError:
+            skipped.append(ckpt_path)
+            continue
+        meta["fallbacks"] = len(skipped)
+        return params, meta
+    raise CheckpointCorruptError(
+        f"every checkpoint in {path} is damaged: {skipped}"
+    )
+
+
 def restore_for_fit(
     restore_from: str, params_like: PyTree, opt, sharding
 ) -> tuple[PyTree, PyTree, dict]:
     """The shared runner warm-start: restore params from a checkpoint (or
-    a directory's latest), place them on ``sharding``, and build a FRESH
-    optimizer state for them (research-checkpoint semantics — only params
-    persist).  Returns ``(params, opt_state, meta)``; the caller
-    continues its version line from ``meta`` so post-restore stamps sort
-    above the restored one."""
+    a directory's newest valid stamp), place them on ``sharding``, and
+    build a FRESH optimizer state for them (research-checkpoint semantics
+    — only params persist).  Returns ``(params, opt_state, meta)``; the
+    caller continues its version line from ``meta`` so post-restore
+    stamps sort above the restored one, and surfaces
+    ``meta["fallbacks"]`` as the ``checkpoint_fallbacks`` counter."""
     restored, meta = restore_checkpoint(restore_from, params_like)
     params = jax.device_put(restored, sharding)
     opt_state = jax.device_put(opt.init(params), sharding)
     return params, opt_state, meta
+
+
+def resolve_auto_resume(
+    restore_from: str | None, checkpoint_dir: str | None, auto_resume: bool
+) -> str | None:
+    """The ``fit(..., auto_resume=True)`` contract, shared by runners:
+    scan ``checkpoint_dir`` and resume from it when it holds any stamped
+    checkpoint, start fresh when it does not (first launch).  Explicit
+    ``restore_from`` and ``auto_resume`` are mutually exclusive — the
+    caller must pick one recovery source."""
+    if not auto_resume:
+        return restore_from
+    if restore_from is not None:
+        raise ValueError(
+            "auto_resume=True scans checkpoint_dir itself; drop "
+            "restore_from (or pass it alone)"
+        )
+    if not checkpoint_dir:
+        raise ValueError(
+            "auto_resume=True needs checkpoint_dir: that is the directory "
+            "a preempted run re-scans on relaunch"
+        )
+    return checkpoint_dir if checkpoint_stamps(checkpoint_dir) else None
 
 
 class CheckpointPolicy:
@@ -228,7 +302,7 @@ class CheckpointPolicy:
     checkpoint_dir=...)`` alone persists the result."""
 
     def __init__(self, directory: str | None, every: int,
-                 base_updates: int = 0):
+                 base_updates: int = 0, fault=None):
         if every < 0:
             raise ValueError("checkpoint_every must be >= 0")
         if every and not directory:
@@ -238,6 +312,7 @@ class CheckpointPolicy:
             )
         self.directory = directory
         self.every = every
+        self.fault = fault  # checkpoint fault injector (repro.fault)
         self.saved = 0
         self._last_version = None
         # seed the boundary from the restored update count, so a resumed
@@ -250,7 +325,7 @@ class CheckpointPolicy:
               frames: int) -> None:
         save_checkpoint(
             self.directory, params, param_version=param_version,
-            updates=updates, frames=frames,
+            updates=updates, frames=frames, fault=self.fault,
         )
         self.saved += 1
         self._last_version = param_version

@@ -1,1 +1,5 @@
-from repro.checkpoint.checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointCorruptError,
+    restore,
+    save,
+)

@@ -1,24 +1,55 @@
-"""npz-based checkpointing for nested-dict pytrees.
+"""npz-based checkpointing for nested-dict pytrees — durable edition.
 
 Flat path-keyed storage ('a/b/c' -> array) with dtype preservation
-(bfloat16 is stored via a uint16 view + sidecar dtype map).  Atomic write
-via rename.  Good enough for single-host research checkpoints; a real
-multi-pod deployment would swap in a sharded array-store behind the same
-two functions.
+(bfloat16 is stored via a uint16 view + sidecar dtype map).
+
+Durability contract (ISSUE 7):
+
+  * **Atomic write** — the payload is serialized fully in memory, written
+    to a same-directory temp file, fsync'd, then ``os.replace``'d into
+    place.  A crash at any point leaves either the previous checkpoint or
+    temp-file debris the restore path never looks at — a stamped
+    ``ckpt_*.npz`` is always a complete write.
+  * **Corruption detection** — the payload embeds a sha256 over every
+    array's (key, dtype, shape, bytes).  ``restore`` recomputes and
+    raises :class:`CheckpointCorruptError` on mismatch, and wraps
+    unreadable files (torn zip, truncated npz, missing sidecars) in the
+    same error, so callers can distinguish "this file is damaged — fall
+    back" from genuine structure mismatches (which stay
+    ``KeyError``/``ValueError``).
+  * **Fault hook** — ``save(..., fault=...)`` threads the deterministic
+    checkpoint injector (repro/fault) through the writer: a ``ckpt_kill``
+    raises mid-write (tmp debris stays, like real process death); a
+    ``ckpt_corrupt`` tears the payload to exercise detection.
+
+Good enough for single-host research checkpoints; a real multi-pod
+deployment would swap in a sharded array-store behind the same functions.
 """
 
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import tempfile
-from typing import Any
+import zipfile
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fault.plan import InjectedCheckpointKill
+
 PyTree = Any
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint file is damaged (unreadable container or checksum
+    mismatch) — distinct from structure/shape mismatches so restore-time
+    fallback logic can skip damaged stamps and keep strict errors
+    strict."""
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -32,37 +63,103 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     return out
 
 
-def save(path: str, tree: PyTree) -> None:
+def _digest(storable: dict[str, np.ndarray], dtypes: dict[str, str]) -> str:
+    """sha256 over the stored arrays in sorted-key order.  Computed on the
+    post-bfloat16-view arrays (what the file actually holds), keyed with
+    dtype and shape so a reinterpreted or reshaped leaf can't collide."""
+    h = hashlib.sha256()
+    for key in sorted(storable):
+        arr = storable[key]
+        h.update(key.encode())
+        h.update(dtypes[key].encode())
+        h.update(str(tuple(arr.shape)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def save(path: str, tree: PyTree, *, fault: Callable | None = None) -> None:
+    """Atomically write ``tree`` to ``path`` with an embedded checksum.
+
+    The npz is built fully in memory first, so the on-disk write is one
+    sequential dump of a complete payload: tmp file -> flush -> fsync ->
+    ``os.replace``.  ``fault`` is the checkpoint fault injector (tests /
+    chaos benches): it sees the serialized payload before the write and
+    may raise (kill: tmp debris is deliberately left behind, like real
+    process death) or return a mutated payload (torn write)."""
     flat = _flatten(tree)
     dtypes = {k: str(v.dtype) for k, v in flat.items()}
     storable = {
         k: v.view(np.uint16) if v.dtype == jnp.bfloat16 else v
         for k, v in flat.items()
     }
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    buf = io.BytesIO()
+    np.savez(
+        buf,
+        __dtypes__=json.dumps(dtypes),
+        __checksum__=_digest(storable, dtypes),
+        **storable,
+    )
+    payload = buf.getvalue()
+
+    directory = os.path.dirname(path) or "."
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, __dtypes__=json.dumps(dtypes), **storable)
+            if fault is not None:
+                payload = fault(path, payload)
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+    except InjectedCheckpointKill:
+        # simulated process death: a killed process cleans nothing up.
+        # Leaving the tmp file proves the restore path ignores debris.
+        raise
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
 
 
+def _load_verified(path: str) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Load and checksum-verify the raw stored arrays, wrapping every
+    unreadable-container failure in CheckpointCorruptError."""
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            dtypes = json.loads(str(data["__dtypes__"]))
+            stored_sum = (
+                str(data["__checksum__"]) if "__checksum__" in data.files
+                else None  # pre-durability checkpoints: no checksum to check
+            )
+            raw = {
+                k: data[k] for k in data.files
+                if k not in ("__dtypes__", "__checksum__")
+            }
+    except (zipfile.BadZipFile, ValueError, EOFError, OSError, KeyError,
+            json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is unreadable ({type(e).__name__}: {e})"
+        ) from e
+    if stored_sum is not None and _digest(raw, dtypes) != stored_sum:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} failed checksum verification "
+            "(torn write or on-disk corruption)"
+        )
+    return raw, dtypes
+
+
 def restore(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes are validated)."""
-    with np.load(path, allow_pickle=False) as data:
-        dtypes = json.loads(str(data["__dtypes__"]))
-        flat = {}
-        for k in data.files:
-            if k == "__dtypes__":
-                continue
-            arr = data[k]
-            if dtypes[k] == "bfloat16":
-                arr = arr.view(jnp.bfloat16)
-            flat[k] = arr
+    """Restore into the structure of ``like`` (shapes are validated).
+
+    Raises :class:`CheckpointCorruptError` for damaged files (unreadable
+    npz, checksum mismatch); ``KeyError``/``ValueError`` keep meaning
+    structure mismatch against ``like``."""
+    raw, dtypes = _load_verified(path)
+    flat = {
+        k: arr.view(jnp.bfloat16) if dtypes[k] == "bfloat16" else arr
+        for k, arr in raw.items()
+    }
 
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []

@@ -361,9 +361,13 @@ class Anakin:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         restore_from: str | None = None,
+        auto_resume: bool = False,
     ) -> dict:
         """The unified ``repro.api.Runner`` entry point: init (or
-        ``restore_from``), run enough compiled blocks to cover
+        ``restore_from``; ``auto_resume=True`` restores from the newest
+        VALID stamp in ``checkpoint_dir`` when one exists — corrupt files
+        are skipped and surface as the ``checkpoint_fallbacks`` counter),
+        run enough compiled blocks to cover
         ``total_frames`` env steps, checkpoint every ``checkpoint_every``
         updates, and return the unified Podracer result schema.
 
@@ -380,7 +384,11 @@ class Anakin:
         """
         cfg = self.cfg
         state = self.init_state(rng)
+        restore_from = api.resolve_auto_resume(
+            restore_from, checkpoint_dir, auto_resume
+        )
         base_updates = base_frames = 0
+        checkpoint_fallbacks = 0
         if restore_from is not None:
             params, opt_state, meta = api.restore_for_fit(
                 restore_from, state.params, self.opt,
@@ -391,6 +399,7 @@ class Anakin:
             # above the restored one (see Sebulba.run)
             base_updates = meta["param_version"]
             base_frames = meta["frames"]
+            checkpoint_fallbacks = meta.get("fallbacks", 0)
         ckpt = api.CheckpointPolicy(
             checkpoint_dir, checkpoint_every, base_updates=base_updates
         )
@@ -455,6 +464,7 @@ class Anakin:
             scenarios=scenarios,
             param_version=base_updates + updates,
             checkpoints_saved=ckpt.saved,
+            checkpoint_fallbacks=checkpoint_fallbacks,
         )
         # architecture-specific extra: the full donated AnakinState, so
         # callers can keep stepping the compiled block where fit left off

@@ -64,6 +64,17 @@ empty () carry — zero extra leaves, bit-identical programs.  The protocol
 costs the hot path nothing: the NamedTuple auxes flatten to the same
 leaves, so every donated jit traces to the pre-protocol program.  See
 ARCHITECTURE.md §Protocol.
+
+Fault tolerance (repro/core/supervision.py, repro/fault/): actor threads
+run as supervised slots — crash -> exponential-backoff restart under a
+fresh RNG fold, repeat offender -> quarantine with the surviving actors
+still feeding every learner shard, hang -> heartbeat-watchdog cancel —
+and a learner that raises a structured ``SebulbaStallError`` (full
+diagnostics + every traceback) when no actor can make progress, instead
+of polling an empty queue forever.  Checkpoints are atomic + checksummed
+with newest-valid-stamp fallback and ``fit(..., auto_resume=True)``.
+The supervision hot-path cost is one monotonic heartbeat stamp per env
+step.  See ARCHITECTURE.md §Fault tolerance & elasticity.
 """
 
 from __future__ import annotations
@@ -72,6 +83,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable
 
@@ -86,6 +98,11 @@ from repro import api, optim
 from repro.agents.impala import ImpalaAgent  # noqa: F401
 from repro.compat import shard_map
 from repro.configs.base import ReplayConfig
+from repro.core.supervision import (
+    ActorHandle,
+    ActorSupervisor,
+    SebulbaStallError,  # noqa: F401  (re-exported: the learner raises it)
+)
 from repro.core.topology import CoreSplit, split_devices
 from repro.envs.device_env import DeviceEnvFleet, FleetStats  # noqa: F401
 from repro.data.trajectory import (
@@ -128,6 +145,16 @@ class SebulbaConfig:
     # inside the agent loss, i.e. inside the compile-cached donated update.
     burn_in: int = 0
     replay: ReplayConfig | None = None  # set -> off-policy (replay) mode
+    # actor supervision (repro/core/supervision.py): a crashed actor
+    # incarnation is restarted with exponential backoff (restart_backoff *
+    # 2**restarts seconds) under a fresh RNG fold; after ``max_restarts``
+    # restarts the slot is quarantined and the fleet degrades gracefully.
+    # An actor whose heartbeat is older than ``stall_timeout`` seconds is
+    # declared hung by the watchdog (cancelled + restarted/quarantined) —
+    # size it above worst-case jit-compile + env-step latency.
+    max_restarts: int = 3
+    restart_backoff: float = 0.05
+    stall_timeout: float = 60.0
 
 
 class Sebulba:
@@ -141,6 +168,7 @@ class Sebulba:
         devices=None,
         agent=None,
         device_env=None,  # DeviceEnv / factory / ScenarioMix(es) / fleet
+        fault_plan=None,  # repro.fault.FaultPlan — chaos test/bench surface
     ):
         self.cfg = config
         if device_env is None and (env_factory is None or make_batched_env is None):
@@ -316,9 +344,10 @@ class Sebulba:
 
         # host-side state shared between threads.  No locks on the hot path:
         # the params slot is a versioned tuple per actor core (list-item
-        # assignment/read are atomic under the GIL) and frame counting is
-        # per-thread, summed by the ``frames`` property.
-        num_threads = self.split.num_actors * config.threads_per_actor_core
+        # assignment/read are atomic under the GIL) and every other mutable
+        # field lives on the incarnation's own ActorHandle — heartbeat,
+        # frame/backpressure counters, fleet-stats snapshot — written only
+        # by its thread and read by the learner.
         self._params_version = 0
         self._param_slots: list[tuple[int, PyTree]] = (
             [(0, None)] * self.split.num_actors
@@ -334,22 +363,33 @@ class Sebulba:
         self._shared_devices = frozenset(self.split.actor_devices) & frozenset(
             self.split.learner_devices
         )
-        self._thread_frames: list[int] = [0] * num_threads
-        # device-env mode: latest per-thread FleetStats snapshot (device
-        # arrays, cumulative) — stamped on trajectory boundaries, read by
-        # the learner thread only on log/result boundaries
-        self._thread_stats: list = [None] * num_threads
-        self._thread_put_blocked: list[int] = [0] * num_threads
-        self._thread_traj_dropped: list[int] = [0] * num_threads
         self._queue: queue.Queue = queue.Queue(maxsize=config.queue_capacity)
         self._stop = threading.Event()
-        self._actor_errors: list[BaseException] = []
         self.episode_returns: deque = deque(maxlen=256)
+        # the supervised actor fleet: one slot per (core, thread); slot i's
+        # base seed i+1 matches the pre-supervision thread seeds, so a
+        # fault-free run is bit-exact with the unsupervised pipeline
+        slot_specs = [
+            (core, 1 + core * config.threads_per_actor_core + k)
+            for core in range(self.split.num_actors)
+            for k in range(config.threads_per_actor_core)
+        ]
+        self.supervisor = ActorSupervisor(
+            slots=slot_specs,
+            spawn=self._run_actor,
+            stop=self._stop,
+            max_restarts=config.max_restarts,
+            restart_backoff=config.restart_backoff,
+            stall_timeout=config.stall_timeout,
+            fault_plan=fault_plan,
+        )
+        self._fault_plan = fault_plan
 
     @property
     def frames(self) -> int:
-        """Total host env frames generated (sum of per-thread counters)."""
-        return sum(self._thread_frames)
+        """Total host env frames generated (summed over every actor
+        incarnation the supervisor ever spawned)."""
+        return sum(h.frames for h in self.supervisor.handles())
 
     # -------------------------------------------------------------- setup
 
@@ -474,25 +514,25 @@ class Sebulba:
         )
         return jax.device_put(buf, device)
 
-    def _actor_thread(self, thread_id: int, core_id: int, seed: int) -> None:
-        try:
-            if self._fleet is not None:
-                self._device_actor_loop(thread_id, core_id, seed)
-            else:
-                self._actor_loop(thread_id, core_id, seed)
-        except BaseException as e:  # surface crashes to the learner loop
-            self._actor_errors.append(e)
-            self._stop.set()
-            raise
+    def _run_actor(self, handle: ActorHandle) -> None:
+        """One supervised actor incarnation (the ``ActorSupervisor`` spawn
+        body).  Exceptions propagate to the supervisor wrapper, which
+        records them — with tracebacks — on the handle for the restart /
+        quarantine path; nothing here needs a try/except."""
+        if self._fleet is not None:
+            self._device_actor_loop(handle)
+        else:
+            self._actor_loop(handle)
 
-    def _actor_loop(self, thread_id: int, core_id: int, seed: int) -> None:
+    def _actor_loop(self, handle: ActorHandle) -> None:
         cfg = self.cfg
-        device = self.split.actor_devices[core_id]
+        device = self.split.actor_devices[handle.core_id]
+        seed = handle.seed
         env = self.make_batched_env(
             lambda i: self.env_factory(seed * 10_000 + i), cfg.actor_batch_size
         )
         try:
-            self._host_actor_loop(thread_id, core_id, seed, env, device)
+            self._host_actor_loop(handle, env, device)
         finally:
             # release the env's share of the host stepping pool (the shared
             # ThreadPoolExecutor shuts down with its last reference)
@@ -500,12 +540,15 @@ class Sebulba:
             if callable(close):
                 close()
 
-    def _host_actor_loop(
-        self, thread_id: int, core_id: int, seed: int, env, device
-    ) -> None:
+    def _actor_live(self, handle: ActorHandle) -> bool:
+        """The actor-loop continuation check: run until shutdown (stop) or
+        this incarnation is abandoned by the watchdog (cancel)."""
+        return not (self._stop.is_set() or handle.cancel.is_set())
+
+    def _host_actor_loop(self, handle: ActorHandle, env, device) -> None:
         cfg = self.cfg
         obs = env.reset()
-        rng = jax.device_put(jax.random.key(seed), device)
+        rng = jax.device_put(jax.random.key(handle.seed), device)
         running_return = np.zeros(cfg.actor_batch_size)
         # previous step's [rewards; discounts], batched into ONE transfer
         host_data = np.zeros((2, cfg.actor_batch_size), np.float32)
@@ -513,9 +556,16 @@ class Sebulba:
         carry = self._initial_carry(device)  # recurrent state, or ()
         t = 0  # host mirror of the ring cursor (control flow only, no sync)
         last_version = 0
+        injector = handle.injector
 
-        while not self._stop.is_set():
-            version, params = self._param_slots[core_id]
+        while self._actor_live(handle):
+            # watchdog heartbeat: one monotonic stamp per env step.  A
+            # scheduled fault fires AFTER the stamp, so a hang freezes the
+            # heartbeat exactly as a real wedged env would.
+            handle.beat()
+            if injector is not None:
+                injector.tick(stop=self._stop, cancel=handle.cancel)
+            version, params = self._param_slots[handle.core_id]
             if version != last_version:
                 last_version = version
                 # stamp consumption so the learner's throttled publish knows
@@ -523,8 +573,8 @@ class Sebulba:
                 # this core's threads is benign: a stale-low stamp lasts one
                 # env step at most (the thread re-reads the slot next loop)
                 # and only ever delays a publish, never loses one.
-                if self._slot_consumed[core_id] < version:
-                    self._slot_consumed[core_id] = version
+                if self._slot_consumed[handle.core_id] < version:
+                    self._slot_consumed[handle.core_id] = version
             obs_dev = jax.device_put(obs, device)
             hd_dev = jax.device_put(host_data, device)
             if buf is None:
@@ -538,7 +588,7 @@ class Sebulba:
                 traj, buf = self._drain(buf, hd_dev, obs_dev)
                 t = 0
                 shards = self._shard_for_learners(traj)
-                if not self._queue_put(shards, thread_id):
+                if not self._queue_put(shards, handle):
                     return  # stopping — the in-flight trajectory is dropped
             actions, buf, rng, carry = self._act_step(
                 params, buf, rng, obs_dev, hd_dev, carry
@@ -555,7 +605,7 @@ class Sebulba:
             host_data = np.stack(
                 [rewards, (~dones).astype(np.float32) * cfg.discount]
             )
-            self._thread_frames[thread_id] += cfg.actor_batch_size
+            handle.frames += cfg.actor_batch_size
             obs = next_obs
             t += 1
 
@@ -603,13 +653,11 @@ class Sebulba:
         ])
         return buf, rng, env_state, ts.obs, rew_disc, new_carry, stats
 
-    def _device_actor_loop(
-        self, thread_id: int, core_id: int, seed: int
-    ) -> None:
+    def _device_actor_loop(self, handle: ActorHandle) -> None:
         cfg = self.cfg
-        device = self.split.actor_devices[core_id]
+        device = self.split.actor_devices[handle.core_id]
         fleet = self._fleet
-        env_key, rng = jax.random.split(jax.random.key(seed))
+        env_key, rng = jax.random.split(jax.random.key(handle.seed))
         env_state = jax.device_put(fleet.init(env_key), device)
         obs = jax.device_put(fleet.observe(env_state), device)
         rew_disc = jax.device_put(
@@ -621,13 +669,17 @@ class Sebulba:
         buf = None
         t = 0
         last_version = 0
+        injector = handle.injector
         try:
-            while not self._stop.is_set():
-                version, params = self._param_slots[core_id]
+            while self._actor_live(handle):
+                handle.beat()
+                if injector is not None:
+                    injector.tick(stop=self._stop, cancel=handle.cancel)
+                version, params = self._param_slots[handle.core_id]
                 if version != last_version:
                     last_version = version
-                    if self._slot_consumed[core_id] < version:
-                        self._slot_consumed[core_id] = version
+                    if self._slot_consumed[handle.core_id] < version:
+                        self._slot_consumed[handle.core_id] = version
                 if buf is None:
                     buf = self._make_actor_buffer(params, obs, device)
                 if t == cfg.trajectory_length:
@@ -635,9 +687,9 @@ class Sebulba:
                     t = 0
                     # stats is undonated and cumulative: publishing the
                     # handle is the whole snapshot (no copy, no sync)
-                    self._thread_stats[thread_id] = stats
+                    handle.stats = stats
                     shards = self._shard_for_learners(traj)
-                    if not self._queue_put(shards, thread_id):
+                    if not self._queue_put(shards, handle):
                         return
                 buf, rng, env_state, obs, rew_disc, carry, stats = (
                     self._device_act_step(
@@ -645,26 +697,35 @@ class Sebulba:
                         stats,
                     )
                 )
-                self._thread_frames[thread_id] += cfg.actor_batch_size
+                handle.frames += cfg.actor_batch_size
                 t += 1
         finally:
-            self._thread_stats[thread_id] = stats
+            handle.stats = stats
 
-    def _queue_put(self, shards, thread_id: int) -> bool:
+    def _queue_put(self, shards, handle: ActorHandle) -> bool:
         """Blocking put that never silently drops a trajectory.
 
         Retries on a full queue (counting the blocked intervals so ``run``
         can surface learner back-pressure) until the put lands or the
-        system is stopping; only a shutdown drops the trajectory, and that
-        drop is counted too.  Returns False when stopping.
+        system is stopping; every retry re-checks the shared stop event AND
+        this incarnation's cancel flag, so a shutdown (or a watchdog
+        abandonment) can never leave the put spinning.  Only those exits
+        drop the trajectory, and that drop is counted too.  Returns False
+        when stopping.
         """
-        while not self._stop.is_set():
+        # retry granularity must beat the watchdog: a put blocked on the
+        # learner heartbeats once per retry, so the retry interval has to
+        # sit well inside the stall budget or back-pressure reads as a hang
+        timeout = min(0.5, self.cfg.stall_timeout / 4)
+        while self._actor_live(handle):
             try:
-                self._queue.put(shards, timeout=0.5)
+                self._queue.put(shards, timeout=timeout)
+                handle.mark_put()
                 return True
             except queue.Full:
-                self._thread_put_blocked[thread_id] += 1
-        self._thread_traj_dropped[thread_id] += 1
+                handle.beat()  # blocked on the learner, not hung
+                handle.put_blocked += 1
+        handle.traj_dropped += 1
         return False
 
     def _shard_for_learners(self, traj: Trajectory):
@@ -910,7 +971,9 @@ class Sebulba:
         per-scenario counters dict (plus the overall mean completed-episode
         return).  Reads — and therefore syncs on — the snapshot arrays, so
         callers only hit this on log/result boundaries."""
-        snaps = [s for s in self._thread_stats if s is not None]
+        snaps = [
+            h.stats for h in self.supervisor.handles() if h.stats is not None
+        ]
         if not snaps:
             return {}, float("nan")
         # threads on different actor cores hold stats on different devices;
@@ -937,6 +1000,7 @@ class Sebulba:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         restore_from: str | None = None,
+        auto_resume: bool = False,
     ) -> dict:
         """Train until ``total_frames`` host env frames have been generated.
 
@@ -948,13 +1012,31 @@ class Sebulba:
         restarts fresh — research-checkpoint semantics — while the version
         line and cumulative update/frame stamps continue from the
         checkpoint, so resuming into the same directory keeps
-        ``latest_checkpoint`` honest).  Checkpoint
+        ``latest_checkpoint`` honest).  ``auto_resume=True`` scans
+        ``checkpoint_dir`` and restores from the newest VALID stamp when
+        one exists (corrupt files are skipped and counted as
+        ``checkpoint_fallbacks``), starting fresh on an empty directory —
+        the preemption-recovery entry point.  Checkpoint
         writes sync params to host, so like metric drains they only ever
         happen on boundaries, never in the steady-state donated loop.
+
+        Actor threads run under :class:`~repro.core.supervision.\
+ActorSupervisor`: a crashed actor restarts with exponential backoff
+        (fresh RNG fold, current published params), a slot exceeding
+        ``cfg.max_restarts`` is quarantined while the surviving actors
+        keep feeding every learner shard, and a hung actor (heartbeat
+        older than ``cfg.stall_timeout``) is cancelled by the watchdog.
+        Only when NO actor can make progress does the learner raise
+        :class:`SebulbaStallError` with the full diagnostics snapshot and
+        every recorded traceback.
         """
         cfg = self.cfg
         params, opt_state = self.init(rng, obs_shape)
+        restore_from = api.resolve_auto_resume(
+            restore_from, checkpoint_dir, auto_resume
+        )
         base_updates = base_frames = 0
+        checkpoint_fallbacks = 0
         if restore_from is not None:
             params, opt_state, meta = api.restore_for_fit(
                 restore_from, params, self.opt,
@@ -968,22 +1050,17 @@ class Sebulba:
             self._params_version = meta["param_version"]
             base_updates = meta["updates"]
             base_frames = meta["frames"]
+            checkpoint_fallbacks = meta.get("fallbacks", 0)
             self._publish_params(params, force=True)
         ckpt = api.CheckpointPolicy(
-            checkpoint_dir, checkpoint_every, base_updates=base_updates
+            checkpoint_dir, checkpoint_every, base_updates=base_updates,
+            fault=(
+                self._fault_plan.checkpoint_injector()
+                if self._fault_plan is not None else None
+            ),
         )
 
-        threads = []
-        tid = 0
-        for core in range(self.split.num_actors):
-            for _ in range(cfg.threads_per_actor_core):
-                t = threading.Thread(
-                    target=self._actor_thread, args=(tid, core, tid + 1),
-                    daemon=True, name=f"actor-{tid}",
-                )
-                t.start()
-                threads.append(t)
-                tid += 1
+        self.supervisor.start()
 
         updates = 0
         last_metrics: dict = {}
@@ -994,16 +1071,35 @@ class Sebulba:
         t0 = time.time()
         try:
             while self.frames < total_frames:
-                if self._actor_errors:
-                    raise RuntimeError(
-                        "actor thread crashed"
-                    ) from self._actor_errors[0]
+                # supervision is learner-driven: every drain iteration
+                # (<= ~1 s apart) reaps dead incarnations, fires the
+                # heartbeat watchdog, and executes due restarts — no
+                # monitor thread, no locks on the actor hot path
+                self.supervisor.poll()
                 try:
-                    # short poll: an actor crash mid-drain must surface at
-                    # the error check above within ~1 s, not after a long
-                    # blocking get
-                    shards = self._queue.get(timeout=1.0)
+                    # short poll so supervision stays responsive even when
+                    # no actor is producing
+                    shards = self._queue.get(timeout=0.5)
                 except queue.Empty:
+                    # re-poll before judging progress: the snapshot from the
+                    # top of the iteration is up to a get-timeout stale, and
+                    # a death in that window must be reaped into the
+                    # restarting state (which counts as progress), not
+                    # mistaken for a dead fleet
+                    self.supervisor.poll()
+                    if not self.supervisor.can_progress():
+                        # every slot is quarantined/stopped (or hung past
+                        # its stall budget): the queue will never fill
+                        # again.  Raise the structured stall error instead
+                        # of polling forever.
+                        raise self.supervisor.stall_error(
+                            queue_depth=self._queue.qsize(),
+                            param_versions=[
+                                v for v, _ in self._param_slots
+                            ],
+                            frames=self.frames,
+                            updates=updates,
+                        )
                     continue
                 if self._replay is not None:
                     if replay_state is None:
@@ -1069,8 +1165,18 @@ class Sebulba:
                     )
         finally:
             self._stop.set()
-            for t in threads:
-                t.join(timeout=10.0)
+            leaked = self.supervisor.join(timeout=10.0)
+            if leaked:
+                # a thread that survives stop+cancel+join is wedged beyond
+                # recovery (e.g. a truly hung env).  It is daemonic, so the
+                # process can still exit — but report it rather than
+                # pretending shutdown was clean.
+                warnings.warn(
+                    "Sebulba shutdown leaked actor threads (still running "
+                    f"after stop/cancel/join): {', '.join(leaked)}",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
 
         if macc is not None:
             m = self._drain_macc(macc)
@@ -1104,9 +1210,19 @@ class Sebulba:
             publishes_sent=self.publishes_sent,
             publishes_skipped=self.publishes_skipped,
             # learner back-pressure / shutdown accounting (the actor loop
-            # retries full-queue puts instead of dropping)
-            put_blocked=sum(self._thread_put_blocked),
-            traj_dropped=sum(self._thread_traj_dropped),
+            # retries full-queue puts instead of dropping); sums span every
+            # incarnation the supervisor ever spawned
+            put_blocked=sum(
+                h.put_blocked for h in self.supervisor.handles()
+            ),
+            traj_dropped=sum(
+                h.traj_dropped for h in self.supervisor.handles()
+            ),
+            # supervision accounting (ISSUE 7): absent-as-0 counters
+            actor_restarts=self.supervisor.actor_restarts,
+            actor_quarantined=self.supervisor.actor_quarantined,
+            watchdog_stalls=self.supervisor.watchdog_stalls,
+            checkpoint_fallbacks=checkpoint_fallbacks,
             replay_size=(
                 self._replay.size(replay_state)
                 if self._replay is not None and replay_state is not None
@@ -1125,6 +1241,7 @@ class Sebulba:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         restore_from: str | None = None,
+        auto_resume: bool = False,
     ) -> dict:
         """The unified ``repro.api.Runner`` entry point (same loop as
         ``run``).  ``obs_shape`` defaults to what the env factory reports:
@@ -1143,5 +1260,5 @@ class Sebulba:
         return self.run(
             rng, obs_shape, total_frames, log_every=log_every,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            restore_from=restore_from,
+            restore_from=restore_from, auto_resume=auto_resume,
         )

@@ -1,0 +1,13 @@
+"""repro.fault — deterministic fault injection (see fault/plan.py)."""
+
+from repro.fault.plan import (  # noqa: F401
+    ActorFaultInjector,
+    CheckpointFaultInjector,
+    FaultEvent,
+    FaultPlan,
+    FaultyHostEnv,
+    InjectedCheckpointKill,
+    InjectedCrash,
+    InjectedEnvError,
+    InjectedFault,
+)

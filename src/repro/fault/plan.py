@@ -1,0 +1,280 @@
+"""Deterministic, seeded fault injection for Sebulba (ISSUE 7).
+
+Datacenter-scale RL (the Podracer setting) treats preemption, stragglers,
+and partial failure as the steady state, not the exception.  This module
+is the *test and bench surface* for that claim: a ``FaultPlan`` is a
+deterministic schedule of failures — crash an actor at its Nth step, hang
+it, inject per-step latency, make an env step raise, kill or tear a
+checkpoint write — that the supervision subsystem
+(repro/core/supervision.py) must absorb.  Determinism is the whole point:
+the same seed produces the same schedule, so a chaos test is an ordinary
+regression test.
+
+Fault kinds and their injection points:
+
+    crash        actor loop    raise ``InjectedCrash`` at the slot's step N
+    hang         actor loop    stop heartbeating and sleep until the
+                               watchdog cancels the incarnation (then raise
+                               so the thread unwinds and can be restarted)
+    slow         actor loop    sleep ``seconds`` per step for ``span`` steps
+                               (a straggler, not a failure)
+    env_error    host env /    raise ``InjectedEnvError`` from the env step
+                 actor loop    (``FaultyHostEnv`` wraps a single host env;
+                               the actor injector fires the same kind
+                               in-loop for device-env mode)
+    ckpt_kill    checkpoint    raise ``InjectedCheckpointKill`` mid-write —
+                 writer        simulated process death: the tmp file is
+                               left behind, the final stamp never lands
+    ckpt_corrupt checkpoint    tear the write: a truncated payload reaches
+                 writer        the final path (simulating a non-atomic
+                               writer or disk corruption) for the restore
+                               path's corruption detection to catch
+
+Step counters are PER SLOT and persist across restarts: an actor slot's
+injector keeps counting through its incarnations, so ``crash @ step 5``
+kills exactly one incarnation and the replacement runs clean — the
+schedule describes the slot's lifetime, not each thread's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+import numpy as np
+
+KINDS = ("crash", "hang", "slow", "env_error", "ckpt_kill", "ckpt_corrupt")
+_ACTOR_KINDS = ("crash", "hang", "slow", "env_error")
+_CKPT_KINDS = ("ckpt_kill", "ckpt_corrupt")
+
+
+class InjectedFault(RuntimeError):
+    """Base class for every scheduled failure this module raises."""
+
+
+class InjectedCrash(InjectedFault):
+    """A scheduled actor-thread death (also raised when a scheduled hang
+    is cancelled by the watchdog, so the hung incarnation unwinds)."""
+
+
+class InjectedEnvError(InjectedFault):
+    """A scheduled environment-step failure."""
+
+
+class InjectedCheckpointKill(InjectedFault):
+    """Process death mid-checkpoint-write (the tmp file is left behind)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    ``target`` is ``"actor:<slot>"`` (per-slot step counter), ``"env"``
+    (``FaultyHostEnv`` step counter), or ``"checkpoint"`` (``step`` counts
+    checkpoint *writes*).  ``seconds``/``span`` only apply to ``slow``:
+    sleep ``seconds`` on each of ``span`` consecutive steps from ``step``.
+    """
+
+    kind: str
+    target: str
+    step: int
+    seconds: float = 0.0
+    span: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+        if self.step < 0:
+            raise ValueError("fault step must be >= 0")
+        if self.kind in _CKPT_KINDS and self.target != "checkpoint":
+            raise ValueError(f"{self.kind} events target 'checkpoint'")
+        if self.span < 1:
+            raise ValueError("span must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, deterministic fault schedule.
+
+    Build explicitly from events, or derive one from a seed with
+    :meth:`random` — same seed, same schedule, always (the draws are a
+    fixed-order ``np.random.Generator`` walk, independent of wall clock
+    or thread timing).
+    """
+
+    events: tuple[FaultEvent, ...] = ()
+    seed: int | None = None  # provenance when built by .random
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    @staticmethod
+    def random(
+        seed: int,
+        *,
+        actors: int,
+        horizon: int,
+        crash_rate: float = 0.0,
+        hang_rate: float = 0.0,
+        slow_rate: float = 0.0,
+        slow_seconds: float = 0.02,
+        env_error_rate: float = 0.0,
+        ckpt_kill_every: int = 0,
+        warmup: int = 2,
+    ) -> "FaultPlan":
+        """Seeded Bernoulli schedule over ``actors`` slots x ``horizon``
+        steps.  ``*_rate`` are per-slot-per-step probabilities; draws are
+        taken in fixed (slot, step, kind) order so the schedule is a pure
+        function of the arguments.  ``warmup`` protects each slot's first
+        steps (a slot that dies before its buffer exists exercises nothing
+        interesting).  ``ckpt_kill_every`` > 0 kills every Nth checkpoint
+        write (deterministic, not sampled — checkpoint writes are rare)."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        for slot in range(actors):
+            for step in range(warmup, horizon):
+                for kind, rate in (
+                    ("crash", crash_rate),
+                    ("hang", hang_rate),
+                    ("slow", slow_rate),
+                    ("env_error", env_error_rate),
+                ):
+                    if rate and rng.random() < rate:
+                        events.append(FaultEvent(
+                            kind, f"actor:{slot}", step,
+                            seconds=slow_seconds if kind == "slow" else 0.0,
+                        ))
+        if ckpt_kill_every:
+            for n in range(ckpt_kill_every - 1, horizon, ckpt_kill_every):
+                events.append(FaultEvent("ckpt_kill", "checkpoint", n))
+        return FaultPlan(events=tuple(events), seed=seed)
+
+    def for_target(self, target: str) -> tuple[FaultEvent, ...]:
+        return tuple(
+            sorted(
+                (e for e in self.events if e.target == target),
+                key=lambda e: (e.step, e.kind),
+            )
+        )
+
+    def actor_injector(self, slot: int) -> "ActorFaultInjector | None":
+        """The persistent per-slot injector (None when the plan holds
+        nothing for the slot — the common fleet-wide fast path)."""
+        events = self.for_target(f"actor:{slot}")
+        return ActorFaultInjector(events) if events else None
+
+    def env_injector(self) -> "ActorFaultInjector | None":
+        events = self.for_target("env")
+        return ActorFaultInjector(events) if events else None
+
+    def checkpoint_injector(self) -> "CheckpointFaultInjector | None":
+        events = self.for_target("checkpoint")
+        return CheckpointFaultInjector(events) if events else None
+
+
+class ActorFaultInjector:
+    """Per-slot fault firing, shared across the slot's incarnations.
+
+    The actor loop calls :meth:`tick` once per env step.  ``tick`` sleeps
+    for scheduled ``slow`` latency, blocks on a scheduled ``hang`` until
+    the stop/cancel event fires (heartbeats freeze, which is exactly what
+    the watchdog looks for), and raises ``InjectedCrash`` /
+    ``InjectedEnvError`` on their steps.  The step counter belongs to the
+    SLOT: a restarted incarnation resumes counting where its predecessor
+    died, so each scheduled fault fires exactly once.
+    """
+
+    def __init__(self, events: Iterable[FaultEvent]):
+        self._slow: dict[int, float] = {}
+        self._fatal: dict[int, FaultEvent] = {}
+        for e in events:
+            if e.kind == "slow":
+                for s in range(e.step, e.step + e.span):
+                    self._slow[s] = self._slow.get(s, 0.0) + e.seconds
+            else:
+                # one fatal event per step: the earliest-sorted kind wins
+                self._fatal.setdefault(e.step, e)
+        self.step = 0
+        self.fired: list[FaultEvent] = []
+
+    def tick(self, stop=None, cancel=None) -> None:
+        step, self.step = self.step, self.step + 1
+        lag = self._slow.get(step)
+        if lag:
+            time.sleep(lag)
+        event = self._fatal.get(step)
+        if event is None:
+            return
+        self.fired.append(event)
+        if event.kind == "crash":
+            raise InjectedCrash(f"injected crash at step {step}")
+        if event.kind == "env_error":
+            raise InjectedEnvError(f"injected env failure at step {step}")
+        if event.kind == "hang":
+            # freeze: no heartbeats, no puts.  Wake only for shutdown
+            # (stop) or the watchdog abandoning this incarnation (cancel),
+            # then unwind as a crash so the supervisor can restart the slot.
+            while not (
+                (stop is not None and stop.is_set())
+                or (cancel is not None and cancel.is_set())
+            ):
+                time.sleep(0.01)
+            raise InjectedCrash(
+                f"injected hang at step {step} (cancelled by watchdog)"
+            )
+        raise InjectedFault(f"unhandled fault kind {event.kind}")  # pragma: no cover
+
+
+class CheckpointFaultInjector:
+    """Checkpoint-writer faults; ``step`` counts *writes*.
+
+    ``repro.checkpoint.save`` calls the injector with the serialized
+    payload right before the tmp-file write.  ``ckpt_kill`` raises —
+    simulated process death, the atomic-replace never runs and the tmp
+    debris stays on disk.  ``ckpt_corrupt`` returns a truncated payload
+    that IS written through (a torn, non-atomic write), which the restore
+    path's checksum must reject.
+    """
+
+    def __init__(self, events: Iterable[FaultEvent]):
+        self._by_write = {e.step: e for e in events}
+        self.writes = 0
+        self.fired: list[FaultEvent] = []
+
+    def __call__(self, path: str, payload: bytes) -> bytes:
+        write, self.writes = self.writes, self.writes + 1
+        event = self._by_write.get(write)
+        if event is None:
+            return payload
+        self.fired.append(event)
+        if event.kind == "ckpt_kill":
+            raise InjectedCheckpointKill(
+                f"injected kill during checkpoint write #{write} ({path})"
+            )
+        return payload[: max(1, len(payload) // 2)]  # torn write
+
+
+class FaultyHostEnv:
+    """A host-env wrapper that fails on schedule — the env-level injection
+    point (actor loops get the same kind in-loop via the actor injector).
+    Wraps a single env (the ``env_factory`` unit); the injector's step
+    counter counts this env's ``step`` calls."""
+
+    def __init__(self, env, injector: ActorFaultInjector):
+        self._env = env
+        self._injector = injector
+        self.num_actions = env.num_actions
+        self.obs_shape = env.obs_shape
+
+    def reset(self):
+        return self._env.reset()
+
+    def step(self, action):
+        self._injector.tick()
+        return self._env.step(action)
+
+    def close(self):
+        close = getattr(self._env, "close", None)
+        if callable(close):
+            close()

@@ -31,3 +31,14 @@ def test_run_registers_envs_suite():
 
     assert '"envs": _envs_suite' in inspect.getsource(run.main)
     assert "BENCH_envs.json" in inspect.getsource(run._envs_suite)
+
+
+def test_run_registers_fault_suite():
+    """``--suite fault`` stays wired to fault_bench -> BENCH_fault.json
+    (the ISSUE 7 supervision-degradation / recovery-latency suite)."""
+    import inspect
+
+    from benchmarks import run
+
+    assert '"fault": _fault_suite' in inspect.getsource(run.main)
+    assert "BENCH_fault.json" in inspect.getsource(run._fault_suite)

@@ -26,20 +26,32 @@ import pytest
 _EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
 _ALL = sorted(p.stem for p in _EXAMPLES.glob("*.py"))
 
-# every RL entry point + the flags that shrink it to smoke scale
+# every RL entry point + the flags that shrink it to smoke scale; keys are
+# run labels (an example may appear more than once, e.g. with and without
+# chaos injection), values are (example stem, argv)
 _RL_RUNS = {
-    "quickstart": ["--frames", "2000"],
-    "sebulba_impala": ["--frames", "400", "--actor-batch", "6",
-                       "--trajectory", "5"],
-    "sebulba_r2d2": ["--frames", "400", "--actor-batch", "6",
-                     "--trajectory", "6", "--burn-in", "1",
-                     "--capacity", "64", "--replay-batch", "6",
-                     "--min-size", "12", "--rnn-width", "16"],
-    "sebulba_muzero": ["--frames", "300", "--simulations", "4",
-                       "--actor-batch", "6", "--trajectory", "6",
-                       "--microbatches", "2"],
-    "sebulba_scenarios": ["--frames", "400", "--actor-batch", "6",
-                          "--trajectory", "5"],
+    "quickstart": ("quickstart", ["--frames", "2000"]),
+    "sebulba_impala": ("sebulba_impala",
+                       ["--frames", "400", "--actor-batch", "6",
+                        "--trajectory", "5"]),
+    "sebulba_impala_chaos": ("sebulba_impala",
+                             ["--frames", "400", "--actor-batch", "6",
+                              "--trajectory", "5", "--chaos", "7"]),
+    "sebulba_r2d2": ("sebulba_r2d2",
+                     ["--frames", "400", "--actor-batch", "6",
+                      "--trajectory", "6", "--burn-in", "1",
+                      "--capacity", "64", "--replay-batch", "6",
+                      "--min-size", "12", "--rnn-width", "16"]),
+    "sebulba_muzero": ("sebulba_muzero",
+                       ["--frames", "300", "--simulations", "4",
+                        "--actor-batch", "6", "--trajectory", "6",
+                        "--microbatches", "2"]),
+    "sebulba_scenarios": ("sebulba_scenarios",
+                          ["--frames", "400", "--actor-batch", "6",
+                           "--trajectory", "5"]),
+    "sebulba_scenarios_chaos": ("sebulba_scenarios",
+                                ["--frames", "400", "--actor-batch", "6",
+                                 "--trajectory", "5", "--chaos", "7"]),
 }
 
 
@@ -54,8 +66,9 @@ def test_example_module_imports(name):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("name", sorted(_RL_RUNS))
-def test_rl_example_runs_end_to_end(name):
+@pytest.mark.parametrize("label", sorted(_RL_RUNS))
+def test_rl_example_runs_end_to_end(label):
+    name, argv = _RL_RUNS[label]
     src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
@@ -63,8 +76,12 @@ def test_rl_example_runs_end_to_end(name):
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
     proc = subprocess.run(
-        [sys.executable, str(_EXAMPLES / f"{name}.py"), *_RL_RUNS[name]],
+        [sys.executable, str(_EXAMPLES / f"{name}.py"), *argv],
         capture_output=True, text=True, timeout=420, env=env,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "FPS" in proc.stdout, proc.stdout[-2000:]
+    if "--chaos" in argv:
+        # the chaos run must survive its schedule and report supervision
+        # counters (the example prints them only when --chaos is set)
+        assert "chaos:" in proc.stdout, proc.stdout[-2000:]

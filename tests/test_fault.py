@@ -1,0 +1,261 @@
+"""ISSUE 7 — deterministic fault injection and durable checkpointing.
+
+  * ``FaultPlan.random`` is a pure function of its arguments: same seed,
+    same schedule; different seed, different schedule (chaos tests are
+    ordinary regression tests);
+  * actor injectors fire their scheduled kinds at their scheduled per-SLOT
+    steps — and exactly once across incarnations (the counter survives a
+    restart);
+  * ``FaultyHostEnv`` raises from the env step on schedule and passes
+    through otherwise;
+  * checkpoint writes are atomic: a killed write leaves tmp debris and NO
+    stamp, a torn write lands but is rejected by the embedded checksum;
+  * directory restore falls back newest-to-oldest over damaged stamps and
+    reports the skip count (``meta["fallbacks"]`` →
+    ``checkpoint_fallbacks``);
+  * ``resolve_auto_resume`` scans checkpoint_dir, starts fresh on empty,
+    and refuses ambiguous recovery sources.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import CheckpointCorruptError, restore, save
+from repro.fault import (
+    ActorFaultInjector,
+    FaultEvent,
+    FaultPlan,
+    FaultyHostEnv,
+    InjectedCheckpointKill,
+    InjectedCrash,
+    InjectedEnvError,
+)
+
+
+# -------------------------------------------------------------- plan
+
+
+def test_fault_plan_is_deterministic():
+    kwargs = dict(
+        actors=3, horizon=50, crash_rate=0.1, hang_rate=0.05,
+        slow_rate=0.1, env_error_rate=0.05, ckpt_kill_every=7,
+    )
+    a = FaultPlan.random(123, **kwargs)
+    b = FaultPlan.random(123, **kwargs)
+    assert a.events == b.events and a.seed == 123
+    c = FaultPlan.random(124, **kwargs)
+    assert c.events != a.events
+
+
+def test_fault_plan_warmup_protects_early_steps():
+    plan = FaultPlan.random(
+        0, actors=2, horizon=30, crash_rate=0.5, warmup=5
+    )
+    assert plan.events, "a 0.5 rate over 2x25 draws must schedule something"
+    assert all(e.step >= 5 for e in plan.events)
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="meteor", target="actor:0", step=1)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="crash", target="actor:0", step=-1)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="ckpt_kill", target="actor:0", step=1)
+
+
+def test_for_target_and_injector_scoping():
+    plan = FaultPlan(events=(
+        FaultEvent(kind="crash", target="actor:0", step=3),
+        FaultEvent(kind="env_error", target="actor:1", step=2),
+        FaultEvent(kind="ckpt_kill", target="checkpoint", step=0),
+    ))
+    assert len(plan.for_target("actor:0")) == 1
+    assert plan.actor_injector(0) is not None
+    assert plan.actor_injector(1) is not None
+    assert plan.actor_injector(2) is None, "no events -> no injector"
+    assert plan.checkpoint_injector() is not None
+    assert plan.env_injector() is None
+
+
+# ---------------------------------------------------------- actor injector
+
+
+def test_actor_injector_fires_on_schedule_exactly_once():
+    inj = ActorFaultInjector([FaultEvent(kind="crash", target="actor:0", step=2)])
+    inj.tick()
+    inj.tick()
+    with pytest.raises(InjectedCrash):
+        inj.tick()
+    # the slot counter moved past the event: a restarted incarnation
+    # sharing this injector runs clean from here on
+    for _ in range(20):
+        inj.tick()
+    assert [e.kind for e in inj.fired] == ["crash"]
+
+
+def test_actor_injector_slow_is_latency_not_failure():
+    inj = ActorFaultInjector([
+        FaultEvent(kind="slow", target="actor:0", step=1, seconds=0.01, span=2),
+    ])
+    import time
+
+    t0 = time.monotonic()
+    for _ in range(4):
+        inj.tick()
+    assert time.monotonic() - t0 >= 0.02
+    assert not inj.fired or all(e.kind == "slow" for e in inj.fired)
+
+
+def test_actor_injector_hang_wakes_on_cancel_and_unwinds():
+    import threading
+
+    inj = ActorFaultInjector([FaultEvent(kind="hang", target="actor:0", step=0)])
+    cancel = threading.Event()
+    raised = {}
+
+    def body():
+        try:
+            inj.tick(cancel=cancel)
+        except InjectedCrash as e:
+            raised["e"] = e
+
+    t = threading.Thread(target=body, daemon=True)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive(), "hang must block while cancel is unset"
+    cancel.set()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and "e" in raised
+
+
+# ------------------------------------------------------------- host env
+
+
+class _CountingEnv:
+    num_actions = 2
+    obs_shape = (3,)
+
+    def __init__(self):
+        self.steps = 0
+        self.closed = False
+
+    def reset(self):
+        return np.zeros(self.obs_shape, np.float32)
+
+    def step(self, action):
+        self.steps += 1
+        return np.zeros(self.obs_shape, np.float32), 0.0, False, {}
+
+    def close(self):
+        self.closed = True
+
+
+def test_faulty_host_env_raises_on_schedule():
+    plan = FaultPlan(events=(
+        FaultEvent(kind="env_error", target="env", step=2),
+    ))
+    inner = _CountingEnv()
+    env = FaultyHostEnv(inner, plan.env_injector())
+    assert env.num_actions == 2 and env.obs_shape == (3,)
+    env.reset()
+    env.step(0)
+    env.step(1)
+    with pytest.raises(InjectedEnvError):
+        env.step(0)
+    env.step(1)  # past the schedule: clean again
+    assert inner.steps == 3  # the injected step never reached the inner env
+    env.close()
+    assert inner.closed
+
+
+# ------------------------------------------------------ durable checkpoints
+
+
+def _params():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.zeros(3, np.float32)}
+
+
+def test_save_is_atomic_under_kill(tmp_path):
+    d = str(tmp_path)
+    api.save_checkpoint(d, _params(), param_version=1, updates=1, frames=8)
+    plan = FaultPlan(events=(
+        FaultEvent(kind="ckpt_kill", target="checkpoint", step=0),
+    ))
+    inj = plan.checkpoint_injector()
+    with pytest.raises(InjectedCheckpointKill):
+        api.save_checkpoint(
+            d, _params(), param_version=2, updates=2, frames=16, fault=inj,
+        )
+    # the kill left tmp debris but NO v2 stamp — and the v1 stamp still
+    # restores, untouched by the failed write
+    stamps = api.checkpoint_stamps(d)
+    assert [v for v, _ in stamps] == [1]
+    assert any(n.endswith(".tmp") for n in os.listdir(d))
+    _, meta = api.restore_checkpoint(d, _params())
+    assert meta["param_version"] == 1 and meta["fallbacks"] == 0
+
+
+def test_torn_write_is_detected_and_skipped(tmp_path):
+    d = str(tmp_path)
+    p = _params()
+    api.save_checkpoint(d, p, param_version=1, updates=1, frames=8)
+    plan = FaultPlan(events=(
+        FaultEvent(kind="ckpt_corrupt", target="checkpoint", step=0),
+    ))
+    api.save_checkpoint(
+        d, {k: v + 1 for k, v in p.items()}, param_version=2, updates=2,
+        frames=16, fault=plan.checkpoint_injector(),
+    )
+    stamps = api.checkpoint_stamps(d)
+    assert [v for v, _ in stamps] == [2, 1], "the torn write DID land"
+    torn = stamps[0][1]
+    like = {"params": p, "meta": {"param_version": 0, "updates": 0, "frames": 0}}
+    with pytest.raises(CheckpointCorruptError):
+        restore(torn, like)
+    # directory restore falls back to the newest VALID stamp and counts it
+    restored, meta = api.restore_checkpoint(d, p)
+    assert meta["param_version"] == 1 and meta["fallbacks"] == 1
+    np.testing.assert_array_equal(restored["w"], p["w"])
+
+
+def test_checksum_rejects_bit_flip(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save(path, {"x": np.arange(16, dtype=np.float32)})
+    data = bytearray(open(path, "rb").read())
+    # flip a byte deep in the payload (past the zip directory headers)
+    data[len(data) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(CheckpointCorruptError):
+        restore(path, {"x": np.zeros(16, np.float32)})
+
+
+def test_all_damaged_raises_corrupt_not_missing(tmp_path):
+    d = str(tmp_path)
+    plan = FaultPlan(events=(
+        FaultEvent(kind="ckpt_corrupt", target="checkpoint", step=0),
+    ))
+    api.save_checkpoint(
+        d, _params(), param_version=1, updates=1, frames=8,
+        fault=plan.checkpoint_injector(),
+    )
+    with pytest.raises(CheckpointCorruptError):
+        api.restore_checkpoint(d, _params())
+
+
+def test_resolve_auto_resume_contract(tmp_path):
+    d = str(tmp_path)
+    # empty dir -> fresh start
+    assert api.resolve_auto_resume(None, d, True) is None
+    api.save_checkpoint(d, _params(), param_version=3, updates=3, frames=24)
+    assert api.resolve_auto_resume(None, d, True) == d
+    # off -> passthrough
+    assert api.resolve_auto_resume("elsewhere", d, False) == "elsewhere"
+    with pytest.raises(ValueError):
+        api.resolve_auto_resume("elsewhere", d, True)
+    with pytest.raises(ValueError):
+        api.resolve_auto_resume(None, None, True)

@@ -213,34 +213,68 @@ def test_publish_slot_survives_donated_update_on_shared_device():
 # ------------------------------------------- actor-side queue put (retry)
 
 
+def _handle(seb, slot=0):
+    """A bare ActorHandle for exercising ``_queue_put`` outside ``run``
+    (matches what the supervisor would hand an actor incarnation)."""
+    from repro.core.supervision import ActorHandle
+
+    return ActorHandle(slot=slot, incarnation=0, core_id=0, seed=slot + 1)
+
+
 def test_queue_put_retries_on_full_and_counts_blocked():
     """Satellite: a full queue must block-and-retry (counting the blocked
-    intervals), not silently drop the trajectory."""
+    intervals on the incarnation's handle), not silently drop the
+    trajectory."""
     seb = _make_seb(queue_capacity=1)
     seb._queue.put("occupying")  # fill the queue
+    handle = _handle(seb)
     done = threading.Event()
     result = {}
 
     def put():
-        result["ok"] = seb._queue_put("shards", thread_id=0)
+        result["ok"] = seb._queue_put("shards", handle)
         done.set()
 
     t = threading.Thread(target=put, daemon=True)
     t.start()
     assert not done.wait(timeout=1.2), "put must still be retrying"
-    assert seb._thread_put_blocked[0] >= 1
+    assert handle.put_blocked >= 1
     assert seb._queue.get() == "occupying"  # learner frees a slot
     assert done.wait(timeout=5.0)
     assert result["ok"] and seb._queue.get() == "shards"
-    assert seb._thread_traj_dropped[0] == 0
+    assert handle.traj_dropped == 0
+    assert handle.first_put_at is not None  # recovery-latency stamp landed
 
 
 def test_queue_put_drops_only_on_stop():
     seb = _make_seb(queue_capacity=1)
     seb._queue.put("occupying")
     seb._stop.set()
-    assert seb._queue_put("shards", thread_id=0) is False
-    assert seb._thread_traj_dropped[0] == 1
+    handle = _handle(seb)
+    assert seb._queue_put("shards", handle) is False
+    assert handle.traj_dropped == 1
+
+
+def test_queue_put_unblocks_on_watchdog_cancel():
+    """Satellite (graceful shutdown): every put retry must re-check not
+    just the global stop event but this incarnation's cancel flag — a
+    watchdog-abandoned actor must never spin in the retry loop."""
+    seb = _make_seb(queue_capacity=1)
+    seb._queue.put("occupying")
+    handle = _handle(seb)
+    done = threading.Event()
+    result = {}
+
+    def put():
+        result["ok"] = seb._queue_put("shards", handle)
+        done.set()
+
+    t = threading.Thread(target=put, daemon=True)
+    t.start()
+    assert not done.wait(timeout=0.8), "put must still be retrying"
+    handle.cancel.set()  # watchdog abandons the incarnation
+    assert done.wait(timeout=5.0), "cancel must break the retry loop"
+    assert result["ok"] is False and handle.traj_dropped == 1
 
 
 def test_run_reports_publish_and_queue_counters():

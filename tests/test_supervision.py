@@ -1,0 +1,351 @@
+"""ISSUE 7 acceptance — actor supervision, elasticity, and recovery.
+
+Unit level (dummy actor bodies, no jax): crashed incarnations restart
+with exponential backoff and fresh seeds, a slot exceeding max_restarts
+is quarantined, the heartbeat watchdog cancels hung incarnations (with a
+startup grace while the first step compiles), EVERY failure's traceback
+is recorded (no crash masking), and ``join`` reports threads that refuse
+to stop.
+
+Integration level (tiny Sebulba on forced multi-device CPU): the chaos
+proof — a FaultPlan killing one of two actors mid-run and hanging the
+other, ``fit`` completing without deadlock with nonzero
+``actor_restarts``/``watchdog_stalls``; quarantine degrading the fleet
+instead of killing the run; a dead fleet raising ``SebulbaStallError``
+with diagnostics and all tracebacks; and the kill → checkpoint →
+``auto_resume`` round trip continuing the cumulative
+frame/update/param_version stamps through a damaged newest checkpoint.
+"""
+
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.supervision import (
+    ActorSupervisor,
+    SebulbaStallError,
+)
+
+jax = pytest.importorskip("jax")
+
+
+def _poll_until(sup, cond, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        sup.poll()
+        if cond():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def _stopper(stop):
+    def body(handle):
+        handle.frames = 1
+        while not (stop.is_set() or handle.cancel.is_set()):
+            handle.beat()
+            time.sleep(0.002)
+
+    return body
+
+
+# ------------------------------------------------------------------ units
+
+
+def test_restart_uses_fresh_seed_and_counts():
+    stop = threading.Event()
+    seeds = []
+
+    def body(handle):
+        seeds.append(handle.seed)
+        if handle.incarnation == 0:
+            raise RuntimeError("boom")
+        _stopper(stop)(handle)
+
+    sup = ActorSupervisor(
+        slots=[(0, 1)], spawn=body, stop=stop,
+        max_restarts=3, restart_backoff=0.01, stall_timeout=5.0,
+    )
+    sup.start()
+    assert _poll_until(sup, lambda: sup.actor_restarts == 1)
+    assert _poll_until(sup, lambda: len(seeds) == 2)
+    assert seeds[0] == 1 and seeds[1] != seeds[0], "restart must fold the seed"
+    assert sup.can_progress()
+    stop.set()
+    assert sup.join(timeout=5.0) == []
+    # the crash is on record even though the slot recovered
+    assert [name for name, _ in sup.errors()] == ["actor-0r0"]
+
+
+def test_backoff_is_exponential():
+    stop = threading.Event()
+
+    def body(handle):
+        raise RuntimeError("always dies")
+
+    sup = ActorSupervisor(
+        slots=[(0, 1)], spawn=body, stop=stop,
+        max_restarts=2, restart_backoff=0.05, stall_timeout=5.0,
+    )
+    sup.start()
+    assert _poll_until(sup, lambda: sup.actor_quarantined == 1)
+    slot = sup._slots[0]
+    assert slot.state == "quarantined" and slot.restarts == 2
+    # three incarnations total: original + max_restarts replacements
+    assert len(slot.handles) == 3
+    gaps = [
+        b.heartbeat - a.died_at
+        for a, b in zip(slot.handles, slot.handles[1:])
+    ]
+    # second gap waits 2x the base backoff (poll cadence adds jitter, so
+    # assert the floor, not the exact doubling)
+    assert gaps[0] >= 0.04 and gaps[1] >= 0.09
+    assert not sup.can_progress()
+    sup.join(timeout=1.0)
+
+
+def test_no_crash_masking_every_traceback_recorded():
+    stop = threading.Event()
+
+    def body(handle):
+        raise RuntimeError(f"boom-{handle.slot}-{handle.incarnation}")
+
+    sup = ActorSupervisor(
+        slots=[(0, 1), (0, 2)], spawn=body, stop=stop,
+        max_restarts=1, restart_backoff=0.01, stall_timeout=5.0,
+    )
+    sup.start()
+    assert _poll_until(sup, lambda: sup.actor_quarantined == 2)
+    errors = sup.errors()
+    assert len(errors) == 4, "2 slots x 2 incarnations, nothing masked"
+    messages = " ".join(tb for _, tb in errors)
+    for slot in (0, 1):
+        for inc in (0, 1):
+            assert f"boom-{slot}-{inc}" in messages
+    err = sup.stall_error(queue_depth=0)
+    assert isinstance(err, SebulbaStallError)
+    assert len(err.diagnostics["tracebacks"]) == 4
+    assert err.diagnostics["actor_quarantined"] == 2
+    assert "boom-1-1" in str(err)
+    sup.join(timeout=1.0)
+
+
+def test_watchdog_cancels_hung_actor_but_spares_startups():
+    stop = threading.Event()
+    hang = threading.Event()
+
+    def body(handle):
+        if handle.incarnation == 0 and hang.is_set():
+            handle.frames = 1  # past startup grace
+            handle.beat()
+            handle.cancel.wait()  # wedged: no more heartbeats
+            return
+        _stopper(stop)(handle)
+
+    sup = ActorSupervisor(
+        slots=[(0, 1)], spawn=body, stop=stop,
+        max_restarts=2, restart_backoff=0.01, stall_timeout=0.05,
+    )
+    # startup grace: an incarnation with frames == 0 is compiling, not
+    # hung — it must never trip the watchdog however stale its stamp
+    grace_sup = ActorSupervisor(
+        slots=[(0, 1)], spawn=lambda h: h.cancel.wait(), stop=stop,
+        max_restarts=0, restart_backoff=0.01, stall_timeout=0.01,
+    )
+    grace_sup.start()
+    time.sleep(0.1)
+    grace_sup.poll()
+    assert grace_sup.watchdog_stalls == 0 and grace_sup.can_progress()
+    grace_sup.join(timeout=1.0)
+
+    hang.set()
+    sup.start()
+    assert _poll_until(sup, lambda: sup.watchdog_stalls == 1)
+    assert _poll_until(sup, lambda: sup.actor_restarts == 1)
+    name, tb = sup.errors()[0]
+    assert name == "actor-0r0" and "heartbeat stalled" in tb
+    stop.set()
+    assert sup.join(timeout=5.0) == []
+
+
+def test_join_reports_leaked_threads():
+    stop = threading.Event()
+    wedge = threading.Event()
+
+    def body(handle):
+        handle.frames = 1
+        wedge.wait()  # ignores stop AND cancel: truly wedged
+
+    sup = ActorSupervisor(
+        slots=[(0, 1)], spawn=body, stop=stop,
+        max_restarts=0, restart_backoff=0.01, stall_timeout=60.0,
+    )
+    sup.start()
+    stop.set()
+    leaked = sup.join(timeout=0.2)
+    assert leaked == ["actor-0r0"]
+    wedge.set()  # let the daemon thread die before the test exits
+
+
+def test_supervisor_validates_config():
+    stop = threading.Event()
+    for bad in (
+        dict(max_restarts=-1),
+        dict(restart_backoff=0),
+        dict(stall_timeout=0),
+    ):
+        kwargs = dict(
+            max_restarts=1, restart_backoff=0.01, stall_timeout=1.0,
+        )
+        kwargs.update(bad)
+        with pytest.raises(ValueError):
+            ActorSupervisor(
+                slots=[(0, 1)], spawn=lambda h: None, stop=stop, **kwargs
+            )
+
+
+# ------------------------------------------------------------ integration
+
+
+def _chaos_sebulba(plan, **cfg_kwargs):
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    cfg = dict(
+        num_actor_cores=1, threads_per_actor_core=2, actor_batch_size=4,
+        trajectory_length=2, queue_capacity=2,
+        max_restarts=2, restart_backoff=0.01, stall_timeout=0.25,
+    )
+    cfg.update(cfg_kwargs)
+    return Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.sgd(1e-3),
+        config=SebulbaConfig(**cfg),
+        fault_plan=plan,
+    )
+
+
+def test_chaos_crash_and_hang_fit_completes():
+    """THE acceptance chaos proof: one of two actors killed mid-run and
+    the other hung; fit completes without deadlock, restarts the crash,
+    watchdog-cancels the hang, and reports both through RESULT_KEYS."""
+    from repro.fault import FaultEvent, FaultPlan
+
+    plan = FaultPlan(events=(
+        FaultEvent(kind="crash", target="actor:0", step=6),
+        FaultEvent(kind="hang", target="actor:1", step=8),
+    ), seed=0)
+    seb = _chaos_sebulba(plan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)  # no leaked threads
+        res = seb.fit(jax.random.key(0), total_frames=12000)
+    assert res["frames"] >= 12000 and res["updates"] > 0
+    assert res["actor_restarts"] >= 1
+    assert res["watchdog_stalls"] >= 1
+    assert res["actor_quarantined"] == 0
+    assert np.isfinite(res["metrics"]["loss"])
+    # both failures are on record, and the recovery latency probe paired
+    # at least one death with its replacement's first trajectory
+    assert len(seb.supervisor.errors()) >= 2
+    assert all(lat >= 0.0 for lat in seb.supervisor.recovery_latencies())
+
+
+def test_quarantine_degrades_instead_of_dying():
+    """A slot that keeps crashing is quarantined after max_restarts; the
+    surviving actor keeps feeding every learner shard and fit completes."""
+    from repro.fault import FaultEvent, FaultPlan
+
+    plan = FaultPlan(events=tuple(
+        FaultEvent(kind="crash", target="actor:0", step=s)
+        for s in (4, 5, 6)
+    ), seed=0)
+    seb = _chaos_sebulba(plan, max_restarts=2)
+    res = seb.fit(jax.random.key(0), total_frames=4000)
+    assert res["frames"] >= 4000
+    assert res["actor_quarantined"] == 1
+    assert res["actor_restarts"] == 2
+    states = {s.slot_id: s.state for s in seb.supervisor._slots}
+    assert states[0] == "quarantined"
+
+
+def test_dead_fleet_raises_structured_stall_error():
+    """When NO actor can make progress the learner raises
+    SebulbaStallError carrying diagnostics and every traceback — it does
+    not poll an empty queue forever."""
+    from repro.fault import FaultEvent, FaultPlan
+
+    plan = FaultPlan(events=tuple(
+        FaultEvent(kind="crash", target="actor:0", step=s) for s in (4, 5)
+    ), seed=0)
+    seb = _chaos_sebulba(
+        plan, threads_per_actor_core=1, max_restarts=1,
+    )
+    with pytest.raises(SebulbaStallError) as exc_info:
+        seb.fit(jax.random.key(0), total_frames=10**9)
+    err = exc_info.value
+    assert err.diagnostics["actor_quarantined"] == 1
+    assert err.diagnostics["actors"][0]["state"] == "quarantined"
+    assert "queue_depth" in err.diagnostics
+    assert "param_versions" in err.diagnostics
+    assert len(err.diagnostics["tracebacks"]) == 2, "both crashes reported"
+    assert "injected crash" in str(err)
+
+
+def test_kill_checkpoint_auto_resume_round_trip(tmp_path):
+    """Durable-recovery round trip: train with checkpointing, damage the
+    newest stamp (a torn write), auto-resume — the run restores from the
+    newest VALID stamp, counts the fallback, and continues the cumulative
+    frame/update/param_version line so new stamps sort above the old."""
+    from repro import api
+
+    d = str(tmp_path)
+    seb1 = _chaos_sebulba(None)
+    res1 = seb1.fit(
+        jax.random.key(0), total_frames=400,
+        checkpoint_dir=d, checkpoint_every=2,
+    )
+    stamps = api.checkpoint_stamps(d)
+    assert len(stamps) >= 2
+    newest_version, newest_path = stamps[0]
+    assert newest_version == res1["param_version"]
+    with open(newest_path, "rb") as f:
+        payload = f.read()
+    with open(newest_path, "wb") as f:
+        f.write(payload[: len(payload) // 2])  # torn write
+
+    seb2 = _chaos_sebulba(None)
+    res2 = seb2.fit(
+        jax.random.key(1), total_frames=400,
+        checkpoint_dir=d, checkpoint_every=2, auto_resume=True,
+    )
+    assert res2["checkpoint_fallbacks"] == 1
+    # version line continued from the restored (second-newest) stamp
+    restored_version = stamps[1][0]
+    assert res2["param_version"] > restored_version
+    final_version, final_path = api.checkpoint_stamps(d)[0]
+    assert final_version == res2["param_version"] > newest_version
+    params_like = jax.tree.map(np.asarray, res2["params"])
+    _, meta = api.restore_checkpoint(final_path, params_like)
+    # cumulative stamps: the resumed run's final checkpoint carries the
+    # restored run's updates and frames plus its own
+    _, meta1 = api.restore_checkpoint(stamps[1][1], params_like)
+    assert meta["updates"] == meta1["updates"] + res2["updates"]
+    # frames also continue cumulatively, but the final stamp may be the
+    # last BOUNDARY save (final_save dedupes an unchanged version), whose
+    # frame count trails the post-shutdown total — assert the window
+    assert meta1["frames"] < meta["frames"] <= meta1["frames"] + res2["frames"]
+
+    # fresh directory + auto_resume -> fresh start, no error
+    seb3 = _chaos_sebulba(None)
+    res3 = seb3.fit(
+        jax.random.key(2), total_frames=64,
+        checkpoint_dir=str(tmp_path / "fresh"), auto_resume=True,
+    )
+    assert res3["checkpoint_fallbacks"] == 0
