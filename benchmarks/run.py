@@ -146,13 +146,26 @@ def _fault_suite(lines: list[str]) -> None:
     )
 
 
+def _elastic_suite(lines: list[str]) -> None:
+    """--suite elastic: multi-host membership scale-out (per-host fps
+    flat 1->2->4) + SIGKILL host-loss recovery latency ->
+    BENCH_elastic.json (the elasticity perf trajectory)."""
+    from benchmarks import elastic_bench
+
+    _section(
+        "elastic suite (membership scale-out + host-kill recovery)",
+        lambda: elastic_bench.main(json_path="BENCH_elastic.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
     ap.add_argument("--suite",
                     choices=["all", "replay", "sebulba", "learner",
-                             "recurrent", "envs", "fault"],
+                             "recurrent", "envs", "fault", "elastic"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
                          "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
@@ -161,7 +174,9 @@ def main() -> None:
                          "-> BENCH_recurrent.json only (R2D2 core + burn-in); "
                          "'envs' -> BENCH_envs.json only (host pool vs "
                          "device fleet stepping); 'fault' -> BENCH_fault.json "
-                         "only (supervision degradation + recovery latency)")
+                         "only (supervision degradation + recovery latency); "
+                         "'elastic' -> BENCH_elastic.json only (multi-host "
+                         "scale-out + host-kill recovery)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -174,6 +189,7 @@ def main() -> None:
         "recurrent": _recurrent_suite,
         "envs": _envs_suite,
         "fault": _fault_suite,
+        "elastic": _elastic_suite,
     }
     if args.suite in suites:
         suites[args.suite](lines)
@@ -204,6 +220,7 @@ def main() -> None:
         _recurrent_suite(lines)
         _envs_suite(lines)
         _fault_suite(lines)
+        _elastic_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

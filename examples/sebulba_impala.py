@@ -38,6 +38,12 @@ def main() -> None:
                          "stragglers across the actor fleet) to exercise "
                          "supervision: restarts, watchdog, quarantine. Same "
                          "seed, same schedule.")
+    ap.add_argument("--hosts", type=int, default=1, metavar="N",
+                    help="run as one host of an N-host elastic fleet "
+                         "(N-1 simulated peers renew leases in a shared "
+                         "registry dir; with --chaos, seeded host_crash/"
+                         "host_rejoin events hit the peers mid-run and the "
+                         "learner reshards on each epoch bump)")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
@@ -62,6 +68,7 @@ def main() -> None:
         }
     )
     threads_per_core = 2
+    peer_ids = tuple(f"peer{i}" for i in range(args.hosts - 1))
     fault_plan = None
     chaos_kwargs = {}
     if args.chaos is not None:
@@ -80,12 +87,31 @@ def main() -> None:
             crash_rate=2.0 / horizon,   # ~2 crashes per slot
             hang_rate=0.5 / horizon,    # ~1 hang across a 2-slot fleet
             slow_rate=4.0 / horizon,
+            # host chaos (the elastic tier): expect ~1 loss per peer over
+            # the window, rejoining a quarter-window later.  Host steps
+            # count LEARNER updates, which run on a comparable scale.
+            peer_hosts=peer_ids,
+            host_crash_rate=3.0 / horizon,
+            host_rejoin_after=max(2, horizon // 4),
         )
         print(f"chaos seed {args.chaos}: {len(fault_plan.events)} "
               "scheduled faults")
         # a tight (but compile-safe: startup is grace-period exempt) stall
         # budget so injected hangs are caught within the demo run
         chaos_kwargs = dict(stall_timeout=5.0, restart_backoff=0.1)
+    cluster = None
+    if args.hosts > 1:
+        import tempfile
+
+        from repro.distributed import HostSupervisor
+
+        registry_dir = tempfile.mkdtemp(prefix="sebulba_registry_")
+        cluster = HostSupervisor(
+            registry_dir, "host0", ttl=0.3, peers=peer_ids,
+            fault_plan=fault_plan, checkpoint_dir=args.checkpoint_dir,
+        )
+        print(f"elastic fleet: host0 + {len(peer_ids)} peers, "
+              f"registry {registry_dir}")
     seb = Sebulba(
         network=net,
         optimizer=optim.rmsprop(3e-4, clip_norm=1.0),
@@ -97,6 +123,7 @@ def main() -> None:
             **chaos_kwargs,
         ),
         fault_plan=fault_plan,
+        cluster=cluster,
         **env_kwargs,
     )
     out = seb.fit(jax.random.key(0), total_frames=args.frames, log_every=25,
@@ -114,6 +141,12 @@ def main() -> None:
             f"chaos: {out['actor_restarts']} restarts, "
             f"{out['watchdog_stalls']} watchdog stalls, "
             f"{out['actor_quarantined']} quarantined"
+        )
+    if args.hosts > 1:
+        print(
+            f"hosts: epoch {out['epoch']}, {out['hosts_lost']} lost, "
+            f"{out['hosts_joined']} joined, {out['reshards']} reshards, "
+            f"{seb.stale_epoch_trajs} stale-epoch trajectories dropped"
         )
 
 

@@ -37,6 +37,7 @@ from repro.api.runner import (  # noqa: F401
     checkpoint_stamps,
     latest_checkpoint,
     make_result,
+    newest_valid_checkpoint,
     resolve_auto_resume,
     restore_checkpoint,
     restore_for_fit,

@@ -35,6 +35,12 @@ keys):
                        stall_timeout)
     checkpoint_fallbacks  damaged checkpoints skipped while restoring
                        (restore fell back to the newest VALID stamp)
+    hosts_joined       hosts observed joining the membership after start
+                       (multi-host elastic Sebulba; includes rejoins)
+    hosts_lost         hosts whose lease expired or retired mid-run
+    reshards           membership epoch bumps observed (each triggers the
+                       deterministic replay reshard + forced republish)
+    epoch              final membership epoch (0 when not multi-host)
     mean_return        mean episode return (NaN when untracked)
     metrics            drained learner metrics (means since last drain)
     scenarios          per-scenario counters when training on a device-env
@@ -86,6 +92,10 @@ RESULT_KEYS = (
     "actor_quarantined",
     "watchdog_stalls",
     "checkpoint_fallbacks",
+    "hosts_joined",
+    "hosts_lost",
+    "reshards",
+    "epoch",
     "mean_return",
     "metrics",
     "scenarios",
@@ -103,6 +113,10 @@ _COUNTER_DEFAULTS = {
     "actor_quarantined": 0,
     "watchdog_stalls": 0,
     "checkpoint_fallbacks": 0,
+    "hosts_joined": 0,
+    "hosts_lost": 0,
+    "reshards": 0,
+    "epoch": 0,
 }
 
 
@@ -213,6 +227,19 @@ def latest_checkpoint(directory: str) -> str | None:
     directory is missing or holds no checkpoints)."""
     stamps = checkpoint_stamps(directory)
     return stamps[0][1] if stamps else None
+
+
+def newest_valid_checkpoint(directory: str) -> str | None:
+    """Path of the newest stamp that passes checksum verification, or
+    None when no valid checkpoint exists.  The rejoining-host restore
+    source (multi-host elasticity): a host re-entering the fleet resumes
+    from here, skipping any stamp another host tore mid-preemption —
+    same fallback order as ``restore_checkpoint`` on a directory, but
+    read-only and without materializing params."""
+    for _, path in checkpoint_stamps(directory):
+        if checkpoint.verify(path):
+            return path
+    return None
 
 
 def _restore_file(path: str, params_like: PyTree) -> tuple[PyTree, dict]:

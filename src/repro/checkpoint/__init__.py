@@ -2,4 +2,5 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointCorruptError,
     restore,
     save,
+    verify,
 )

@@ -103,7 +103,17 @@ def save(path: str, tree: PyTree, *, fault: Callable | None = None) -> None:
 
     directory = os.path.dirname(path) or "."
     os.makedirs(directory, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    # per-process tmp prefix: many hosts checkpoint into ONE shared
+    # directory (multi-host elasticity, ISSUE 8), so the staging name
+    # must be collision-free across processes — mkstemp already
+    # guarantees uniqueness within a process; the pid makes concurrent
+    # writers' debris attributable and can never race another host's
+    # staging file even across filesystems with weak mkstemp semantics
+    fd, tmp = tempfile.mkstemp(
+        dir=directory,
+        prefix=f".{os.path.basename(path)}-{os.getpid()}-",
+        suffix=".tmp",
+    )
     try:
         with os.fdopen(fd, "wb") as f:
             if fault is not None:
@@ -147,6 +157,20 @@ def _load_verified(path: str) -> tuple[dict[str, np.ndarray], dict[str, str]]:
             "(torn write or on-disk corruption)"
         )
     return raw, dtypes
+
+
+def verify(path: str) -> bool:
+    """True iff ``path`` is a complete, checksum-valid checkpoint.
+
+    The read-only half of the restore fallback: a rejoining host scans
+    the shared checkpoint directory newest-to-oldest and resumes from
+    the first stamp this accepts, without paying a full restore per
+    candidate (repro.api.newest_valid_checkpoint)."""
+    try:
+        _load_verified(path)
+        return True
+    except CheckpointCorruptError:
+        return False
 
 
 def restore(path: str, like: PyTree) -> PyTree:

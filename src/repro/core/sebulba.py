@@ -75,6 +75,17 @@ of polling an empty queue forever.  Checkpoints are atomic + checksummed
 with newest-valid-stamp fallback and ``fit(..., auto_resume=True)``.
 The supervision hot-path cost is one monotonic heartbeat stamp per env
 step.  See ARCHITECTURE.md §Fault tolerance & elasticity.
+
+Multi-host elasticity (repro/distributed/): mounting a ``HostSupervisor``
+as ``cluster=`` makes this Sebulba one host of an elastic fleet.  The
+learner loop polls host membership once per drain iteration; a
+membership epoch bump (a host's lease expired, or a host rejoined)
+forces a param republish so every actor restarts from a consistent
+version, trajectories are epoch-tagged at enqueue and stale-tagged ones
+are dropped at the learner (the epoch-checked insert path — a trajectory
+routed under a dead membership never crosses the bump), and the result
+schema reports ``hosts_joined`` / ``hosts_lost`` / ``reshards`` /
+``epoch``.  See ARCHITECTURE.md §Multi-host elasticity.
 """
 
 from __future__ import annotations
@@ -169,6 +180,7 @@ class Sebulba:
         agent=None,
         device_env=None,  # DeviceEnv / factory / ScenarioMix(es) / fleet
         fault_plan=None,  # repro.fault.FaultPlan — chaos test/bench surface
+        cluster=None,  # repro.distributed.HostSupervisor — elastic fleet
     ):
         self.cfg = config
         if device_env is None and (env_factory is None or make_batched_env is None):
@@ -384,6 +396,13 @@ class Sebulba:
             fault_plan=fault_plan,
         )
         self._fault_plan = fault_plan
+        # multi-host membership (ISSUE 8): the learner loop polls the
+        # cluster each drain iteration and reacts to epoch bumps; actors
+        # tag every enqueued trajectory with the epoch they produced it
+        # under (one int read — the hot path pays nothing else)
+        self._cluster = cluster
+        self._epoch = 0
+        self.stale_epoch_trajs = 0
 
     @property
     def frames(self) -> int:
@@ -719,7 +738,9 @@ class Sebulba:
         timeout = min(0.5, self.cfg.stall_timeout / 4)
         while self._actor_live(handle):
             try:
-                self._queue.put(shards, timeout=timeout)
+                # epoch-tagged: the learner drops entries produced under
+                # a stale membership (see run's epoch check)
+                self._queue.put((self._epoch, shards), timeout=timeout)
                 handle.mark_put()
                 return True
             except queue.Full:
@@ -1060,6 +1081,10 @@ ActorSupervisor`: a crashed actor restarts with exponential backoff
             ),
         )
 
+        if self._cluster is not None:
+            # join the fleet before actors produce: the baseline epoch
+            # tags every trajectory from the first drain onward
+            self._epoch = self._cluster.start().epoch
         self.supervisor.start()
 
         updates = 0
@@ -1076,10 +1101,20 @@ ActorSupervisor`: a crashed actor restarts with exponential backoff
                 # heartbeat watchdog, and executes due restarts — no
                 # monitor thread, no locks on the actor hot path
                 self.supervisor.poll()
+                if self._cluster is not None:
+                    # host-tier supervision: fire due host chaos, observe
+                    # the live set, and on an epoch bump force-republish
+                    # so every actor's next step runs the current params
+                    # under the current membership (the epoch-checked
+                    # publish path)
+                    bumped = self._cluster.poll(updates)
+                    if bumped is not None:
+                        self._epoch = bumped.epoch
+                        self._publish_params(params, force=True)
                 try:
                     # short poll so supervision stays responsive even when
                     # no actor is producing
-                    shards = self._queue.get(timeout=0.5)
+                    epoch_tag, shards = self._queue.get(timeout=0.5)
                 except queue.Empty:
                     # re-poll before judging progress: the snapshot from the
                     # top of the iteration is up to a get-timeout stale, and
@@ -1100,6 +1135,13 @@ ActorSupervisor`: a crashed actor restarts with exponential backoff
                             frames=self.frames,
                             updates=updates,
                         )
+                    continue
+                if epoch_tag != self._epoch:
+                    # epoch-checked insert: this trajectory was produced
+                    # (and its replay routing would be computed) under a
+                    # membership that no longer exists — count and drop
+                    # rather than train across the reshard boundary
+                    self.stale_epoch_trajs += 1
                     continue
                 if self._replay is not None:
                     if replay_state is None:
@@ -1165,6 +1207,8 @@ ActorSupervisor`: a crashed actor restarts with exponential backoff
                     )
         finally:
             self._stop.set()
+            if self._cluster is not None:
+                self._cluster.stop()  # graceful leave: retire our lease
             leaked = self.supervisor.join(timeout=10.0)
             if leaked:
                 # a thread that survives stop+cancel+join is wedged beyond
@@ -1223,6 +1267,14 @@ ActorSupervisor`: a crashed actor restarts with exponential backoff
             actor_quarantined=self.supervisor.actor_quarantined,
             watchdog_stalls=self.supervisor.watchdog_stalls,
             checkpoint_fallbacks=checkpoint_fallbacks,
+            # multi-host elasticity accounting (ISSUE 8): zeros when no
+            # cluster is mounted — one result shape either way
+            hosts_joined=(
+                self._cluster.hosts_joined if self._cluster else 0
+            ),
+            hosts_lost=self._cluster.hosts_lost if self._cluster else 0,
+            reshards=self._cluster.reshards if self._cluster else 0,
+            epoch=self._epoch,
             replay_size=(
                 self._replay.size(replay_state)
                 if self._replay is not None and replay_state is not None

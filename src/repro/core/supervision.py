@@ -295,11 +295,23 @@ class ActorSupervisor:
     def recovery_latencies(self) -> list[float]:
         """Seconds from each incarnation's death to its replacement's
         first successful trajectory put (the fleet's measured recovery
-        latency; incomplete pairs are skipped)."""
+        latency).
+
+        Incomplete pairs are DROPPED, never mis-paired: a dead
+        incarnation with no replacement (quarantined slot) measures
+        nothing, and an incarnation that died before its own first put
+        (e.g. a replacement cancelled by the watchdog mid-compile)
+        neither completes the previous pairing nor baselines the next —
+        a latency is only ever adjacent death -> adjacent first put.
+        """
         out = []
         for slot in self._slots:
             for prev, nxt in zip(slot.handles, slot.handles[1:]):
-                if prev.died_at is not None and nxt.first_put_at is not None:
+                if (
+                    prev.first_put_at is not None
+                    and prev.died_at is not None
+                    and nxt.first_put_at is not None
+                ):
                     out.append(max(0.0, nxt.first_put_at - prev.died_at))
         return out
 

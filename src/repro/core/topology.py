@@ -5,6 +5,16 @@ learner sets (paper Fig. 1c / Fig. 3); Anakin uses every core uniformly
 (paper Fig. 1b).  On real TPU hosts ``jax.local_devices()`` returns the 8
 cores of Fig. 1a; on this CPU container the same code runs against
 ``--xla_force_host_platform_device_count`` placeholder devices.
+
+Multi-host (ISSUE 8): a TPU pod presents each host with its own local
+cores, so the host-aware path carves the global device list into
+``num_hosts`` contiguous per-host groups first — ``host_rank`` selects
+this host's group, and the actor/learner split happens inside it.  The
+split stays a pure function of ``(devices, num_hosts, host_rank)``, so
+every host derives its own (disjoint) cores from the same global list
+with no coordination, and the elastic bench can emulate a pod by giving
+each worker process a different ``host_rank`` over one placeholder
+device list.
 """
 
 from __future__ import annotations
@@ -18,6 +28,10 @@ import jax
 class CoreSplit:
     actor_devices: tuple
     learner_devices: tuple
+    # which host's slice of the pod this split is (host-aware path);
+    # single-host callers keep the 0-of-1 defaults
+    host_rank: int = 0
+    num_hosts: int = 1
 
     @property
     def num_actors(self) -> int:
@@ -28,21 +42,64 @@ class CoreSplit:
         return len(self.learner_devices)
 
 
-def split_devices(num_actor_cores: int, devices=None) -> CoreSplit:
+def split_devices(
+    num_actor_cores: int,
+    devices=None,
+    *,
+    host_rank: int = 0,
+    num_hosts: int = 1,
+) -> CoreSplit:
     """Split local devices into A actor cores + (n - A) learner cores.
 
     The paper's default for model-free agents is a 1:3 actor:learner split
     (2 actor + 6 learner cores on an 8-core host).  With a single device
     (CPU quickstart) the same device plays both roles.
+
+    ``num_hosts`` > 1 enables the host-aware path: ``devices`` (default
+    every local device) is carved into ``num_hosts`` contiguous groups
+    and the actor/learner split is taken inside group ``host_rank`` —
+    each host of the pod owns a disjoint device set derived from the
+    same global list.
     """
     devices = tuple(devices if devices is not None else jax.local_devices())
+    if not 0 <= host_rank < num_hosts:
+        raise ValueError(
+            f"need 0 <= host_rank < num_hosts, got host_rank={host_rank} "
+            f"with num_hosts={num_hosts}"
+        )
+    if num_hosts > 1:
+        if len(devices) % num_hosts:
+            raise ValueError(
+                f"{len(devices)} devices do not tile across {num_hosts} "
+                "hosts; the host-aware split carves contiguous equal "
+                "groups — size the device list (or "
+                "--xla_force_host_platform_device_count) to a multiple "
+                "of num_hosts"
+            )
+        per_host = len(devices) // num_hosts
+        devices = devices[host_rank * per_host:(host_rank + 1) * per_host]
     if len(devices) == 1:
-        return CoreSplit(actor_devices=devices, learner_devices=devices)
+        return CoreSplit(
+            actor_devices=devices, learner_devices=devices,
+            host_rank=host_rank, num_hosts=num_hosts,
+        )
     if not 0 < num_actor_cores < len(devices):
         raise ValueError(
-            f"need 0 < actor cores < {len(devices)}, got {num_actor_cores}"
+            f"cannot split {len(devices)} device(s) into "
+            f"{num_actor_cores} actor core(s) + at least one learner "
+            "core: need 0 < num_actor_cores < the per-host device "
+            "count. Fix-its: run with more placeholder devices "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=N), "
+            "lower SebulbaConfig.num_actor_cores, or rely on the "
+            "single-device fallback (exactly one device -> that device "
+            "plays both roles). Multi-host runs split per host: "
+            "split_devices(..., host_rank=r, num_hosts=H) carves the "
+            "device list H ways first, so each host needs "
+            "num_actor_cores < devices/H."
         )
     return CoreSplit(
         actor_devices=devices[:num_actor_cores],
         learner_devices=devices[num_actor_cores:],
+        host_rank=host_rank,
+        num_hosts=num_hosts,
     )

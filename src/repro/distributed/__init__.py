@@ -1,0 +1,39 @@
+"""Multi-host elasticity for Sebulba (ISSUE 8).
+
+Three layers, bottom up:
+
+  * ``registry`` — lease-based membership over a shared directory
+    (atomic ``os.replace`` stamps, death = absence of renewal) plus the
+    pure shard-placement functions every host derives the same layout
+    from;
+  * ``routing`` — cross-host replay routing: owner-hashed inserts,
+    fan-out sampling with global PER re-normalization, deterministic
+    epoch-bump reshard;
+  * ``host`` — the per-host membership agent (``HostSupervisor``,
+    Sebulba's ``cluster=`` mount) and the in-process peer simulation the
+    seeded host-chaos runs drive.
+
+See ARCHITECTURE.md §Multi-host elasticity.
+"""
+
+from repro.distributed.host import HostSupervisor, SimulatedPeerHost
+from repro.distributed.registry import (
+    HostRegistry,
+    Membership,
+    owner_rank,
+    shard_assignment,
+    stable_hash,
+)
+from repro.distributed.routing import DistributedReplay, StaleEpochError
+
+__all__ = [
+    "DistributedReplay",
+    "HostRegistry",
+    "HostSupervisor",
+    "Membership",
+    "SimulatedPeerHost",
+    "StaleEpochError",
+    "owner_rank",
+    "shard_assignment",
+    "stable_hash",
+]

@@ -1,0 +1,293 @@
+"""Host-tier supervision: PR 7's slot supervision, one level up (ISSUE 8).
+
+``ActorSupervisor`` keeps one host alive through actor crashes; this
+module keeps the *fleet* alive through host crashes.  The analogy is
+exact — each worker process is a supervised slot, and the state machine
+mirrors the actor tier::
+
+    running -> (crash / preempt) lease expires -> LOST
+            -> surviving hosts observe the epoch bump, reshard, and keep
+               training at reduced throughput        (graceful degradation,
+                                                      = actor quarantine)
+    lost -> (rejoin) re-announce lease -> epoch bump -> RUNNING again,
+            restored from the newest VALID checkpoint stamp
+                                                      (= actor restart)
+
+The difference from the actor tier is the failure detector: threads in
+one process can be reaped directly, but a preempted *host* just goes
+silent.  Detection is therefore the lease (repro/distributed/registry.py)
+— death is the absence of renewal — and every membership transition is
+announced to the survivors as an **epoch bump**, which is the signal
+Sebulba's learner loop polls (``cluster.poll``) to force a param
+republish and a deterministic replay reshard.
+
+Two classes:
+
+  * :class:`SimulatedPeerHost` — an in-process stand-in for a peer
+    host's *membership behaviour* (announce / renew / crash / preempt /
+    rejoin).  It drives the same lease files a real worker process
+    writes, so single-process chaos tests and the ``--hosts N`` example
+    exercise the identical detection path the multi-process bench does.
+    On rejoin it restores from the newest valid checkpoint stamp —
+    the PR 7 ``auto_resume`` contract, now a membership event.
+  * :class:`HostSupervisor` — the per-host membership agent Sebulba
+    mounts as ``cluster=``: renews this host's own lease from a
+    heartbeat thread, fires seeded host-level FaultPlan events at their
+    learner steps, and surfaces epoch bumps (with joined/lost/reshard
+    accounting) to the learner loop.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.distributed.registry import HostRegistry, Membership
+
+
+class SimulatedPeerHost:
+    """An in-process peer: a lease-renewal loop with fault hooks.
+
+    The simulation is of the peer's *membership* behaviour only — it
+    generates no trajectories.  What it proves is the detection and
+    recovery path: a crashed peer's lease expires exactly as a
+    SIGKILLed worker's would (``HostRegistry.expire`` fast-forwards the
+    TTL so seeded chaos stays step-deterministic instead of
+    wall-clock-bound), a preempted peer retires its lease (the graceful
+    SIGTERM path), and a rejoining peer re-announces and records the
+    checkpoint stamp it would restore from — the newest VALID one, via
+    the PR 7 fallback scan.
+    """
+
+    def __init__(
+        self,
+        registry: HostRegistry,
+        host_id: str,
+        *,
+        checkpoint_dir: str | None = None,
+    ):
+        self.registry = registry
+        self.host_id = host_id
+        self.checkpoint_dir = checkpoint_dir
+        self.state = "new"  # new -> running -> crashed/preempted -> running
+        self.resumed_from: str | None = None  # stamp path of the last rejoin
+        self.rejoins = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _renew_loop(self) -> None:
+        interval = self.registry.ttl / 3.0
+        while not self._stop.wait(interval):
+            self.registry.renew(self.host_id)
+
+    def start(self) -> None:
+        if self.state == "running":
+            return
+        self.registry.announce(self.host_id)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._renew_loop, daemon=True,
+            name=f"peer-{self.host_id}",
+        )
+        self._thread.start()
+        self.state = "running"
+
+    def _halt_renewal(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=self.registry.ttl)
+            self._thread = None
+
+    def crash(self) -> None:
+        """SIGKILL / hard preemption: renewal simply stops and the lease
+        runs out.  (Fast-forwarded so the epoch bump lands on the next
+        sync, not a TTL later.)"""
+        self._halt_renewal()
+        self.registry.expire(self.host_id)
+        self.state = "crashed"
+
+    def preempt(self) -> None:
+        """Graceful preemption (SIGTERM with time to say goodbye): the
+        lease is retired immediately instead of expiring."""
+        self._halt_renewal()
+        self.registry.retire(self.host_id)
+        self.state = "preempted"
+
+    def rejoin(self) -> None:
+        """Come back: restore from the newest VALID checkpoint stamp
+        (recording which), re-announce the lease, resume renewing.  The
+        next ``sync`` observes the join and bumps the epoch."""
+        if self.state == "running":
+            return
+        if self.checkpoint_dir is not None:
+            from repro import api  # lazy: api never imports distributed
+
+            self.resumed_from = api.newest_valid_checkpoint(
+                self.checkpoint_dir
+            )
+        self.rejoins += 1
+        self.start()
+
+    def stop(self) -> None:
+        self._halt_renewal()
+        if self.state == "running":
+            self.registry.retire(self.host_id)
+        self.state = "stopped"
+
+
+class HostSupervisor:
+    """This host's membership agent — Sebulba's ``cluster=`` mount.
+
+    Owns three things:
+
+      * **self-preservation**: announces this host's lease at ``start``
+        and renews it from a daemon heartbeat thread every ``ttl / 3``
+        (the host-tier analogue of ``ActorHandle.beat``);
+      * **chaos**: seeded host-level FaultPlan events
+        (``host_crash`` / ``host_preempt`` / ``host_rejoin``) fire on
+        the in-process :class:`SimulatedPeerHost` fleet at their
+        scheduled *learner steps*, driven by ``poll(step)`` — the
+        host-tier mirror of PR 7's per-slot actor injectors;
+      * **observation**: ``poll`` syncs the registry and, when the
+        membership epoch bumped, returns the new :class:`Membership`
+        (otherwise ``None``) while accounting ``hosts_joined`` /
+        ``hosts_lost`` / ``reshards`` — the counters the unified result
+        schema reports.
+
+    ``poll`` is learner-driven like ``ActorSupervisor.poll``: no extra
+    monitor thread beyond the lease heartbeat, and the learner reacts to
+    a returned membership by republishing params and resharding replay.
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        host_id: str = "host0",
+        *,
+        ttl: float = 2.0,
+        peers: tuple[str, ...] = (),
+        fault_plan=None,
+        checkpoint_dir: str | None = None,
+    ):
+        self.registry = HostRegistry(directory, ttl=ttl)
+        self.host_id = host_id
+        self.peers = {
+            pid: SimulatedPeerHost(
+                self.registry, pid, checkpoint_dir=checkpoint_dir
+            )
+            for pid in peers
+        }
+        if host_id in self.peers:
+            raise ValueError(
+                f"host id {host_id!r} cannot also be a simulated peer"
+            )
+        self._injector = (
+            fault_plan.host_injector() if fault_plan is not None else None
+        )
+        self.membership: Membership | None = None
+        self.hosts_joined = 0
+        self.hosts_lost = 0
+        self.reshards = 0
+        self._started = False
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    @property
+    def epoch(self) -> int:
+        return self.membership.epoch if self.membership is not None else 0
+
+    @property
+    def world_size(self) -> int:
+        return (
+            self.membership.world_size if self.membership is not None else 0
+        )
+
+    # ----------------------------------------------------------- lifecycle
+
+    def _renew_loop(self) -> None:
+        interval = self.registry.ttl / 3.0
+        while not self._stop.wait(interval):
+            self.registry.renew(self.host_id)
+
+    def start(self) -> Membership:
+        """Announce this host (and its simulated peers), start the lease
+        heartbeat, and record the baseline membership.  Idempotent — the
+        bench workers start their supervisor before handing it to
+        Sebulba, which starts it again."""
+        if self._started:
+            return self.membership
+        self.registry.announce(self.host_id)
+        for peer in self.peers.values():
+            peer.start()
+        self._thread = threading.Thread(
+            target=self._renew_loop, daemon=True,
+            name=f"host-lease-{self.host_id}",
+        )
+        self._thread.start()
+        # the baseline epoch: joins/losses are counted as deltas from
+        # here, so bringing the fleet up is not itself a "reshard"
+        self.membership = self.registry.sync()
+        self._started = True
+        return self.membership
+
+    def poll(self, step: int) -> Membership | None:
+        """One learner-loop tick: fire due host chaos, observe the live
+        set, and return the new :class:`Membership` iff the epoch
+        bumped (the learner's republish-and-reshard signal)."""
+        if not self._started:
+            raise RuntimeError(
+                "HostSupervisor.poll before start(): call start() (or let "
+                "Sebulba.run do it) so the baseline membership exists"
+            )
+        if self._injector is not None:
+            for event in self._injector.due(step):
+                peer = self.peers.get(event.target.partition(":")[2])
+                if peer is None:
+                    continue  # event targets a host this process doesn't own
+                if event.kind == "host_crash":
+                    peer.crash()
+                elif event.kind == "host_preempt":
+                    peer.preempt()
+                elif event.kind == "host_rejoin":
+                    peer.rejoin()
+        current = self.registry.sync()
+        if current.epoch == self.membership.epoch:
+            return None
+        old = set(self.membership.hosts)
+        new = set(current.hosts)
+        self.hosts_lost += len(old - new)
+        self.hosts_joined += len(new - old)
+        self.reshards += 1
+        self.membership = current
+        return current
+
+    def rank(self) -> int:
+        """This host's rank at the current epoch (KeyError when our own
+        lease expired — we are the one being preempted)."""
+        if self.membership is None:
+            raise RuntimeError("HostSupervisor.rank before start()")
+        return self.membership.rank(self.host_id)
+
+    def resumes(self) -> list[tuple[str, str]]:
+        """(host_id, stamp path) for every simulated-peer rejoin that
+        restored from a checkpoint — the chaos tests' proof that a
+        rejoining host resumed from the newest valid stamp."""
+        return [
+            (pid, peer.resumed_from)
+            for pid, peer in self.peers.items()
+            if peer.resumed_from is not None
+        ]
+
+    def stop(self) -> None:
+        """Graceful leave: retire this host's lease (and the simulated
+        peers') instead of leaving them to expire."""
+        if not self._started:
+            return
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=self.registry.ttl)
+            self._thread = None
+        for peer in self.peers.values():
+            peer.stop()
+        self.registry.retire(self.host_id)
+        self._started = False

@@ -1,0 +1,243 @@
+"""Lease-based host membership over a shared filesystem (ISSUE 8).
+
+A TPU pod is many hosts stitched together by fast interconnect; the
+elastic Sebulba treats that fleet the way a cloud scheduler does —
+hosts join, get preempted, and rejoin mid-run, and training must keep
+going.  This module is the membership layer: who is alive *right now*,
+and which membership **epoch** the fleet is in.
+
+Durability idiom (same as ``repro/checkpoint``): every write is an
+atomic ``os.replace`` of a fully-written temp file, so a crashed host
+never leaves a torn lease behind — it simply stops renewing, and its
+lease **expires**.  There is no coordinator and no delete-on-death
+protocol: death is the absence of renewal.
+
+  * **Lease** — ``lease_<host>.json`` holds ``{host_id, expires}``.
+    ``announce``/``renew`` stamp ``expires = now + ttl``; a host whose
+    stamp is in the past is dead.  Preemption, SIGKILL, and a wedged
+    process all look identical: the lease runs out.
+  * **Epoch** — ``epoch.json`` records ``{epoch, hosts}``, the last
+    membership anyone observed.  ``sync`` compares the live set against
+    it and bumps the epoch (atomically) when they differ.  Concurrent
+    bumps are safe: the record content is a pure function of the live
+    set, so racing writers of the *same* change are idempotent, and a
+    lost race over *different* changes is reconciled by the next
+    ``sync`` (the epoch is monotone once membership is stable for a
+    TTL).  Every consumer of the epoch must tolerate one extra bump,
+    never a missed change.
+
+Shard placement is a **pure function of (epoch, world_size)** —
+``shard_assignment``/``owner_rank`` below — so every host computes the
+same post-reshard layout from the epoch number alone, with zero
+coordination messages.  That is the reshard invariant the routing layer
+(repro/distributed/routing.py) and the chaos tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Membership:
+    """One observed membership: the epoch and the sorted live host set.
+
+    ``hosts`` is sorted, so ``rank`` (a host's index) is the same on
+    every host that observes this epoch — ranks are derived, never
+    assigned.
+    """
+
+    epoch: int
+    hosts: tuple[str, ...]
+
+    @property
+    def world_size(self) -> int:
+        return len(self.hosts)
+
+    def rank(self, host_id: str) -> int:
+        """This host's rank at this epoch; raises KeyError for a host
+        that is not (or no longer) a member — the caller is stale and
+        must re-``sync``."""
+        try:
+            return self.hosts.index(host_id)
+        except ValueError:
+            raise KeyError(
+                f"{host_id!r} is not a member at epoch {self.epoch} "
+                f"(live: {list(self.hosts)})"
+            ) from None
+
+
+def _atomic_write_json(path: str, payload: dict) -> None:
+    """Serialize fully, write to a unique same-directory temp file, then
+    ``os.replace`` — the checkpoint durability idiom.  The temp name
+    embeds the pid so concurrent writers (many hosts, one directory)
+    can never collide on the staging file."""
+    directory = os.path.dirname(path) or "."
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        dir=directory, prefix=f".{os.path.basename(path)}-{os.getpid()}-",
+        suffix=".tmp",
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _read_json(path: str) -> dict | None:
+    """None for missing or torn files — a reader racing ``os.replace``
+    never sees a partial write, but a crashed pre-durability writer (or
+    stray debris) must read as absent, not raise."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError, OSError):
+        return None
+
+
+class HostRegistry:
+    """Host membership over one shared directory.
+
+    Every host (and any pure observer, e.g. a bench parent process)
+    opens a ``HostRegistry`` on the same path.  Hosts ``announce`` once
+    and ``renew`` at least every ``ttl / 3``; anyone may ``sync`` to
+    observe the live set and advance the epoch record.
+    """
+
+    def __init__(self, directory: str, *, ttl: float = 2.0):
+        if ttl <= 0:
+            raise ValueError("lease ttl must be > 0")
+        self.directory = directory
+        self.ttl = ttl
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- leases
+
+    def _lease_path(self, host_id: str) -> str:
+        return os.path.join(self.directory, f"lease_{host_id}.json")
+
+    def announce(self, host_id: str, *, now: float | None = None) -> None:
+        """Write (or refresh) ``host_id``'s lease: alive until
+        ``now + ttl`` unless renewed."""
+        if "/" in host_id or host_id != host_id.strip() or not host_id:
+            raise ValueError(f"invalid host id {host_id!r}")
+        now = time.time() if now is None else now
+        _atomic_write_json(
+            self._lease_path(host_id),
+            {"host_id": host_id, "expires": now + self.ttl},
+        )
+
+    renew = announce  # renewal IS re-announcement: one idempotent write
+
+    def expire(self, host_id: str, *, now: float | None = None) -> None:
+        """Fast-forward a lease to already-expired — equivalent to the
+        TTL elapsing without renewal, without waiting wall-clock for it.
+        This is the *simulated crash* surface (SimulatedPeerHost.crash):
+        it keeps seeded chaos runs step-deterministic, and unlike
+        ``retire`` it leaves the (expired) lease file behind exactly as
+        a SIGKILLed host would."""
+        now = time.time() if now is None else now
+        _atomic_write_json(
+            self._lease_path(host_id),
+            {"host_id": host_id, "expires": now - self.ttl},
+        )
+
+    def retire(self, host_id: str) -> None:
+        """Graceful leave: drop the lease now instead of waiting a TTL.
+        Missing leases are fine — retiring twice (or after a crash
+        already expired you) is a no-op."""
+        try:
+            os.unlink(self._lease_path(host_id))
+        except FileNotFoundError:
+            pass
+
+    def live_hosts(self, now: float | None = None) -> tuple[str, ...]:
+        """Sorted ids of every host whose lease has not expired."""
+        now = time.time() if now is None else now
+        live = []
+        for name in os.listdir(self.directory):
+            if not (name.startswith("lease_") and name.endswith(".json")):
+                continue
+            lease = _read_json(os.path.join(self.directory, name))
+            if lease and float(lease.get("expires", 0.0)) > now:
+                live.append(str(lease["host_id"]))
+        return tuple(sorted(live))
+
+    # -------------------------------------------------------------- epoch
+
+    @property
+    def _epoch_path(self) -> str:
+        return os.path.join(self.directory, "epoch.json")
+
+    def current(self) -> Membership:
+        """The last recorded membership (epoch 0, empty, before any
+        ``sync`` has run)."""
+        rec = _read_json(self._epoch_path)
+        if rec is None:
+            return Membership(epoch=0, hosts=())
+        return Membership(
+            epoch=int(rec["epoch"]), hosts=tuple(rec["hosts"])
+        )
+
+    def sync(self, now: float | None = None) -> Membership:
+        """Observe the live set and advance the epoch record if it
+        changed.  Any participant may call this; racing writers of the
+        same change write identical records (idempotent), and a lost
+        race over different changes is reconciled by the next sync."""
+        live = self.live_hosts(now)
+        rec = self.current()
+        if live == rec.hosts:
+            return rec
+        bumped = Membership(epoch=rec.epoch + 1, hosts=live)
+        _atomic_write_json(
+            self._epoch_path,
+            {"epoch": bumped.epoch, "hosts": list(bumped.hosts)},
+        )
+        return bumped
+
+
+# -------------------------------------------------- pure shard placement
+
+
+def stable_hash(seq_id: int | str) -> int:
+    """Process- and host-independent hash for routing keys.  Python's
+    builtin ``hash`` is salted per process — two hosts would route the
+    same sequence to different owners."""
+    digest = hashlib.blake2b(
+        str(seq_id).encode(), digest_size=8
+    ).digest()
+    return int.from_bytes(digest, "big")
+
+
+def shard_assignment(epoch: int, world_size: int) -> tuple[int, ...]:
+    """The epoch's shard layout: a permutation of ``range(world_size)``
+    that is a pure function of ``(epoch, world_size)`` — every host
+    derives the identical layout from the epoch number alone.  The
+    permutation re-deals ownership each epoch so a membership change
+    spreads the resharded load instead of shifting every key by one."""
+    if world_size <= 0:
+        raise ValueError("shard_assignment needs world_size >= 1")
+    rng = np.random.default_rng(np.uint64(epoch) * np.uint64(0x9E3779B9))
+    return tuple(int(r) for r in rng.permutation(world_size))
+
+
+def owner_rank(seq_id: int | str, epoch: int, world_size: int) -> int:
+    """Which member rank owns ``seq_id`` at this epoch.  Pure function
+    of ``(seq_id, epoch, world_size)``: inserts route here, sampling
+    fans from here, and a reshard is just re-evaluating this map under
+    the bumped epoch."""
+    perm = shard_assignment(epoch, world_size)
+    return perm[stable_hash(seq_id) % world_size]

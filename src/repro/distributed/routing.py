@@ -1,0 +1,386 @@
+"""Cross-host replay routing for the elastic Sebulba (ISSUE 8).
+
+``repro/replay/sharded.py`` shards the ring across the learner cores
+*inside* one host; this layer makes the shard set process-count-agnostic
+across **hosts**.  Each live host owns one ring shard
+(``repro.replay.buffer.ReplayState``), and three operations keep the
+global buffer coherent as membership changes:
+
+  * **insert** routes every sequence to its owner's shard by hashing the
+    sequence id through the epoch's pure placement map
+    (``registry.owner_rank``) — two hosts inserting the same id at the
+    same epoch agree on the owner with zero coordination;
+  * **sample** fans the draw across the live shards (per-shard RNG is
+    the caller's key folded with the shard rank, so the whole draw is a
+    pure deterministic function of ``(state, key)`` — bit-exact within
+    an epoch) and re-normalizes the PER statistics over the *surviving*
+    shard set: selection probabilities are scaled by each shard's draw
+    allocation, and importance weights use the global valid-slot count,
+    so losing a host re-weights what remains instead of training on
+    stale per-shard normalizers;
+  * **reshard** is the epoch-bump transition: items on surviving shards
+    are re-routed under the new epoch's placement map in deterministic
+    (sorted-id) order; items that lived only on a dead host are lost and
+    counted.  Running the same reshard on two hosts produces
+    bit-identical shard states — the invariant that lets every host
+    reshard locally instead of electing a coordinator.
+
+Every operation takes the caller's ``epoch`` and raises
+:class:`StaleEpochError` on mismatch — the epoch check is the contract
+that no insert or sample ever crosses a membership change unnoticed
+(the caller reshard-then-retries).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.registry import Membership, owner_rank
+from repro.replay import buffer
+from repro.replay.sharded import (
+    global_importance_weights,
+    renormalize_probs,
+)
+
+PyTree = Any
+
+
+class StaleEpochError(RuntimeError):
+    """The caller's membership epoch is behind (or ahead of) the replay
+    layer's — a membership change happened between the caller's last
+    ``sync`` and this operation.  Reshard to the current membership and
+    retry; silently proceeding would route sequences with the wrong
+    placement map."""
+
+
+class _Shard:
+    """One host's ring: the device ``ReplayState`` plus the host-side
+    sequence-id line (``ids[slot]``) the reshard re-routes by."""
+
+    def __init__(self, state: buffer.ReplayState):
+        self.state = state
+        self.ids = np.full((state.capacity,), -1, np.int64)
+
+    @property
+    def size(self) -> int:
+        return int(buffer.size(self.state))
+
+
+class DistributedReplay:
+    """Host-level routing over per-host replay ring shards.
+
+    This is deliberately a *host-side orchestration* layer: each shard's
+    storage stays a device-resident ``ReplayState`` (on the owning
+    host's learner mesh in a real deployment), and the routing math —
+    ownership, draw allocation, PER re-normalization — is cheap host
+    arithmetic that never touches the donated update paths.
+    """
+
+    def __init__(
+        self,
+        capacity_per_host: int,
+        *,
+        prioritized: bool = False,
+        priority_exponent: float = 0.6,
+    ):
+        if capacity_per_host <= 0:
+            raise ValueError("capacity_per_host must be >= 1")
+        self.capacity_per_host = capacity_per_host
+        self.prioritized = prioritized
+        self.priority_exponent = priority_exponent
+        self._example: PyTree | None = None
+        self._shards: dict[str, _Shard] = {}
+        self.membership: Membership | None = None
+        self.sequences_lost = 0  # cumulative, across every reshard
+
+    # ------------------------------------------------------------- setup
+
+    def attach(self, membership: Membership, example: PyTree) -> None:
+        """Bind to a membership and allocate one empty shard per live
+        host.  ``example`` is any pytree with a leading batch dim (one
+        slot stores one batch element, as in ``replay.buffer.init``)."""
+        if membership.world_size == 0:
+            raise ValueError("cannot attach to an empty membership")
+        self._example = example
+        self.membership = membership
+        self._shards = {
+            host: _Shard(buffer.init(example, self.capacity_per_host))
+            for host in membership.hosts
+        }
+
+    def _require_attached(self) -> Membership:
+        if self.membership is None:
+            raise RuntimeError(
+                "DistributedReplay is not attached: call "
+                "attach(membership, example) first (it allocates the "
+                "per-host shards)"
+            )
+        return self.membership
+
+    def _check_epoch(self, epoch: int, op: str) -> Membership:
+        m = self._require_attached()
+        if epoch != m.epoch:
+            raise StaleEpochError(
+                f"{op} at epoch {epoch} but the replay shards are laid "
+                f"out for epoch {m.epoch}: a membership change happened "
+                "— reshard(new_membership) and retry with the current "
+                "epoch"
+            )
+        return m
+
+    # ------------------------------------------------------------- state
+
+    def size(self) -> int:
+        """Valid slots across the surviving shard set — the global N
+        that PER importance weights normalize against."""
+        self._require_attached()
+        return sum(s.size for s in self._shards.values())
+
+    def sizes(self) -> dict[str, int]:
+        return {host: s.size for host, s in self._shards.items()}
+
+    def _global_max_priority(self) -> float:
+        """Cross-shard max — the distributed analogue of
+        ``buffer.insert``'s ``axis_name`` pmax: fresh sequences enter at
+        the same default priority no matter which host's shard they land
+        on."""
+        mx = 0.0
+        for s in self._shards.values():
+            mx = max(mx, float(jnp.max(s.state.priorities)))
+        return mx if mx > 0.0 else 1.0
+
+    # ------------------------------------------------------------ insert
+
+    def insert(
+        self,
+        seq_ids,
+        batch: PyTree,
+        *,
+        epoch: int,
+        priorities=None,
+    ) -> None:
+        """Route each sequence to its owner's shard and insert locally.
+
+        ``seq_ids`` must be globally unique ints (callers derive them
+        from monotone per-actor counters); ownership is
+        ``owner_rank(id, epoch, world_size)`` — pure, coordination-free.
+        New sequences default to the cross-shard max priority.
+        """
+        m = self._check_epoch(epoch, "insert")
+        seq_ids = np.asarray(seq_ids, np.int64)
+        leaves = jax.tree.leaves(batch)
+        if seq_ids.shape[0] != leaves[0].shape[0]:
+            raise ValueError(
+                f"{seq_ids.shape[0]} sequence ids for a batch of "
+                f"{leaves[0].shape[0]}"
+            )
+        if priorities is None:
+            default_p = self._global_max_priority()
+            priorities = np.full((len(seq_ids),), default_p, np.float32)
+        else:
+            priorities = np.asarray(priorities, np.float32)
+        owners = np.array(
+            [owner_rank(int(i), m.epoch, m.world_size) for i in seq_ids],
+            np.int64,
+        )
+        cap = self.capacity_per_host
+        for rank, host in enumerate(m.hosts):
+            rows = np.nonzero(owners == rank)[0]
+            if rows.size == 0:
+                continue
+            shard = self._shards[host]
+            # chunk to the ring capacity: a reshard into fewer hosts (or
+            # a hot hash bucket) can route more than one ring's worth to
+            # a single shard in one call — ring semantics, the newest
+            # writes survive
+            for lo in range(0, rows.size, cap):
+                part = rows[lo:lo + cap]
+                sub = jax.tree.map(lambda x: x[part], batch)  # noqa: B023
+                slots = np.asarray(
+                    buffer.insert_slots(shard.state, part.size)
+                )
+                shard.state = buffer.insert(
+                    shard.state, sub, priorities[part]
+                )
+                shard.ids[slots] = seq_ids[part]
+
+    # ------------------------------------------------------------ sample
+
+    def _allocation(self, batch_size: int, m: Membership) -> list[tuple]:
+        """Deterministic draw allocation over the NON-EMPTY live shards:
+        even split, remainder to the lowest ranks.  (A freshly joined
+        host's empty shard contributes nothing until inserts reach it —
+        sampling must not stall on it.)"""
+        nonempty = [
+            (host, self._shards[host]) for host in m.hosts
+            if self._shards[host].size > 0
+        ]
+        if not nonempty:
+            raise ValueError(
+                "sample from an empty distributed replay: no shard "
+                "holds a valid slot yet (insert before sampling, or "
+                "gate on size() as Sebulba gates on min_size)"
+            )
+        k = len(nonempty)
+        base, extra = divmod(batch_size, k)
+        return [
+            (host, shard, base + (1 if i < extra else 0))
+            for i, (host, shard) in enumerate(nonempty)
+        ]
+
+    def sample(self, rng: jax.Array, batch_size: int, *, epoch: int):
+        """Fan a ``batch_size`` draw across the live shards.
+
+        Returns ``(batch, parts, probs)``:
+
+          * ``batch`` — the concatenated sampled pytree;
+          * ``parts`` — ``[(host, local_idx), ...]`` in draw order, the
+            routing record ``update_priorities`` consumes;
+          * ``probs`` — **globally re-normalized** per-draw selection
+            probabilities: each shard's local probability scaled by the
+            fraction of the draw allocated to that shard, so the PER
+            correction sees one coherent distribution over the
+            surviving shard set.
+
+        Per-shard keys fold the shard's member rank into the caller's
+        key: the whole draw is a pure function of ``(state, rng)`` —
+        bit-exact within an epoch, re-dealt (deterministically) by the
+        epoch bump.
+        """
+        if batch_size <= 0:
+            raise ValueError("sample batch_size must be >= 1")
+        m = self._check_epoch(epoch, "sample")
+        parts: list[tuple[str, np.ndarray]] = []
+        batches, probs = [], []
+        for host, shard, alloc in self._allocation(batch_size, m):
+            if alloc == 0:
+                continue
+            key = jax.random.fold_in(rng, m.rank(host))
+            sub, idx, p_local = buffer.sample(
+                shard.state, key, alloc,
+                prioritized=self.prioritized,
+                priority_exponent=self.priority_exponent,
+            )
+            batches.append(sub)
+            parts.append((host, np.asarray(idx)))
+            probs.append(
+                renormalize_probs(np.asarray(p_local), alloc, batch_size)
+            )
+        batch = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *batches
+        )
+        return batch, parts, np.concatenate(probs)
+
+    def importance_weights(self, probs, beta: float) -> np.ndarray:
+        """PER bias correction over the surviving shard set:
+        ``(N_global * P(i))^-beta`` normalized by the batch max — the
+        cross-host analogue of ``losses.per_importance_weights`` with
+        the global size and globally re-normalized probabilities."""
+        return global_importance_weights(probs, self.size(), beta)
+
+    def update_priorities(self, parts, new_priorities) -> None:
+        """Write fresh TD priorities back through the routing record
+        ``sample`` returned (same draw order)."""
+        self._require_attached()
+        new_priorities = np.asarray(new_priorities, np.float32)
+        start = 0
+        for host, idx in parts:
+            stop = start + len(idx)
+            self._shards[host].state = buffer.update_priorities(
+                self._shards[host].state, jnp.asarray(idx),
+                new_priorities[start:stop],
+            )
+            start = stop
+        if start != len(new_priorities):
+            raise ValueError(
+                f"{len(new_priorities)} priorities for {start} routed draws"
+            )
+
+    # ----------------------------------------------------------- reshard
+
+    def _valid_items(self, shard: _Shard):
+        """(seq_id, row pytree, priority) for every valid slot, oldest
+        insert order — the ring's first ``size`` slots by cursor
+        arithmetic."""
+        n = shard.size
+        if n == 0:
+            return []
+        cap = shard.state.capacity
+        if int(shard.state.total_added) <= cap:
+            slots = np.arange(n)
+        else:  # wrapped: every slot valid, order irrelevant (sorted later)
+            slots = np.arange(cap)
+        pri = np.asarray(shard.state.priorities)
+        return [
+            (
+                int(shard.ids[s]),
+                jax.tree.map(lambda x: x[int(s)], shard.state.storage),
+                float(pri[int(s)]),
+            )
+            for s in slots
+        ]
+
+    def reshard(self, new_membership: Membership) -> dict:
+        """The membership-epoch transition: rebuild the shard set for
+        ``new_membership`` and re-route every surviving sequence under
+        the new epoch's placement map.
+
+        Deterministic by construction — items are re-inserted in sorted
+        sequence-id order through the pure ownership map, so every host
+        running this reshard from the same surviving shards produces
+        bit-identical new shards (no coordinator, no transfer protocol
+        to agree on).  Sequences whose only copy lived on a lost host
+        are gone; they are counted, not resurrected.
+
+        Returns ``{"migrated", "lost", "hosts_lost", "hosts_joined"}``.
+        """
+        old = self._require_attached()
+        if new_membership.epoch == old.epoch:
+            return {
+                "migrated": 0, "lost": 0,
+                "hosts_lost": (), "hosts_joined": (),
+            }
+        if new_membership.world_size == 0:
+            raise ValueError(
+                "cannot reshard to an empty membership: the last host "
+                "standing keeps its shard (and this host is still "
+                "running, so at least it is alive)"
+            )
+        survivors = [h for h in old.hosts if h in new_membership.hosts]
+        items = []
+        lost = 0
+        for host, shard in self._shards.items():
+            if host in new_membership.hosts:
+                items.extend(self._valid_items(shard))
+            else:
+                lost += shard.size
+        items.sort(key=lambda it: it[0])
+
+        self.attach(new_membership, self._example)
+        if items:
+            ids = [it[0] for it in items]
+            batch = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[it[1] for it in items]
+            )
+            pri = np.array([it[2] for it in items], np.float32)
+            # re-insert routes by the NEW epoch's pure ownership map;
+            # chunk by owner inside insert() as usual
+            self.insert(
+                ids, batch, epoch=new_membership.epoch, priorities=pri
+            )
+        self.sequences_lost += lost
+        return {
+            "migrated": len(items),
+            "lost": lost,
+            "hosts_lost": tuple(
+                h for h in old.hosts if h not in new_membership.hosts
+            ),
+            "hosts_joined": tuple(
+                h for h in new_membership.hosts
+                if h not in old.hosts or h not in survivors
+            ),
+        }

@@ -6,6 +6,7 @@ from repro.fault.plan import (  # noqa: F401
     FaultEvent,
     FaultPlan,
     FaultyHostEnv,
+    HostFaultInjector,
     InjectedCheckpointKill,
     InjectedCrash,
     InjectedEnvError,

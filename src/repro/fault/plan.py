@@ -30,23 +30,41 @@ Fault kinds and their injection points:
                                writer or disk corruption) for the restore
                                path's corruption detection to catch
 
+Host-level kinds (ISSUE 8 — fired by ``HostSupervisor.poll`` on *learner
+update* steps, against the simulated peer fleet):
+
+    host_crash   membership     the peer's lease expires un-renewed
+                                (SIGKILL / hard preemption) — surviving
+                                hosts observe an epoch bump and reshard
+    host_preempt membership     the peer retires its lease immediately
+                                (graceful SIGTERM-with-goodbye)
+    host_rejoin  membership     a lost peer re-announces, restoring from
+                                the newest VALID checkpoint stamp
+
 Step counters are PER SLOT and persist across restarts: an actor slot's
 injector keeps counting through its incarnations, so ``crash @ step 5``
 kills exactly one incarnation and the replacement runs clean — the
-schedule describes the slot's lifetime, not each thread's.
+schedule describes the slot's lifetime, not each thread's.  Host events
+count learner updates instead (membership is observed from the learner
+loop), and their targets are ``"host:<host_id>"``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Iterable
 
 import numpy as np
 
-KINDS = ("crash", "hang", "slow", "env_error", "ckpt_kill", "ckpt_corrupt")
+KINDS = (
+    "crash", "hang", "slow", "env_error", "ckpt_kill", "ckpt_corrupt",
+    "host_crash", "host_preempt", "host_rejoin",
+)
 _ACTOR_KINDS = ("crash", "hang", "slow", "env_error")
 _CKPT_KINDS = ("ckpt_kill", "ckpt_corrupt")
+_HOST_KINDS = ("host_crash", "host_preempt", "host_rejoin")
 
 
 class InjectedFault(RuntimeError):
@@ -89,6 +107,11 @@ class FaultEvent:
             raise ValueError("fault step must be >= 0")
         if self.kind in _CKPT_KINDS and self.target != "checkpoint":
             raise ValueError(f"{self.kind} events target 'checkpoint'")
+        if self.kind in _HOST_KINDS and not self.target.startswith("host:"):
+            raise ValueError(
+                f"{self.kind} events target 'host:<host_id>', "
+                f"got {self.target!r}"
+            )
         if self.span < 1:
             raise ValueError("span must be >= 1")
 
@@ -122,6 +145,10 @@ class FaultPlan:
         env_error_rate: float = 0.0,
         ckpt_kill_every: int = 0,
         warmup: int = 2,
+        peer_hosts: tuple[str, ...] = (),
+        host_crash_rate: float = 0.0,
+        host_preempt_rate: float = 0.0,
+        host_rejoin_after: int = 0,
     ) -> "FaultPlan":
         """Seeded Bernoulli schedule over ``actors`` slots x ``horizon``
         steps.  ``*_rate`` are per-slot-per-step probabilities; draws are
@@ -129,7 +156,16 @@ class FaultPlan:
         function of the arguments.  ``warmup`` protects each slot's first
         steps (a slot that dies before its buffer exists exercises nothing
         interesting).  ``ckpt_kill_every`` > 0 kills every Nth checkpoint
-        write (deterministic, not sampled — checkpoint writes are rare)."""
+        write (deterministic, not sampled — checkpoint writes are rare).
+
+        Host events (ISSUE 8): per peer host in ``peer_hosts``, Bernoulli
+        over *learner update* steps in the same warmup..horizon window —
+        one fault cycle per host (the first crash/preempt wins; a dead
+        host draws no further faults), with an optional scheduled rejoin
+        ``host_rejoin_after`` updates later.  Host draws happen AFTER the
+        actor/checkpoint schedule is fully drawn, so adding hosts to an
+        existing seed leaves the PR 7 actor chaos schedule bit-identical.
+        """
         rng = np.random.default_rng(seed)
         events: list[FaultEvent] = []
         for slot in range(actors):
@@ -148,6 +184,24 @@ class FaultPlan:
         if ckpt_kill_every:
             for n in range(ckpt_kill_every - 1, horizon, ckpt_kill_every):
                 events.append(FaultEvent("ckpt_kill", "checkpoint", n))
+        for host in peer_hosts:
+            for step in range(warmup, horizon):
+                fired = None
+                for kind, rate in (
+                    ("host_crash", host_crash_rate),
+                    ("host_preempt", host_preempt_rate),
+                ):
+                    if rate and rng.random() < rate:
+                        fired = fired or kind  # first kind drawn wins
+                if fired is None:
+                    continue
+                events.append(FaultEvent(fired, f"host:{host}", step))
+                if host_rejoin_after > 0:
+                    events.append(FaultEvent(
+                        "host_rejoin", f"host:{host}",
+                        step + host_rejoin_after,
+                    ))
+                break  # one fault cycle per host
         return FaultPlan(events=tuple(events), seed=seed)
 
     def for_target(self, target: str) -> tuple[FaultEvent, ...]:
@@ -171,6 +225,14 @@ class FaultPlan:
     def checkpoint_injector(self) -> "CheckpointFaultInjector | None":
         events = self.for_target("checkpoint")
         return CheckpointFaultInjector(events) if events else None
+
+    def host_injector(self) -> "HostFaultInjector | None":
+        """Every ``host:*`` event, as one learner-driven injector (the
+        host tier has no per-slot counters — membership is global)."""
+        events = tuple(
+            e for e in self.events if e.target.startswith("host:")
+        )
+        return HostFaultInjector(events) if events else None
 
 
 class ActorFaultInjector:
@@ -224,6 +286,32 @@ class ActorFaultInjector:
                 f"injected hang at step {step} (cancelled by watchdog)"
             )
         raise InjectedFault(f"unhandled fault kind {event.kind}")  # pragma: no cover
+
+
+class HostFaultInjector:
+    """Host-level fault firing, driven by the learner loop.
+
+    Unlike actor injectors (per-slot env-step ``tick`` counters), host
+    events are scheduled on LEARNER UPDATE steps and observed by
+    ``HostSupervisor.poll(step)``: :meth:`due` drains every
+    not-yet-fired event scheduled at or before ``step``, in
+    (step, kind, target) order.  The learner loop is the only place
+    membership is observed, so it is also the only clock host chaos
+    needs.
+    """
+
+    def __init__(self, events: Iterable[FaultEvent]):
+        self._pending = deque(
+            sorted(events, key=lambda e: (e.step, e.kind, e.target))
+        )
+        self.fired: list[FaultEvent] = []
+
+    def due(self, step: int) -> list[FaultEvent]:
+        out = []
+        while self._pending and self._pending[0].step <= step:
+            out.append(self._pending.popleft())
+        self.fired.extend(out)
+        return out
 
 
 class CheckpointFaultInjector:

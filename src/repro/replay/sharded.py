@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
@@ -29,6 +30,30 @@ from repro.replay import buffer
 from repro.replay.buffer import ReplayState
 
 PyTree = Any
+
+
+def renormalize_probs(local_probs, allocation: int, batch_size: int):
+    """One shard's local selection probabilities -> global.
+
+    A draw fanned across shards selects item i with
+    ``P(shard) * P(i | shard)``; when ``allocation`` of the
+    ``batch_size`` draws go to this shard, ``P(shard)`` is the
+    allocation fraction.  Shared by the in-host sharded ring and the
+    cross-host routing layer (repro/distributed/routing.py) so the PER
+    correction sees ONE coherent distribution over whatever shard set
+    currently survives.
+    """
+    return local_probs * (allocation / batch_size)
+
+
+def global_importance_weights(probs, global_size: int, beta: float):
+    """PER bias correction against the GLOBAL buffer: ``(N * P(i))^-beta``
+    normalized by the batch max.  ``global_size`` is the valid-slot
+    count summed over every surviving shard — after a shard is lost,
+    callers re-normalize over what remains rather than training on the
+    stale pre-loss N."""
+    w = (max(global_size, 1) * np.asarray(probs, np.float64)) ** (-beta)
+    return (w / max(float(np.max(w)), 1e-20)).astype(np.float32)
 
 
 class ShardedReplay:

@@ -42,3 +42,15 @@ def test_run_registers_fault_suite():
 
     assert '"fault": _fault_suite' in inspect.getsource(run.main)
     assert "BENCH_fault.json" in inspect.getsource(run._fault_suite)
+
+
+def test_run_registers_elastic_suite():
+    """``--suite elastic`` stays wired to elastic_bench ->
+    BENCH_elastic.json (the ISSUE 8 multi-host scale-out / host-kill
+    recovery suite)."""
+    import inspect
+
+    from benchmarks import run
+
+    assert '"elastic": _elastic_suite' in inspect.getsource(run.main)
+    assert "BENCH_elastic.json" in inspect.getsource(run._elastic_suite)

@@ -41,6 +41,48 @@ def test_restore_missing_key_raises(tmp_path):
         restore(path, {"w": jnp.zeros((3,)), "extra": jnp.zeros((1,))})
 
 
+def test_concurrent_writers_one_directory(tmp_path):
+    """Many hosts checkpoint into ONE shared directory (multi-host
+    elasticity): writers in different processes racing the same stamp
+    must never tear each other — the staging name embeds the pid and
+    basename, and the final write is one atomic ``os.replace``.  After
+    the race every stamp verifies, the contested stamp is exactly one
+    writer's payload, and no staging debris is left behind."""
+    import subprocess
+    import sys
+
+    from repro.checkpoint import verify
+
+    worker = (
+        "import sys, numpy as np, jax.numpy as jnp\n"
+        "from repro.checkpoint import save\n"
+        "d, tag = sys.argv[1], int(sys.argv[2])\n"
+        "tree = {'w': jnp.full((32,), float(tag))}\n"
+        "for _ in range(20):\n"
+        "    save(d + '/ckpt_00000001.npz', tree)   # contested stamp\n"
+        "save(d + f'/ckpt_0000000{tag}.npz', tree)  # private stamp\n"
+    )
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", worker, str(tmp_path), str(tag)],
+            stderr=subprocess.PIPE,
+        )
+        for tag in (2, 3)
+    ]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()[-2000:]
+    for tag in (1, 2, 3):
+        path = str(tmp_path / f"ckpt_0000000{tag}.npz")
+        assert verify(path), f"stamp {tag} failed verification"
+    out = restore(str(tmp_path / "ckpt_00000001.npz"),
+                  {"w": jnp.zeros((32,))})
+    assert float(out["w"][0]) in (2.0, 3.0)  # one write, never a blend
+    assert np.unique(np.asarray(out["w"])).size == 1
+    debris = [n for n in tmp_path.iterdir() if n.suffix == ".tmp"]
+    assert debris == []
+
+
 def test_model_params_roundtrip(tmp_path):
     from repro.configs.base import get_reduced_config
     from repro.models import make_model

@@ -1,0 +1,278 @@
+"""ISSUE 8 unit level — lease membership, pure placement, replay routing.
+
+Registry: leases expire (not announce-order), ``sync`` bumps the epoch
+exactly when the live set changes (idempotent otherwise, convergent
+across racing registries on one directory), and ``expire`` is the
+step-deterministic stand-in for a SIGKILLed host's TTL running out.
+
+Placement: ``stable_hash`` / ``shard_assignment`` / ``owner_rank`` are
+pure functions of ``(seq_id, epoch, world_size)`` — the zero-coordination
+contract every host derives the same layout from.
+
+Routing: ``DistributedReplay`` inserts by owner hash, samples bit-exactly
+within an epoch (same key, same draw), re-normalizes PER statistics over
+the surviving shard set, refuses stale epochs, and reshards
+deterministically (two replicas of the same transition produce
+bit-identical shard states) while counting lost sequences.
+"""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.distributed import (
+    DistributedReplay,
+    HostRegistry,
+    Membership,
+    StaleEpochError,
+    owner_rank,
+    shard_assignment,
+    stable_hash,
+)
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+# --------------------------------------------------------------- registry
+
+
+def test_lease_lifecycle_announce_renew_expire_retire(tmp_path):
+    reg = HostRegistry(str(tmp_path), ttl=10.0)
+    reg.announce("a", now=100.0)
+    reg.announce("b", now=100.0)
+    assert reg.live_hosts(now=105.0) == ("a", "b")
+    # death is the absence of renewal: a's lease runs out, b renews
+    reg.renew("b", now=109.0)
+    assert reg.live_hosts(now=112.0) == ("b",)
+    # expire() fast-forwards the TTL (simulated SIGKILL) but leaves the
+    # lease file behind, exactly as a killed host would
+    reg.expire("b", now=112.0)
+    assert reg.live_hosts(now=112.0) == ()
+    assert (tmp_path / "lease_b.json").exists()
+    # retire() is the graceful goodbye: the lease file is gone
+    reg.announce("a", now=112.0)
+    reg.retire("a")
+    assert reg.live_hosts(now=112.0) == ()
+    assert not (tmp_path / "lease_a.json").exists()
+    reg.retire("a")  # idempotent
+
+
+def test_registry_rejects_bad_ids_and_ttl(tmp_path):
+    with pytest.raises(ValueError):
+        HostRegistry(str(tmp_path), ttl=0.0)
+    reg = HostRegistry(str(tmp_path), ttl=1.0)
+    for bad in ("", " padded ", "a/b"):
+        with pytest.raises(ValueError):
+            reg.announce(bad)
+
+
+def test_sync_bumps_epoch_only_on_membership_change(tmp_path):
+    reg = HostRegistry(str(tmp_path), ttl=10.0)
+    assert reg.current() == Membership(epoch=0, hosts=())
+    reg.announce("b", now=100.0)
+    reg.announce("a", now=100.0)
+    m1 = reg.sync(now=101.0)
+    assert m1.epoch == 1 and m1.hosts == ("a", "b")  # sorted, not insert order
+    # idempotent: nothing changed, no bump
+    assert reg.sync(now=102.0) == m1
+    # a second registry on the same directory observes the same record
+    # (any participant may sync — racing writers of the same change are
+    # idempotent by construction)
+    other = HostRegistry(str(tmp_path), ttl=10.0)
+    assert other.current() == m1
+    reg.expire("a", now=103.0)
+    m2 = other.sync(now=103.0)
+    assert m2 == Membership(epoch=2, hosts=("b",))
+
+
+def test_membership_rank_is_sorted_and_raises_for_strangers():
+    m = Membership(epoch=3, hosts=("alpha", "beta", "gamma"))
+    assert m.world_size == 3
+    assert [m.rank(h) for h in m.hosts] == [0, 1, 2]
+    with pytest.raises(KeyError):
+        m.rank("delta")
+
+
+def test_torn_lease_reads_as_absent(tmp_path):
+    reg = HostRegistry(str(tmp_path), ttl=10.0)
+    (tmp_path / "lease_torn.json").write_text("{not json")
+    reg.announce("ok", now=100.0)
+    assert reg.live_hosts(now=101.0) == ("ok",)
+
+
+# -------------------------------------------------------- pure placement
+
+
+def test_stable_hash_is_process_independent(tmp_path):
+    # Python's builtin hash is salted per process; stable_hash must agree
+    # across interpreters or two hosts route the same id differently
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.distributed import stable_hash; "
+         "print(stable_hash(42), stable_hash('seq-7'))"],
+        capture_output=True, text=True, check=True,
+    )
+    child = tuple(int(x) for x in out.stdout.split())
+    assert child == (stable_hash(42), stable_hash("seq-7"))
+
+
+def test_shard_assignment_is_pure_and_a_permutation():
+    for epoch in (0, 1, 7, 123):
+        for n in (1, 2, 5):
+            perm = shard_assignment(epoch, n)
+            assert perm == shard_assignment(epoch, n)  # pure
+            assert sorted(perm) == list(range(n))
+    with pytest.raises(ValueError):
+        shard_assignment(1, 0)
+
+
+def test_owner_rank_in_range_and_epoch_redeals():
+    owners_e1 = [owner_rank(i, 1, 4) for i in range(256)]
+    assert all(0 <= o < 4 for o in owners_e1)
+    assert owners_e1 == [owner_rank(i, 1, 4) for i in range(256)]
+    # the epoch bump re-deals ownership (spreads reshard load) — at
+    # least some keys must move between epochs
+    owners_e2 = [owner_rank(i, 2, 4) for i in range(256)]
+    assert owners_e1 != owners_e2
+
+
+# ---------------------------------------------------------------- routing
+
+
+def _attached(hosts=("a", "b", "c"), epoch=1, cap=8, **kw):
+    rep = DistributedReplay(cap, **kw)
+    rep.attach(Membership(epoch=epoch, hosts=tuple(hosts)),
+               {"x": jnp.zeros((1, 2), jnp.float32)})
+    return rep
+
+
+def _batch(ids):
+    ids = np.asarray(ids, np.int64)
+    return ids, {"x": jnp.stack([jnp.full((2,), float(i)) for i in ids])}
+
+
+def test_insert_routes_by_owner_and_sample_is_bit_exact():
+    rep = _attached(cap=16)  # the hot hash bucket holds 14 of 24 ids
+    ids, batch = _batch(range(24))
+    rep.insert(ids, batch, epoch=1)
+    assert rep.size() == 24
+    # per-shard occupancy matches the pure ownership map
+    m = rep.membership
+    want = {h: 0 for h in m.hosts}
+    for i in ids:
+        want[m.hosts[owner_rank(int(i), 1, 3)]] += 1
+    assert rep.sizes() == want
+    # bit-exact within an epoch: the same key draws the same batch
+    key = jax.random.key(0)
+    b1, parts1, p1 = rep.sample(key, 9, epoch=1)
+    b2, parts2, p2 = rep.sample(key, 9, epoch=1)
+    np.testing.assert_array_equal(np.asarray(b1["x"]), np.asarray(b2["x"]))
+    np.testing.assert_array_equal(p1, p2)
+    assert [(h, i.tolist()) for h, i in parts1] == \
+           [(h, i.tolist()) for h, i in parts2]
+    assert b1["x"].shape == (9, 2) and p1.shape == (9,)
+
+
+def test_stale_epoch_raises_on_insert_and_sample():
+    rep = _attached(epoch=2)
+    ids, batch = _batch(range(6))
+    with pytest.raises(StaleEpochError):
+        rep.insert(ids, batch, epoch=1)
+    rep.insert(ids, batch, epoch=2)
+    with pytest.raises(StaleEpochError):
+        rep.sample(jax.random.key(0), 3, epoch=3)
+
+
+def test_oversized_insert_chunks_to_ring_capacity():
+    # a single host must absorb many rings' worth in one call (the
+    # reshard-into-fewer-hosts path): ring semantics, newest survive
+    rep = _attached(hosts=("only",), cap=4)
+    ids, batch = _batch(range(11))
+    rep.insert(ids, batch, epoch=1)
+    assert rep.size() == 4
+    shard = rep._shards["only"]
+    assert sorted(shard.ids.tolist()) == [7, 8, 9, 10]
+
+
+def test_sample_before_insert_and_empty_attach_raise():
+    rep = DistributedReplay(8)
+    with pytest.raises(ValueError):
+        rep.attach(Membership(epoch=1, hosts=()), {"x": jnp.zeros((1,))})
+    with pytest.raises(RuntimeError):
+        rep.size()  # not attached
+    rep = _attached()
+    with pytest.raises(ValueError):
+        rep.sample(jax.random.key(0), 4, epoch=1)
+
+
+def test_per_probs_renormalize_over_surviving_shards():
+    rep = _attached(hosts=("a", "b"), epoch=1, cap=16, prioritized=True)
+    ids, batch = _batch(range(16))
+    rep.insert(ids, batch, epoch=1)
+    _, parts, probs = rep.sample(jax.random.key(1), 8, epoch=1)
+    # each shard got half the draw, so its local probabilities are scaled
+    # by alloc/batch = 1/2 — the global distribution a PER correction
+    # can trust: every draw's probability is in (0, 1/2]
+    assert np.all(probs > 0.0) and np.all(probs <= 0.5 + 1e-6)
+    w = rep.importance_weights(probs, beta=0.4)
+    assert w.shape == (8,) and w.dtype == np.float32
+    assert np.isclose(w.max(), 1.0)  # normalized by the batch max
+    # priority writeback round-trips through the routing record
+    rep.update_priorities(parts, np.linspace(0.1, 1.0, 8))
+    with pytest.raises(ValueError):
+        rep.update_priorities(parts, np.ones((10,), np.float32))
+
+
+def test_reshard_is_deterministic_and_counts_losses():
+    def build():
+        rep = _attached(hosts=("a", "b", "c"), epoch=1, cap=16)
+        ids, batch = _batch(range(18))
+        rep.insert(ids, batch, epoch=1)
+        return rep
+
+    lost_host = "a"
+    survivors = Membership(epoch=2, hosts=("b", "c"))
+    r1, r2 = build(), build()
+    on_lost = r1.sizes()[lost_host]
+    out1 = r1.reshard(survivors)
+    out2 = r2.reshard(survivors)
+    assert out1 == out2
+    assert out1["lost"] == on_lost and on_lost > 0
+    assert out1["hosts_lost"] == (lost_host,)
+    assert out1["hosts_joined"] == ()
+    assert out1["migrated"] == 18 - on_lost
+    assert r1.sequences_lost == on_lost
+    # bit-identical shard states on both replicas — the no-coordinator
+    # invariant: every host reshards locally and agrees
+    for host in survivors.hosts:
+        s1, s2 = r1._shards[host], r2._shards[host]
+        np.testing.assert_array_equal(s1.ids, s2.ids)
+        np.testing.assert_array_equal(
+            np.asarray(s1.state.storage["x"]),
+            np.asarray(s2.state.storage["x"]),
+        )
+    # and the new layout matches the NEW epoch's pure ownership map
+    for host, shard in r1._shards.items():
+        for sid in shard.ids[shard.ids >= 0]:
+            assert survivors.hosts[owner_rank(int(sid), 2, 2)] == host
+    # post-reshard operation continues at the new epoch only
+    with pytest.raises(StaleEpochError):
+        r1.sample(jax.random.key(0), 4, epoch=1)
+    b, _, _ = r1.sample(jax.random.key(0), 4, epoch=2)
+    assert b["x"].shape == (4, 2)
+
+
+def test_reshard_same_epoch_is_a_noop_and_join_is_counted():
+    rep = _attached(hosts=("a", "b"), epoch=1, cap=8)
+    ids, batch = _batch(range(8))
+    rep.insert(ids, batch, epoch=1)
+    assert rep.reshard(rep.membership)["migrated"] == 0
+    out = rep.reshard(Membership(epoch=2, hosts=("a", "b", "d")))
+    assert out["hosts_joined"] == ("d",)
+    assert out["lost"] == 0 and out["migrated"] == 8
+    assert rep.size() == 8
+    with pytest.raises(ValueError):
+        rep.reshard(Membership(epoch=3, hosts=()))

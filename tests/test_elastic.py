@@ -1,0 +1,249 @@
+"""ISSUE 8 acceptance — host membership chaos, rejoin-resume, host-tier
+supervision wired into Sebulba.
+
+Unit level: ``HostSupervisor`` lifecycle (idempotent start, poll-before-
+start, peer-id collisions), ``SimulatedPeerHost`` crash/preempt/rejoin
+driving real lease files, rejoin restoring from the newest VALID
+checkpoint stamp (a torn newest stamp is skipped), and the seeded
+host-level ``FaultPlan`` draws (deterministic schedules, actor draws
+untouched by the host extension, target validation).
+
+Integration level (THE chaos proof): a tiny Sebulba mounted with a
+``cluster=`` HostSupervisor whose FaultPlan kills a peer host mid-run
+and rejoins it later — ``fit`` completes with nonzero ``hosts_lost`` /
+``reshards``, the rejoined peer records its resume stamp, and the
+result carries the membership epoch.
+
+Multi-process level (slow tier): a REAL subprocess member is SIGKILLed
+and its death is detected by lease expiry alone — the detection path
+the elastic bench times.
+"""
+
+import os
+import signal
+import time
+
+import pytest
+
+from repro.distributed import (
+    HostRegistry,
+    HostSupervisor,
+    SimulatedPeerHost,
+)
+from repro.fault import FaultEvent, FaultPlan
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+# ------------------------------------------------------------------ units
+
+
+def test_supervisor_lifecycle_and_validation(tmp_path):
+    sup = HostSupervisor(str(tmp_path), "host0", ttl=5.0)
+    with pytest.raises(RuntimeError):
+        sup.poll(0)  # no baseline membership before start
+    m = sup.start()
+    assert m.hosts == ("host0",) and sup.epoch == m.epoch
+    assert sup.start() is m  # idempotent (Sebulba.run starts it again)
+    assert sup.poll(0) is None  # stable membership: no bump
+    assert sup.rank() == 0 and sup.world_size == 1
+    sup.stop()
+    with pytest.raises(ValueError):
+        HostSupervisor(str(tmp_path), "host0", peers=("host0",))
+
+
+def test_peer_crash_and_rejoin_bump_epochs(tmp_path):
+    sup = HostSupervisor(str(tmp_path), "host0", ttl=5.0, peers=("p0",))
+    base = sup.start()
+    assert base.hosts == ("host0", "p0")
+    try:
+        sup.peers["p0"].crash()
+        m = sup.poll(1)
+        assert m is not None and m.hosts == ("host0",)
+        assert (sup.hosts_lost, sup.hosts_joined, sup.reshards) == (1, 0, 1)
+        assert sup.poll(2) is None  # loss observed once, not re-counted
+        sup.peers["p0"].rejoin()
+        m = sup.poll(3)
+        assert m is not None and m.hosts == ("host0", "p0")
+        assert (sup.hosts_lost, sup.hosts_joined, sup.reshards) == (1, 1, 2)
+        assert m.epoch == base.epoch + 2
+    finally:
+        sup.stop()
+
+
+def test_rejoin_restores_from_newest_valid_stamp(tmp_path):
+    """The PR 7 auto-resume contract as a membership event: the rejoining
+    host skips a torn newest stamp and records the newest VALID one."""
+    from repro.checkpoint import save
+
+    ckpt = tmp_path / "ckpts"
+    ckpt.mkdir()
+    save(str(ckpt / "ckpt_00000001.npz"), {"w": jnp.zeros((2,))})
+    save(str(ckpt / "ckpt_00000002.npz"), {"w": jnp.ones((2,))})
+    (ckpt / "ckpt_00000003.npz").write_bytes(b"torn mid-preemption")
+    reg = HostRegistry(str(tmp_path / "reg"), ttl=5.0)
+    peer = SimulatedPeerHost(reg, "p0", checkpoint_dir=str(ckpt))
+    peer.start()
+    try:
+        peer.crash()
+        assert reg.live_hosts() == ()
+        peer.rejoin()
+        assert peer.rejoins == 1 and peer.state == "running"
+        assert peer.resumed_from == str(ckpt / "ckpt_00000002.npz")
+        assert reg.live_hosts() == ("p0",)
+    finally:
+        peer.stop()
+
+
+def test_preempt_retires_lease_but_crash_leaves_debris(tmp_path):
+    reg = HostRegistry(str(tmp_path), ttl=5.0)
+    for host, fault, debris in (("a", "crash", True),
+                                ("b", "preempt", False)):
+        peer = SimulatedPeerHost(reg, host)
+        peer.start()
+        getattr(peer, fault)()
+        assert host not in reg.live_hosts()
+        assert (tmp_path / f"lease_{host}.json").exists() is debris
+        peer.stop()
+
+
+def test_host_fault_plan_draws_are_seeded_and_validated():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="host_crash", target="actor:0", step=1)
+    kw = dict(actors=2, horizon=40, crash_rate=0.05,
+              peer_hosts=("p0", "p1"), host_crash_rate=0.1,
+              host_rejoin_after=10)
+    p1, p2 = FaultPlan.random(7, **kw), FaultPlan.random(7, **kw)
+    assert p1.events == p2.events  # same seed, same schedule
+    host_events = [e for e in p1.events if e.kind.startswith("host_")]
+    assert host_events, "expected host draws at these rates"
+    assert all(e.target.startswith("host:") for e in host_events)
+    # one fault cycle per host: at most one crash/preempt per peer, each
+    # rejoin exactly host_rejoin_after later
+    for pid in ("p0", "p1"):
+        mine = [e for e in host_events if e.target == f"host:{pid}"]
+        faults = [e for e in mine if e.kind != "host_rejoin"]
+        rejoins = [e for e in mine if e.kind == "host_rejoin"]
+        assert len(faults) <= 1
+        if rejoins:
+            assert rejoins[0].step == faults[0].step + 10
+    # the host extension must not perturb the PR 7 actor schedules
+    base = FaultPlan.random(7, actors=2, horizon=40, crash_rate=0.05)
+    assert [e for e in p1.events if not e.kind.startswith("host_")] == \
+           list(base.events)
+    # the injector drains due events in step order
+    inj = p1.host_injector()
+    drained = inj.due(10_000)
+    assert drained == sorted(drained, key=lambda e: e.step)
+    assert inj.due(10_000) == []
+
+
+# ------------------------------------------------------------ integration
+
+
+def _cluster_sebulba(tmp, plan, peers, ckpt_dir=None, **cfg_kwargs):
+    from repro import optim
+    from repro.agents import BatchedMLPActorCritic
+    from repro.core.sebulba import Sebulba, SebulbaConfig
+    from repro.envs import BatchedHostEnv, HostBandit
+
+    cfg = dict(
+        num_actor_cores=1, threads_per_actor_core=2, actor_batch_size=4,
+        trajectory_length=2, queue_capacity=2,
+        max_restarts=2, restart_backoff=0.01,
+    )
+    cfg.update(cfg_kwargs)
+    # generous ttl: crash/preempt/rejoin are explicit step-scheduled
+    # events (expire() fast-forwards, retire() deletes), so detection
+    # never waits on the ttl — but a tight one would let a starved renew
+    # thread on a loaded 1-cpu CI box expire the trainer's OWN lease and
+    # inflate the counters with spurious lost/rejoined transitions
+    sup = HostSupervisor(
+        os.path.join(tmp, "registry"), "host0", ttl=10.0, peers=peers,
+        fault_plan=plan, checkpoint_dir=ckpt_dir,
+    )
+    seb = Sebulba(
+        env_factory=lambda seed: HostBandit(seed=seed),
+        make_batched_env=lambda f, n: BatchedHostEnv(f, n),
+        network=BatchedMLPActorCritic(4, hidden=(16,)),
+        optimizer=optim.sgd(1e-3),
+        config=SebulbaConfig(**cfg),
+        cluster=sup,
+    )
+    return seb, sup
+
+
+def test_host_chaos_fit_completes_with_reshard_accounting(tmp_path):
+    """THE ISSUE 8 chaos proof: a seeded FaultPlan crashes a peer host
+    mid-run (and rejoins it later); fit completes, the result reports
+    nonzero hosts_lost/reshards, the epoch advanced, and the rejoined
+    peer resumed from the newest valid stamp."""
+    from repro.checkpoint import save
+
+    ckpt = tmp_path / "ckpts"
+    ckpt.mkdir()
+    save(str(ckpt / "ckpt_00000005.npz"), {"w": jnp.zeros((2,))})
+    plan = FaultPlan(events=(
+        FaultEvent(kind="host_crash", target="host:p0", step=4),
+        FaultEvent(kind="host_rejoin", target="host:p0", step=10),
+        FaultEvent(kind="host_preempt", target="host:p1", step=16),
+    ), seed=0)
+    seb, sup = _cluster_sebulba(
+        str(tmp_path), plan, peers=("p0", "p1"), ckpt_dir=str(ckpt)
+    )
+    res = seb.fit(jax.random.key(0), total_frames=12000)
+    assert res["frames"] >= 12000 and res["updates"] > 20
+    assert res["hosts_lost"] == 2     # p0 crash + p1 preempt
+    assert res["hosts_joined"] == 1   # p0 rejoin
+    assert res["reshards"] == 3       # one epoch bump per transition
+    assert res["epoch"] == 4  # baseline sync + one bump per transition
+    assert seb.stale_epoch_trajs >= 0
+    # the rejoin restored from the (only, hence newest valid) stamp
+    assert sup.resumes() == [("p0", str(ckpt / "ckpt_00000005.npz"))]
+    # graceful exit retired every lease: nothing left to expire
+    assert sup.registry.live_hosts() == ()
+
+
+def test_cluster_without_faults_adds_no_counters(tmp_path):
+    seb, _ = _cluster_sebulba(str(tmp_path), None, peers=())
+    res = seb.fit(jax.random.key(0), total_frames=4000)
+    assert res["frames"] >= 4000
+    assert res["hosts_lost"] == 0 and res["hosts_joined"] == 0
+    assert res["reshards"] == 0 and seb.stale_epoch_trajs == 0
+    assert res["epoch"] >= 1  # the baseline sync recorded host0
+
+
+# ---------------------------------------------------------- multi-process
+
+
+@pytest.mark.slow
+def test_subprocess_member_sigkill_detected_by_lease_expiry(tmp_path):
+    """A real subprocess member is SIGKILLed (no goodbye): the only
+    death signal is its lease running out — the detection path the
+    elastic bench times and a real preempted worker exercises."""
+    from benchmarks.elastic_bench import _spawn, _wait_for
+
+    ttl = 0.5
+    registry = str(tmp_path / "reg")
+    member = _spawn("member", registry, "m0", ttl=ttl)
+    reg = HostRegistry(registry, ttl=ttl)
+    try:
+        _wait_for(lambda: "m0" in reg.live_hosts(), timeout=30.0,
+                  what="the member's first lease")
+        base = reg.sync()
+        assert "m0" in base.hosts
+        member.send_signal(signal.SIGKILL)
+        t0 = time.monotonic()
+        _wait_for(lambda: "m0" not in reg.sync().hosts, timeout=30.0,
+                  what="the lease to expire after SIGKILL")
+        latency = time.monotonic() - t0
+        after = reg.current()
+        assert after.epoch == base.epoch + 1
+        # expiry-bound detection: roughly one TTL, never instant-but-
+        # flaky (generous ceiling for a loaded CI box)
+        assert latency < 20.0
+        assert (tmp_path / "reg" / "lease_m0.json").exists()  # debris stays
+    finally:
+        member.kill()
+        member.wait(timeout=10.0)

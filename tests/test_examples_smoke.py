@@ -37,6 +37,10 @@ _RL_RUNS = {
     "sebulba_impala_chaos": ("sebulba_impala",
                              ["--frames", "400", "--actor-batch", "6",
                               "--trajectory", "5", "--chaos", "7"]),
+    "sebulba_impala_elastic_chaos": ("sebulba_impala",
+                                     ["--frames", "400", "--actor-batch",
+                                      "6", "--trajectory", "5", "--hosts",
+                                      "3", "--chaos", "7"]),
     "sebulba_r2d2": ("sebulba_r2d2",
                      ["--frames", "400", "--actor-batch", "6",
                       "--trajectory", "6", "--burn-in", "1",
@@ -85,3 +89,7 @@ def test_rl_example_runs_end_to_end(label):
         # the chaos run must survive its schedule and report supervision
         # counters (the example prints them only when --chaos is set)
         assert "chaos:" in proc.stdout, proc.stdout[-2000:]
+    if "--hosts" in argv:
+        # the elastic run must survive its host schedule and report the
+        # membership counters (epoch / lost / joined / reshards)
+        assert "hosts:" in proc.stdout, proc.stdout[-2000:]

@@ -241,7 +241,9 @@ def test_queue_put_retries_on_full_and_counts_blocked():
     assert handle.put_blocked >= 1
     assert seb._queue.get() == "occupying"  # learner frees a slot
     assert done.wait(timeout=5.0)
-    assert result["ok"] and seb._queue.get() == "shards"
+    # puts are tagged with the membership epoch at put time (multi-host
+    # elasticity: the learner drops trajectories that straddle a reshard)
+    assert result["ok"] and seb._queue.get() == (seb._epoch, "shards")
     assert handle.traj_dropped == 0
     assert handle.first_put_at is not None  # recovery-latency stamp landed
 

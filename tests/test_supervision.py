@@ -190,6 +190,43 @@ def test_join_reports_leaked_threads():
     wedge.set()  # let the daemon thread die before the test exits
 
 
+def test_recovery_latencies_drop_incomplete_pairs():
+    """A latency is only ever adjacent death -> adjacent first put.
+    A dead incarnation with no replacement measures nothing, and a
+    replacement cancelled before its own first put neither completes the
+    previous pairing nor baselines the next — incomplete pairs are
+    DROPPED, never mis-paired across the gap."""
+    from repro.core.supervision import ActorHandle
+
+    sup = ActorSupervisor(
+        slots=[(0, 1), (1, 2)], spawn=lambda h: None,
+        stop=threading.Event(),
+    )
+
+    def handle(slot, inc, put_at=None, died_at=None):
+        h = ActorHandle(slot, inc, core_id=0, seed=0)
+        h.first_put_at, h.died_at = put_at, died_at
+        return h
+
+    # slot 0: produced, died, replacement cancelled mid-compile (no put,
+    # then died), third incarnation produced.  Pairing h0's death with
+    # h2's put would fabricate a latency spanning the dead middle
+    # incarnation — both adjacent pairs are incomplete, so: nothing.
+    sup._slots[0].handles = [
+        handle(0, 0, put_at=1.0, died_at=2.0),
+        handle(0, 1, put_at=None, died_at=3.0),
+        handle(0, 2, put_at=4.5),
+    ]
+    # slot 1: produced then died with no replacement (quarantined) —
+    # a dead-end incarnation measures nothing either
+    sup._slots[1].handles = [handle(1, 0, put_at=1.0, died_at=6.0)]
+    assert sup.recovery_latencies() == []
+
+    # the complete adjacent pair DOES measure (and only it)
+    sup._slots[1].handles.append(handle(1, 1, put_at=6.25))
+    assert sup.recovery_latencies() == [0.25]
+
+
 def test_supervisor_validates_config():
     stop = threading.Event()
     for bad in (
