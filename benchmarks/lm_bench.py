@@ -1,0 +1,184 @@
+"""LM actor decode: fused KV-cache carry vs naive full-forward re-scoring.
+
+The ISSUE 9 tentpole moves autoregressive generation into Sebulba's fused
+act-step with the KV cache as the declared carry.  The alternative an LM
+actor without a carry protocol is stuck with is re-scoring: every emitted
+token re-runs the full causal forward over the context window and reads
+the last position's logits.  This bench measures both at the actor's
+shapes:
+
+  * ``fused`` — ``model.decode_step`` behind the ``flash_decode`` wrapper,
+    one token per step, KV cache + position threaded exactly like the
+    ``LMPolicyAgent`` carry (sampling included, one donated jit per step);
+  * ``naive`` — a full ``model.forward`` over the fixed ``SEQ_LEN``
+    context per emitted token (the window stays fixed-shape so the naive
+    path compiles ONCE; a growing prefix would retrace per length and
+    unfairly charge compile time to it).
+
+``benchmarks/run.py --suite lm`` writes ``BENCH_lm.json``:
+
+    {"batch_<B>": {
+         "fused_us_per_token", "fused_tokens_per_s",
+         "naive_us_per_token", "naive_tokens_per_s",
+         "speedup", "batch", "seq_len"},
+     "model": {...}}
+
+(``tokens_per_s`` = batch * 1e6 / us_per_token; ``speedup`` = naive us /
+fused us.  Acceptance floor: >= 2x at B = 32 on this container.)
+
+Honest timing: both paths warm up (jit compile never lands in a
+measurement), each timed window is best-of-3, and both windows end on a
+``block_until_ready``.  The model is a small dense GQA transformer (the
+zoo's qwen2 template) so decode math, not host glue, dominates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._timing import csv_line
+
+BATCHES = (4, 32)
+SEQ_LEN = 128
+MEASURE_TOKENS = 16
+
+
+def _model():
+    from repro.configs.base import get_config
+    from repro.models.model import make_model
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"), num_layers=4, d_model=256, num_heads=4,
+        num_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=4096,
+        remat="none",
+    )
+    return cfg, make_model(cfg, unroll=True)
+
+
+def bench_fused(model, params, batch: int,
+                tokens: int = MEASURE_TOKENS) -> float:
+    """-> best-of-3 seconds for ``tokens`` decode-carry act steps."""
+
+    def act(params, carry, obs, rng):
+        rng, sub = jax.random.split(rng)
+        logits, _, cache = model.decode_step(
+            params, carry["cache"], obs.reshape(-1, 1), jnp.max(carry["pos"])
+        )
+        actions = jax.random.categorical(sub, logits[:, 0].astype(jnp.float32))
+        return {"cache": cache, "pos": carry["pos"] + 1}, actions, rng
+
+    step = jax.jit(act, donate_argnums=(1,))
+
+    def window() -> float:
+        cache, _ = model.init_cache(batch, SEQ_LEN)
+        carry = {"cache": cache, "pos": jnp.zeros((batch,), jnp.int32)}
+        obs = jnp.zeros((batch,), jnp.int32)
+        rng = jax.random.key(0)
+        t0 = time.perf_counter()
+        for _ in range(tokens):
+            carry, obs, rng = step(params, carry, obs, rng)
+        jax.block_until_ready(obs)
+        return time.perf_counter() - t0
+
+    window()  # warm: jit compile
+    return min(window() for _ in range(3))
+
+
+def bench_naive(model, params, batch: int,
+                tokens: int = MEASURE_TOKENS) -> float:
+    """-> best-of-3 seconds for ``tokens`` full-forward re-scoring steps."""
+
+    def rescore(params, context, pos, rng):
+        rng, sub = jax.random.split(rng)
+        logits, _, _ = model.forward(params, {"tokens": context})
+        last = jnp.take_along_axis(
+            logits, pos[None, None, None].repeat(batch, 0), axis=1
+        )[:, 0].astype(jnp.float32)
+        actions = jax.random.categorical(sub, last)
+        context = jax.vmap(
+            lambda c, a: c.at[pos + 1].set(a)
+        )(context, actions)
+        return context, pos + 1, rng
+
+    step = jax.jit(rescore, donate_argnums=(1,))
+
+    def window() -> float:
+        context = jnp.zeros((batch, SEQ_LEN), jnp.int32)
+        pos = jnp.int32(0)
+        rng = jax.random.key(0)
+        t0 = time.perf_counter()
+        for _ in range(tokens):
+            context, pos, rng = step(params, context, pos, rng)
+        jax.block_until_ready(context)
+        return time.perf_counter() - t0
+
+    window()  # warm: jit compile
+    return min(window() for _ in range(3))
+
+
+def bench_batch(model, params, batch: int,
+                tokens: int = MEASURE_TOKENS) -> dict:
+    out = {"batch": batch, "seq_len": SEQ_LEN}
+    for name, fn in (("fused", bench_fused), ("naive", bench_naive)):
+        us = fn(model, params, batch, tokens) / tokens * 1e6
+        out[f"{name}_us_per_token"] = round(us, 1)
+        out[f"{name}_tokens_per_s"] = round(batch * 1e6 / us, 1)
+    out["speedup"] = round(
+        out["naive_us_per_token"] / out["fused_us_per_token"], 2
+    )
+    return out
+
+
+def csv_lines(results: dict) -> list[str]:
+    lines = []
+    for key, r in results.items():
+        if key == "model":
+            continue
+        b = r["batch"]
+        lines.append(csv_line(
+            f"lm_decode_naive_b{b}", r["naive_us_per_token"],
+            f"tok_per_s={r['naive_tokens_per_s']:,}"))
+        lines.append(csv_line(
+            f"lm_decode_fused_b{b}", r["fused_us_per_token"],
+            f"tok_per_s={r['fused_tokens_per_s']:,} "
+            f"speedup={r['speedup']}x"))
+    return lines
+
+
+def main(json_path: str | None = None,
+         tokens: int = MEASURE_TOKENS) -> list[str]:
+    cfg, model = _model()
+    params = model.init(jax.random.key(0))
+    results = {
+        f"batch_{b}": bench_batch(model, params, b, tokens) for b in BATCHES
+    }
+    results["model"] = {
+        "arch": "qwen2 template", "num_layers": cfg.num_layers,
+        "d_model": cfg.d_model, "vocab_size": cfg.vocab_size,
+        "seq_len": SEQ_LEN,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return csv_lines(results)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_lm.json")
+    ap.add_argument("--tokens", type=int, default=MEASURE_TOKENS)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(
+        json_path="BENCH_lm.json" if args.json else None, tokens=args.tokens
+    ):
+        print(line)
+    if args.json:
+        print("wrote BENCH_lm.json")

@@ -159,13 +159,26 @@ def _elastic_suite(lines: list[str]) -> None:
     )
 
 
+def _lm_suite(lines: list[str]) -> None:
+    """--suite lm: actor decode throughput, fused KV-cache carry vs naive
+    full-forward re-scoring at B=4/32 -> BENCH_lm.json (the LM-policy perf
+    trajectory; acceptance floor >= 2x fused at B=32)."""
+    from benchmarks import lm_bench
+
+    _section(
+        "lm decode (fused KV-cache carry vs full-forward re-scoring)",
+        lambda: lm_bench.main(json_path="BENCH_lm.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
     ap.add_argument("--suite",
                     choices=["all", "replay", "sebulba", "learner",
-                             "recurrent", "envs", "fault", "elastic"],
+                             "recurrent", "envs", "fault", "elastic", "lm"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
                          "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
@@ -176,7 +189,9 @@ def main() -> None:
                          "device fleet stepping); 'fault' -> BENCH_fault.json "
                          "only (supervision degradation + recovery latency); "
                          "'elastic' -> BENCH_elastic.json only (multi-host "
-                         "scale-out + host-kill recovery)")
+                         "scale-out + host-kill recovery); 'lm' -> "
+                         "BENCH_lm.json only (fused decode-carry acting vs "
+                         "full-forward re-scoring)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -190,6 +205,7 @@ def main() -> None:
         "envs": _envs_suite,
         "fault": _fault_suite,
         "elastic": _elastic_suite,
+        "lm": _lm_suite,
     }
     if args.suite in suites:
         suites[args.suite](lines)
@@ -221,6 +237,7 @@ def main() -> None:
         _envs_suite(lines)
         _fault_suite(lines)
         _elastic_suite(lines)
+        _lm_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

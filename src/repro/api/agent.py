@@ -150,14 +150,27 @@ def _positional_arity(fn) -> tuple[int, int, bool]:
 def _check_zero_carry(agent, name: str) -> None:
     """Both carry-reset mechanisms (the actor's jnp.where against the
     initial carry, the learner's decay-gate fold) restore ZERO state; a
-    nonzero initial carry would silently diverge them."""
-    for leaf in jax.tree.leaves(agent.initial_carry(1)):
+    nonzero initial carry would silently diverge them.
+
+    The check is on VALUES, not shapes: a carry of any size and structure
+    validates so long as every leaf is zero-valued.  An autoregressive
+    KV-cache pytree with a position counter (repro/agents/lm_policy.py) is
+    the canonical nonzero-shaped, zero-valued carry.
+    """
+    leaves_with_path, _ = jax.tree_util.tree_flatten_with_path(
+        agent.initial_carry(1)
+    )
+    for path, leaf in leaves_with_path:
         if np.any(np.asarray(leaf) != 0):
+            where = jax.tree_util.keystr(path) or "<root>"
             raise ValueError(
-                f"{name}.initial_carry must be all zeros: episode resets "
-                "in the fused actor step and the learner's decay-gate "
-                "reset fold (repro/agents/recurrent.py) both restore zero "
-                "state"
+                f"{name}.initial_carry must be all zeros in every leaf, "
+                f"but leaf {where} has nonzero entries: episode resets in "
+                "the fused actor step and the learner's decay-gate reset "
+                "fold (repro/agents/recurrent.py) both restore zero state. "
+                "Shape and dtype are unconstrained — a zero-valued KV "
+                "cache plus position counter validates fine; only the "
+                "t=0 VALUE must be zero"
             )
 
 

@@ -8,9 +8,11 @@ fixtures (tiny nets, tiny obs) and import lazily, so importing
 ``repro.api`` never drags in the agent zoo.
 
 Each factory returns an ``AgentFixture``: the agent (with its declared
-``AgentSpec``), the observation shape its ``init`` expects, and the number
-of actions — everything a generic harness needs to init params, act, and
-build a synthetic trajectory for the loss contract.
+``AgentSpec``), the observation shape its ``init`` expects, the number of
+actions, and the observation dtype (``None`` means float32; LM agents set
+``jnp.int32`` so the harness feeds token observations) — everything a
+generic harness needs to init params, act, and build a synthetic
+trajectory for the loss contract.
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ class AgentFixture(NamedTuple):
     agent: Any
     obs_shape: tuple[int, ...]
     num_actions: int
+    obs_dtype: Any = None  # None -> float32; integer dtypes = token obs
 
 
 _REGISTRY: dict[str, Callable[[], AgentFixture]] = {}
@@ -124,6 +127,41 @@ def _recurrent_replay_impala() -> AgentFixture:
     return AgentFixture(
         RecurrentReplayImpalaAgent(net, _sebulba_config(burn_in=1)), (4,), 4
     )
+
+
+def _lm_cfg():
+    """A 2-layer toy transformer off the qwen2 template (GQA, no softcap,
+    so decode takes the flash_decode path)."""
+    import dataclasses
+
+    from repro.configs.base import get_config
+
+    return dataclasses.replace(
+        get_config("qwen2-1.5b"), num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=32, remat="none",
+    )
+
+
+@register_agent("lm_policy")
+def _lm_policy() -> AgentFixture:
+    import jax.numpy as jnp
+
+    from repro.agents.lm_policy import LMPolicyAgent
+
+    cfg = _lm_cfg()
+    agent = LMPolicyAgent(cfg, max_seq=8)
+    return AgentFixture(agent, (), cfg.vocab_size, jnp.int32)
+
+
+@register_agent("lm_replay_policy")
+def _lm_replay_policy() -> AgentFixture:
+    import jax.numpy as jnp
+
+    from repro.agents.lm_policy import LMReplayPolicyAgent
+
+    cfg = _lm_cfg()
+    agent = LMReplayPolicyAgent(cfg, max_seq=8)
+    return AgentFixture(agent, (), cfg.vocab_size, jnp.int32)
 
 
 @register_agent("muzero")

@@ -9,4 +9,5 @@ from repro.envs.device_env import (  # noqa: F401
     FleetStats,
     HostDeviceEnv,
 )
+from repro.envs.token_env import TokenEnv  # noqa: F401
 from repro.envs.types import TimeStep  # noqa: F401

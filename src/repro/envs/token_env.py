@@ -1,0 +1,126 @@
+"""Pure-JAX token tasks for LM-policy Sebulba (ISSUE 9).
+
+``TokenEnv`` is a ``repro.api.DeviceEnv`` whose observations are single
+int32 tokens (``obs_shape == ()``) and whose actions are tokens from the
+model's vocabulary — so ``agent.act`` *is* autoregressive generation and
+the whole rollout fuses into the device-fleet actor step.
+
+An episode has two phases of ``prompt_len`` steps each:
+
+  * prompt phase (t < P): the env feeds the prompt one token per step;
+    actions are ignored (teacher forcing), reward is 0;
+  * generation phase (t >= P): the env shows a SEP token once, then the
+    agent's *own previous action* — a true autoregressive feedback loop —
+    and pays dense per-token reward 1.0 for each emitted token matching
+    the target (``copy``: the prompt; ``reverse``: the prompt backwards).
+
+Auto-reset follows the house idiom (repro/api/env.py): the final step of
+an episode returns ``discount == 0`` and an obs that already belongs to
+the next episode (its first prompt token).  Episodes are fixed-length
+(``2 * prompt_len``), so a fleet whose rows all start at t == 0 stays in
+lockstep forever — the invariant LMPolicyAgent's shared decode position
+relies on (see repro/agents/lm_policy.py).
+
+Token layout: 0 = PAD (initial "previous action"), 1 = SEP, data tokens
+drawn from ``[2, 2 + data_vocab)``.  ``data_vocab`` defaults to filling
+the declared vocabulary but can be shrunk so small models learn the task
+quickly while keeping the full-size action space.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.types import TimeStep
+
+PAD = 0
+SEP = 1
+
+
+class TokenEnvState(NamedTuple):
+    prompt: jax.Array  # (prompt_len,) int32 data tokens of this episode
+    t: jax.Array  # () int32 step index within the episode
+    last_action: jax.Array  # () int32 token the agent emitted last step
+    rng: jax.Array
+
+
+class TokenEnv:
+    def __init__(
+        self,
+        vocab_size: int = 64,
+        prompt_len: int = 4,
+        task: str = "copy",
+        data_vocab: int | None = None,
+    ):
+        if task not in ("copy", "reverse"):
+            raise ValueError(
+                f"TokenEnv task must be 'copy' or 'reverse', got {task!r}"
+            )
+        if data_vocab is None:
+            data_vocab = vocab_size - 2
+        if not (1 <= data_vocab <= vocab_size - 2):
+            raise ValueError(
+                f"data_vocab {data_vocab} must fit in [1, vocab_size - 2] "
+                f"(vocab {vocab_size} reserves 0=PAD, 1=SEP)"
+            )
+        self.num_actions = int(vocab_size)
+        self.obs_shape = ()  # scalar int32 token
+        self.prompt_len = int(prompt_len)
+        self.episode_len = 2 * self.prompt_len
+        self.task = task
+        self.data_vocab = int(data_vocab)
+
+    def _draw_prompt(self, rng: jax.Array) -> jax.Array:
+        return jax.random.randint(
+            rng, (self.prompt_len,), SEP + 1, SEP + 1 + self.data_vocab,
+            dtype=jnp.int32,
+        )
+
+    def init(self, rng: jax.Array) -> TokenEnvState:
+        rng, sub = jax.random.split(rng)
+        return TokenEnvState(
+            prompt=self._draw_prompt(sub),
+            t=jnp.int32(0),
+            last_action=jnp.int32(PAD),
+            rng=rng,
+        )
+
+    def observe(self, s: TokenEnvState) -> jax.Array:
+        P = self.prompt_len
+        prompt_tok = s.prompt[jnp.clip(s.t, 0, P - 1)]
+        gen_tok = jnp.where(s.t == P, jnp.int32(SEP), s.last_action)
+        return jnp.where(s.t < P, prompt_tok, gen_tok).astype(jnp.int32)
+
+    def _target(self, prompt: jax.Array, i: jax.Array) -> jax.Array:
+        if self.task == "copy":
+            return prompt[i]
+        return prompt[self.prompt_len - 1 - i]
+
+    def step(self, s: TokenEnvState, action: jax.Array):
+        P, E = self.prompt_len, self.episode_len
+        action = action.astype(jnp.int32)
+        i = jnp.clip(s.t - P, 0, P - 1)
+        hit = (s.t >= P) & (action == self._target(s.prompt, i))
+        reward = hit.astype(jnp.float32)
+        t_next = s.t + 1
+        done = t_next >= E
+        # rng advances every step so the reset branch below never reuses a
+        # key; jnp.where on the key itself would trip typed-key dtypes.
+        rng, sub = jax.random.split(s.rng)
+        fresh_prompt = self._draw_prompt(sub)
+        new_state = TokenEnvState(
+            prompt=jnp.where(done, fresh_prompt, s.prompt),
+            t=jnp.where(done, jnp.int32(0), t_next),
+            last_action=jnp.where(done, jnp.int32(PAD), action),
+            rng=rng,
+        )
+        ts = TimeStep(
+            obs=self.observe(new_state),
+            reward=reward,
+            discount=jnp.where(done, 0.0, 1.0).astype(jnp.float32),
+            first=done,
+        )
+        return new_state, ts

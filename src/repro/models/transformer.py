@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.flash_decode.ops import flash_decode
 from repro.models import attention as attn
 from repro.models import griffin, layers, mamba2, moe as moe_lib
 from repro.param import ParamBuilder
@@ -169,9 +170,16 @@ def attn_sublayer_decode(
         out = griffin.ring_decode_attention(q, kc, vc, pos, window)
     else:
         kc, vc = attn.update_kv_cache(cache["k"], cache["v"], k, v, pos)
-        out = attn.decode_attention(
-            q, kc, vc, pos, window=window, softcap=cfg.attn_logit_softcap
-        )
+        if cfg.attn_logit_softcap:
+            # softcapped logits (gemma3) stay on the jnp oracle — the
+            # Pallas decode kernel has no softcap path
+            out = attn.decode_attention(
+                q, kc, vc, pos, window=window, softcap=cfg.attn_logit_softcap
+            )
+        else:
+            # the decode hot loop: Pallas flash_decode on TPU, its
+            # bit-identical jnp oracle elsewhere (kernels/flash_decode)
+            out = flash_decode(q, kc, vc, pos, window=window)
     return x + attn.output_project(p["attn"], out), {"k": kc, "v": vc}
 
 

@@ -29,17 +29,39 @@ from repro.envs import BatchedHostEnv, Catch, HostBandit
 
 B, T = 4, 6
 
+# LM fixtures trace a real (if toy) transformer through act and loss —
+# jit-heavy enough to stay out of the fast tier with the rest of the LM
+# surface (ISSUE 9 satellite), without losing conformance coverage.
+_PARAMS = [
+    pytest.param(n, marks=pytest.mark.slow) if n.startswith("lm_") else n
+    for n in api.registered_agents()
+]
 
-@pytest.fixture(scope="module", params=api.registered_agents())
+
+@pytest.fixture(scope="module", params=_PARAMS)
 def fixture(request):
     return request.param, api.make_agent(request.param)
 
 
-def _act(agent, obs_shape, batch=B, seed=0):
+def _obs_dtype(fx):
+    return jnp.float32 if fx.obs_dtype is None else fx.obs_dtype
+
+
+def _random_obs(rng, shape, dtype, num_actions):
+    """np.RandomState -> obs array; integer dtypes mean token observations
+    bounded by the vocabulary (= num_actions for LM agents)."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(rng.randint(0, num_actions, shape), dtype)
+    return jnp.asarray(rng.rand(*shape), dtype)
+
+
+def _act(agent, obs_shape, batch=B, seed=0, obs_dtype=jnp.float32,
+         num_actions=4):
     params = agent.init(jax.random.key(seed), obs_shape)
     carry = agent.initial_carry(batch)
-    obs = jax.random.uniform(
-        jax.random.key(seed + 1), (batch,) + obs_shape, jnp.float32
+    obs = _random_obs(
+        np.random.RandomState(seed + 1), (batch,) + obs_shape, obs_dtype,
+        num_actions,
     )
     actions, aux, new_carry = jax.jit(agent.act)(
         params, obs, jax.random.key(seed + 2), carry
@@ -47,7 +69,8 @@ def _act(agent, obs_shape, batch=B, seed=0):
     return params, carry, actions, aux, new_carry
 
 
-def _make_traj(agent, spec, params, obs_shape, num_actions, seed=0):
+def _make_traj(agent, spec, params, obs_shape, num_actions, seed=0,
+               obs_dtype=jnp.float32):
     """Synthetic trajectory matching the agent's declared surface, shaped
     exactly as the actor ring would drain it (extras from act's abstract
     output, init_carry from initial_carry)."""
@@ -58,7 +81,7 @@ def _make_traj(agent, spec, params, obs_shape, num_actions, seed=0):
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
         agent.initial_carry(B),
     )
-    obs_spec = jax.ShapeDtypeStruct((B,) + obs_shape, jnp.float32)
+    obs_spec = jax.ShapeDtypeStruct((B,) + obs_shape, obs_dtype)
     _, aux_spec, _ = jax.eval_shape(
         agent.act, params, obs_spec, jax.random.key(0), carry_spec
     )
@@ -72,14 +95,15 @@ def _make_traj(agent, spec, params, obs_shape, num_actions, seed=0):
         lambda s: jnp.asarray(rng.rand(*s.shape), s.dtype), carry_spec
     )
     return Trajectory(
-        obs=jnp.asarray(rng.rand(B, T, *obs_shape), jnp.float32),
+        obs=_random_obs(rng, (B, T) + obs_shape, obs_dtype, num_actions),
         actions=jnp.asarray(rng.randint(0, num_actions, (B, T)), jnp.int32),
         rewards=jnp.asarray(rng.rand(B, T), jnp.float32),
         discounts=jnp.full((B, T), 0.99, jnp.float32),
         behaviour_logp=jnp.asarray(
             np.log(rng.uniform(0.2, 0.9, (B, T))), jnp.float32
         ),
-        bootstrap_obs=jnp.asarray(rng.rand(B, *obs_shape), jnp.float32),
+        bootstrap_obs=_random_obs(rng, (B,) + obs_shape, obs_dtype,
+                                  num_actions),
         extras=extras,
         init_carry=init_carry,
     )
@@ -92,7 +116,8 @@ def test_registry_covers_the_zoo():
     names = api.registered_agents()
     for expected in ("impala", "actor_critic", "ppo", "muzero",
                      "replay_impala", "recurrent_impala",
-                     "recurrent_replay_impala"):
+                     "recurrent_replay_impala", "lm_policy",
+                     "lm_replay_policy"):
         assert expected in names
 
 
@@ -110,7 +135,10 @@ def test_agent_resolves_without_legacy_adapter(fixture):
 def test_act_contract_shapes_and_dtypes(fixture):
     name, fx = fixture
     spec = fx.agent.spec
-    params, carry, actions, aux, new_carry = _act(fx.agent, fx.obs_shape)
+    params, carry, actions, aux, new_carry = _act(
+        fx.agent, fx.obs_shape, obs_dtype=_obs_dtype(fx),
+        num_actions=fx.num_actions,
+    )
     assert actions.shape == (B,), name
     assert jnp.issubdtype(actions.dtype, jnp.integer), name
     assert isinstance(aux, api.ActAux), name
@@ -135,7 +163,8 @@ def test_loss_contract_and_weights_pin(fixture):
     name, fx = fixture
     agent, spec = fx.agent, fx.agent.spec
     params = agent.init(jax.random.key(0), fx.obs_shape)
-    traj = _make_traj(agent, spec, params, fx.obs_shape, fx.num_actions)
+    traj = _make_traj(agent, spec, params, fx.obs_shape, fx.num_actions,
+                      obs_dtype=_obs_dtype(fx))
     total, aux = jax.jit(agent.loss)(params, traj)
     assert total.shape == () and np.isfinite(float(total)), name
     assert isinstance(aux, api.LossAux), name
@@ -217,6 +246,53 @@ def test_declared_spec_signature_validation_fix_it():
 
     with pytest.raises(ValueError, match="recurrent=True"):
         api.resolve_agent(UndeclaredCarry())
+
+
+class _KVCarryAgent:
+    """Minimal declared-spec agent with an LM-shaped carry: a zero-valued
+    but decidedly nonzero-SHAPED KV-cache pytree plus position counter."""
+
+    spec = api.AgentSpec(recurrent=True)
+
+    def __init__(self, pos_offset=0):
+        self._off = pos_offset
+
+    def init(self, rng, obs_shape):
+        return {}
+
+    def initial_carry(self, batch):
+        return {
+            "cache": {
+                "layer_0": {
+                    "k": jnp.zeros((batch, 8, 2, 4), jnp.bfloat16),
+                    "v": jnp.zeros((batch, 8, 2, 4), jnp.bfloat16),
+                }
+            },
+            "pos": jnp.full((batch,), self._off, jnp.int32),
+        }
+
+    def act(self, params, obs, rng, carry):
+        raise NotImplementedError
+
+    def loss(self, params, traj, weights=None):
+        raise NotImplementedError
+
+
+def test_zero_valued_kv_cache_carry_validates():
+    """ISSUE 9 satellite: the zero-carry check is on VALUES, not shapes —
+    a KV-cache carry with a position counter must resolve natively."""
+    resolved, spec = api.resolve_agent(_KVCarryAgent())
+    assert spec.recurrent and not api.is_legacy_adapter(resolved)
+
+
+def test_nonzero_carry_rejected_naming_the_leaf():
+    """The fix-it error pinpoints WHICH leaf breaks the zero-value
+    invariant (here the position counter) and spells out that shape/dtype
+    are unconstrained."""
+    with pytest.raises(ValueError, match=r"leaf \['pos'\]"):
+        api.resolve_agent(_KVCarryAgent(pos_offset=3))
+    with pytest.raises(ValueError, match="must be all zeros"):
+        api.resolve_agent(_KVCarryAgent(pos_offset=3))
 
 
 def test_sebulba_core_has_no_arity_sniffing():

@@ -54,3 +54,14 @@ def test_run_registers_elastic_suite():
 
     assert '"elastic": _elastic_suite' in inspect.getsource(run.main)
     assert "BENCH_elastic.json" in inspect.getsource(run._elastic_suite)
+
+
+def test_run_registers_lm_suite():
+    """``--suite lm`` stays wired to lm_bench -> BENCH_lm.json (the ISSUE
+    9 fused decode-carry vs full-forward re-scoring suite)."""
+    import inspect
+
+    from benchmarks import run
+
+    assert '"lm": _lm_suite' in inspect.getsource(run.main)
+    assert "BENCH_lm.json" in inspect.getsource(run._lm_suite)

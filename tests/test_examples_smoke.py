@@ -56,6 +56,13 @@ _RL_RUNS = {
     "sebulba_scenarios_chaos": ("sebulba_scenarios",
                                 ["--frames", "400", "--actor-batch", "6",
                                  "--trajectory", "5", "--chaos", "7"]),
+    "train_lm_rl": ("train_lm_rl",
+                    ["--preset", "tiny", "--frames", "256",
+                     "--prompt-len", "4", "--actor-batch", "4"]),
+    "train_lm_rl_replay": ("train_lm_rl",
+                           ["--preset", "tiny", "--frames", "384",
+                            "--prompt-len", "4", "--actor-batch", "4",
+                            "--replay"]),
 }
 
 

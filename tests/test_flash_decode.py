@@ -33,6 +33,42 @@ def test_flash_decode_matches_ref(B, S, H, K, h, pos, window, bs, dtype):
     ).max() < tol
 
 
+@pytest.mark.parametrize("B", [4, 32])
+@pytest.mark.parametrize("pos", [0, 7, 31])
+def test_flash_decode_actor_shapes_gqa(B, pos):
+    """ISSUE 9 satellite: the LM actor's exact decode shapes — (B, 1)
+    queries at B = 4/32 against a small fixed cache, with GQA
+    ``num_kv_heads < num_heads`` — match the oracle, including pos = 0
+    (freshly reset carry) and the final cache slot."""
+    S, H, K, h = 32, 4, 2, 64
+    ks = jax.random.split(jax.random.key(B * 100 + pos), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, h), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, K, h), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, K, h), jnp.float32)
+    out = flash_decode_pallas(
+        q, kc, vc, jnp.int32(pos), block_s=16, interpret=True
+    )
+    ref = decode_attention_ref(q, kc, vc, jnp.int32(pos))
+    assert jnp.abs(out - ref).max() < 1e-5
+
+
+def test_flash_decode_wrapper_cpu_path_is_oracle_exact():
+    """``flash_decode`` (the wrapper transformer decode now routes
+    through) falls back to ``decode_attention`` off-TPU — bit-exact with
+    the oracle, so the PR 2/3/4 decode pins are unaffected by the
+    rerouting."""
+    from repro.kernels.flash_decode.ops import flash_decode
+
+    B, S, H, K, h = 4, 16, 2, 1, 32
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, h), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, K, h), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, K, h), jnp.float32)
+    out = flash_decode(q, kc, vc, jnp.int32(5))
+    ref = decode_attention_ref(q, kc, vc, jnp.int32(5))
+    assert jnp.array_equal(out, ref)
+
+
 def test_ppo_loss_and_agent():
     from repro.agents.ppo import PPOAgent
     from repro.agents.impala import ConvActorCritic

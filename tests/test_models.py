@@ -127,3 +127,85 @@ def test_moe_grads_flow_to_router():
     g = jax.grad(loss)(params)
     assert float(jnp.abs(g["router"]).max()) > 0.0
     assert float(jnp.abs(g["w_gate"]).max()) > 0.0
+
+
+# ---------------------------------------------- prefill/decode parity (LM)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,unroll",
+    [
+        ("qwen2-1.5b", False),   # dense, stacked scan-over-layers
+        ("qwen2-1.5b", True),    # dense, looped (the LMPolicyAgent layout)
+        ("deepseek-moe-16b", True),   # moe family
+        ("mamba2-1.3b", True),        # ssm family
+    ],
+)
+def test_prefill_decode_step_logit_parity(arch, unroll):
+    """ISSUE 9 satellite: autoregressive ``decode_step`` (the LM agent's
+    act hot loop, flash_decode path included) reproduces the full causal
+    prefill logits position by position across the zoo families.
+
+    float32 params/cache so the pin is on the MATH, not on bf16 rounding;
+    the MoE capacity factor is raised so prefill routing drops no tokens
+    (decode routes one token per step and never drops — a capacity-dropped
+    prefill token is a real, expected divergence, not a decode bug).
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import make_model
+
+    cfg = dataclasses.replace(
+        get_reduced_config(arch), param_dtype="float32",
+        cache_dtype="float32", remat="none",
+    )
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = make_model(cfg, unroll=unroll)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 8
+    tokens = jax.random.randint(
+        jax.random.key(1), (B, T), 0, cfg.vocab_size, dtype=jnp.int32
+    )
+    ref_logits, ref_values, _ = model.forward(params, {"tokens": tokens})
+
+    cache, _ = model.init_cache(B, T)
+    step = jax.jit(model.decode_step)
+    dec_logits, dec_values = [], []
+    for t in range(T):
+        lg, vv, cache = step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        dec_logits.append(lg[:, 0])
+        dec_values.append(vv[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(dec_logits, axis=1)), np.asarray(ref_logits),
+        atol=1e-4, rtol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(dec_values, axis=1)), np.asarray(ref_values),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@pytest.mark.slow
+def test_unrolled_decode_cache_is_batch_leading():
+    """The ``unroll=True`` cache layout contract the Sebulba carry protocol
+    depends on: every leaf is batch-leading (episode-reset broadcast and
+    ``split_for_learners`` both act on axis 0)."""
+    import dataclasses
+
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import make_model
+
+    for arch in ("qwen2-1.5b", "deepseek-moe-16b", "mamba2-1.3b"):
+        cfg = dataclasses.replace(get_reduced_config(arch), remat="none")
+        model = make_model(cfg, unroll=True)
+        B = 3
+        cache, _ = model.init_cache(B, 8)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            assert leaf.shape[0] == B, (
+                arch, jax.tree_util.keystr(path), leaf.shape
+            )

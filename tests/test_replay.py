@@ -351,3 +351,42 @@ def test_offpolicy_rejects_bad_configs():
                 ),
             ),
         )
+
+
+def test_integer_token_trajectory_round_trips_bit_exact():
+    """ISSUE 9 satellite: LM trajectories — int32 token obs/bootstrap plus
+    a KV-cache init_carry — insert and sample through the replay ring with
+    dtypes intact and token values bit-exact (a silent float cast would
+    corrupt token ids the learner re-embeds)."""
+    B, T = 4, 3
+    rng = np.random.RandomState(3)
+    tokens = rng.randint(0, 50_000, (B, T)).astype(np.int32)
+    boot = rng.randint(0, 50_000, (B,)).astype(np.int32)
+    traj = Trajectory(
+        obs=jnp.asarray(tokens),
+        actions=jnp.asarray(tokens),
+        rewards=jnp.zeros((B, T), jnp.float32),
+        discounts=jnp.ones((B, T), jnp.float32),
+        behaviour_logp=jnp.zeros((B, T), jnp.float32),
+        bootstrap_obs=jnp.asarray(boot),
+        init_carry={
+            "cache": jnp.full((B, 4, 2, 2), 2.0, jnp.bfloat16),
+            "pos": jnp.zeros((B,), jnp.int32),
+        },
+    )
+    buf = ReplayBuffer(capacity=16)
+    state = buf.init(traj)
+    assert state.storage.obs.dtype == jnp.int32
+    assert state.storage.init_carry["cache"].dtype == jnp.bfloat16
+    state = buf.insert(state, traj)
+    batch, idx, _ = buf.sample(state, jax.random.key(0), 6)
+    assert batch.obs.dtype == jnp.int32
+    assert batch.bootstrap_obs.dtype == jnp.int32
+    assert batch.init_carry["pos"].dtype == jnp.int32
+    assert batch.init_carry["cache"].dtype == jnp.bfloat16
+    sel = np.asarray(idx)
+    np.testing.assert_array_equal(np.asarray(batch.obs), tokens[sel])
+    np.testing.assert_array_equal(np.asarray(batch.bootstrap_obs), boot[sel])
+    np.testing.assert_array_equal(
+        np.asarray(batch.init_carry["cache"].astype(jnp.float32)), 2.0
+    )

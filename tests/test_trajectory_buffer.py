@@ -229,3 +229,71 @@ def test_fused_act_step_bit_exact_vs_legacy_accumulate():
             assert np.array_equal(np.asarray(x), np.asarray(y)), (
                 f"{name} diverged between fused and legacy pipelines"
             )
+
+
+def test_integer_token_obs_round_trip_bit_exact():
+    """ISSUE 9 satellite: int32 token observations (LM policies) survive
+    write/drain/split_for_learners bit-exact with their dtype intact — the
+    ring allocates from per-step specs, so an integer obs spec must never
+    be silently floated."""
+    from repro.data.trajectory import split_for_learners
+
+    step = jax.jit(buffer_add, donate_argnums=(0,))
+    drain = jax.jit(buffer_drain, donate_argnums=(0,))
+    carry_spec = {
+        "cache": jax.ShapeDtypeStruct((B, 4, 2, 2), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    buf = device_buffer_init(
+        T,
+        jax.ShapeDtypeStruct((B,), jnp.int32),  # scalar token obs
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.float32),
+        (),
+        carry_spec,
+    )
+    assert buf.obs.dtype == jnp.int32
+    assert buf.carry0["cache"].dtype == jnp.bfloat16
+    assert buf.carry0["pos"].dtype == jnp.int32
+
+    rng = np.random.RandomState(0)
+    tokens = rng.randint(0, 50_000, (T, B)).astype(np.int32)
+    for i in range(T):
+        carry = {
+            "cache": jnp.full((B, 4, 2, 2), i + 1, jnp.bfloat16),
+            "pos": jnp.full((B,), i, jnp.int32),
+        }
+        buf = step(
+            buf,
+            jnp.asarray(tokens[i]),
+            jnp.asarray(tokens[i]),  # actions ARE tokens for LM agents
+            jnp.full((B,), -0.5, jnp.float32),
+            (),
+            jnp.full((2, B), 0.5, jnp.float32),
+            carry,
+        )
+    boot = jnp.asarray(rng.randint(0, 50_000, (B,)), jnp.int32)
+    traj, fresh = drain(buf, jnp.full((2, B), 1.0, jnp.float32), boot)
+
+    assert traj.obs.dtype == jnp.int32 and traj.actions.dtype == jnp.int32
+    assert traj.bootstrap_obs.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(traj.obs), tokens.T)
+    np.testing.assert_array_equal(np.asarray(traj.bootstrap_obs),
+                                  np.asarray(boot))
+    # slice-initial carry: the t == 0 snapshot, dtypes intact
+    assert traj.init_carry["cache"].dtype == jnp.bfloat16
+    assert traj.init_carry["pos"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(traj.init_carry["pos"]), 0)
+    np.testing.assert_array_equal(
+        np.asarray(traj.init_carry["cache"].astype(jnp.float32)), 1.0
+    )
+    # learner sharding keeps integer dtypes bit-exact
+    shards = split_for_learners(traj, 2)
+    got = np.concatenate([np.asarray(s.obs) for s in shards], axis=0)
+    np.testing.assert_array_equal(got, tokens.T)
+    for s in shards:
+        assert s.obs.dtype == jnp.int32
+        assert s.init_carry["pos"].dtype == jnp.int32
+    # fresh ring preserves the spec dtypes too
+    assert fresh.obs.dtype == jnp.int32
+    assert fresh.carry0["cache"].dtype == jnp.bfloat16
