@@ -172,13 +172,28 @@ def _lm_suite(lines: list[str]) -> None:
     )
 
 
+def _serve_suite(lines: list[str]) -> None:
+    """--suite serve: continuous batching (paged KV + chunked prefill)
+    vs static batching at mixed prompt/gen lengths -> BENCH_serve.json
+    (the serving perf trajectory; acceptance floor >= 1.5x useful
+    tokens/s over static on the mixed workload)."""
+    from benchmarks import serve_bench
+
+    _section(
+        "serve (continuous vs static batching, mixed lengths)",
+        lambda: serve_bench.main(json_path="BENCH_serve.json"),
+        lines,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only")
     ap.add_argument("--suite",
                     choices=["all", "replay", "sebulba", "learner",
-                             "recurrent", "envs", "fault", "elastic", "lm"],
+                             "recurrent", "envs", "fault", "elastic", "lm",
+                             "serve"],
                     default="all",
                     help="'replay' -> BENCH_replay.json only; 'sebulba' -> "
                          "BENCH_sebulba.json only (actor pipeline + e2e FPS); "
@@ -191,7 +206,9 @@ def main() -> None:
                          "'elastic' -> BENCH_elastic.json only (multi-host "
                          "scale-out + host-kill recovery); 'lm' -> "
                          "BENCH_lm.json only (fused decode-carry acting vs "
-                         "full-forward re-scoring)")
+                         "full-forward re-scoring); 'serve' -> "
+                         "BENCH_serve.json only (continuous vs static "
+                         "batching at mixed prompt/gen lengths)")
     args = ap.parse_args()
 
     lines: list[str] = []
@@ -206,6 +223,7 @@ def main() -> None:
         "fault": _fault_suite,
         "elastic": _elastic_suite,
         "lm": _lm_suite,
+        "serve": _serve_suite,
     }
     if args.suite in suites:
         suites[args.suite](lines)
@@ -238,6 +256,7 @@ def main() -> None:
         _fault_suite(lines)
         _elastic_suite(lines)
         _lm_suite(lines)
+        _serve_suite(lines)
 
     # roofline table from dry-run artifacts, if present
     try:

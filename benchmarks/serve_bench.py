@@ -1,0 +1,215 @@
+"""LM serving: continuous batching (paged KV + chunked prefill) vs static
+batching at mixed prompt/generation lengths.
+
+The PR 10 tentpole claim: on a realistic mixed-length workload a static
+batch moves at the pace of its SLOWEST member — every prompt pads to the
+batch max, every row decodes until the longest generation finishes —
+while the continuous-batching ``ServeEngine`` admits the next request
+the moment a row frees and only ever processes real tokens.  This bench
+serves the same request set both ways:
+
+  * ``static``  — requests grouped ``batch_rows`` at a time in arrival
+    order; each group pads prompts to its max length, runs one fused
+    ``prefill_step``, then lockstep greedy decode for the group's max
+    generation length (the pre-PR-10 ``launch/serve.py`` loop);
+  * ``continuous`` — the ``ServeEngine`` over the paged cache, chunked
+    prefill interleaved with decode under the token budget, greedy
+    sampling so outputs are comparable.
+
+Throughput is **useful** tokens (each request's real prompt + generated
+tokens) over wall-clock, so static batching's padding and stall tokens
+count against it as time, never as work.
+
+``benchmarks/run.py --suite serve`` writes ``BENCH_serve.json``:
+
+    {"workload": {"requests", "batch_rows", "prompt_lens", "gen_lens",
+                  "useful_tokens"},
+     "static":     {"seconds", "tokens_per_s"},
+     "continuous": {"seconds", "tokens_per_s", "ttft_p50_ms",
+                    "ttft_p95_ms", "tpot_p50_ms", "tpot_p95_ms",
+                    "cache_occupancy_peak", "cache_occupancy_mean",
+                    "preempted"},
+     "speedup": continuous tokens_per_s / static tokens_per_s}
+
+(Acceptance floor: speedup >= 1.5x on this container's mixed workload.)
+
+Honest timing: both paths warm up first (one full serve of the workload,
+so jit compiles never land in a measurement — the engine's two
+compilations are reused across ``reset()``), each measured window is
+best-of-3, and every window ends on materialized outputs
+(``block_until_ready`` / host-side token lists).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._timing import csv_line
+
+BATCH_ROWS = 8
+PROMPT_LENS = (8, 16, 32)
+# high-variance generation lengths — the continuous-batching story: most
+# requests answer briefly, a few generate long, and a static batch holds
+# EVERY row until its longest member finishes
+GEN_LENS = (4, 8, 96)
+NUM_REQUESTS = 24
+BLOCK_SIZE = 16
+MAX_SEQ = 128  # >= max prompt + max gen - 1
+
+
+def _model():
+    from repro.configs.base import get_config
+    from repro.models.model import make_model
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"), num_layers=4, d_model=256, num_heads=4,
+        num_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=4096,
+        remat="none",
+    )
+    return cfg, make_model(cfg, unroll=True)
+
+
+def _workload(vocab_size: int):
+    """The mixed-length request set: prompt/gen lengths cycle out of phase
+    so groups of BATCH_ROWS always mix short and long requests."""
+    from repro.serve import Request
+
+    key = jax.random.key(7)
+    reqs = []
+    for i in range(NUM_REQUESTS):
+        L = PROMPT_LENS[i % len(PROMPT_LENS)]
+        g = GEN_LENS[(i // 2) % len(GEN_LENS)]
+        toks = jax.random.randint(
+            jax.random.fold_in(key, i), (L,), 0, vocab_size, dtype=jnp.int32
+        )
+        reqs.append(Request(
+            rid=i + 1, prompt=tuple(int(t) for t in toks), max_new_tokens=g
+        ))
+    return reqs
+
+
+def _useful_tokens(reqs) -> int:
+    return sum(len(r.prompt) + r.max_new_tokens for r in reqs)
+
+
+def bench_static(model, params, reqs) -> float:
+    """-> best-of-3 seconds serving the workload with static batching."""
+    from repro.launch.steps import make_serve_step
+
+    prefill = jax.jit(model.prefill_step)
+    serve = jax.jit(make_serve_step(model))
+    groups = [reqs[i:i + BATCH_ROWS] for i in range(0, len(reqs), BATCH_ROWS)]
+
+    def window() -> float:
+        t0 = time.perf_counter()
+        for group in groups:
+            B = BATCH_ROWS
+            L = max(len(r.prompt) for r in group)
+            g = max(r.max_new_tokens for r in group)
+            prompts = jnp.zeros((B, L), jnp.int32)
+            for i, r in enumerate(group):
+                # left-pad-free layout: prompt right-padded to the batch max
+                prompts = prompts.at[i, :len(r.prompt)].set(
+                    jnp.asarray(r.prompt, jnp.int32)
+                )
+            cache, _ = model.init_cache(B, L + g)
+            logits, _, cache = prefill(
+                params, cache, prompts, jnp.zeros((B,), jnp.int32)
+            )
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            for t in range(L, L + g - 1):
+                tok, cache = serve(params, cache, tok, jnp.int32(t))
+            jax.block_until_ready(tok)
+        return time.perf_counter() - t0
+
+    window()  # warm: jit compiles for every (L, g) group shape
+    return min(window() for _ in range(3))
+
+
+def bench_continuous(model, params, reqs) -> tuple[float, dict]:
+    """-> (best-of-3 seconds, final engine result) for the ServeEngine."""
+    from repro.serve import ServeConfig, ServeEngine
+
+    scfg = ServeConfig(
+        batch_rows=BATCH_ROWS, prefill_chunk=32,
+        token_budget=BATCH_ROWS + 32, block_size=BLOCK_SIZE,
+        num_blocks=1 + BATCH_ROWS * (MAX_SEQ // BLOCK_SIZE),
+        max_seq=MAX_SEQ, temperature=0.0, seed=0,
+    )
+    engine = ServeEngine(model, params, scfg, paged=True)
+    engine.run(reqs)  # warm: the engine's two jit compiles
+
+    best, result = None, None
+    for _ in range(3):
+        engine.reset()
+        t0 = time.perf_counter()
+        res = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best, result = dt, res
+    return best, result
+
+
+def main(json_path: str | None = None) -> list[str]:
+    cfg, model = _model()
+    params = model.init(jax.random.key(0))
+    reqs = _workload(cfg.vocab_size)
+    useful = _useful_tokens(reqs)
+
+    static_s = bench_static(model, params, reqs)
+    cont_s, res = bench_continuous(model, params, reqs)
+    static_tps = useful / static_s
+    cont_tps = useful / cont_s
+    speedup = cont_tps / static_tps
+
+    results = {
+        "workload": {
+            "requests": len(reqs), "batch_rows": BATCH_ROWS,
+            "prompt_lens": list(PROMPT_LENS), "gen_lens": list(GEN_LENS),
+            "useful_tokens": useful,
+        },
+        "static": {
+            "seconds": round(static_s, 4),
+            "tokens_per_s": round(static_tps, 1),
+        },
+        "continuous": {
+            "seconds": round(cont_s, 4),
+            "tokens_per_s": round(cont_tps, 1),
+            "ttft_p50_ms": round(res["ttft_p50"] * 1e3, 2),
+            "ttft_p95_ms": round(res["ttft_p95"] * 1e3, 2),
+            "tpot_p50_ms": round(res["tpot_p50"] * 1e3, 2),
+            "tpot_p95_ms": round(res["tpot_p95"] * 1e3, 2),
+            "cache_occupancy_peak": round(res["cache_occupancy_peak"], 3),
+            "cache_occupancy_mean": round(res["cache_occupancy_mean"], 3),
+            "preempted": res["preempted"],
+        },
+        "speedup": round(speedup, 2),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return [
+        csv_line("serve_static", static_s / useful * 1e6,
+                 f"tok_per_s={static_tps:,.0f}"),
+        csv_line("serve_continuous", cont_s / useful * 1e6,
+                 f"tok_per_s={cont_tps:,.0f} speedup={speedup:.2f}x "
+                 f"ttft_p50_ms={results['continuous']['ttft_p50_ms']}"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_serve.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(json_path="BENCH_serve.json" if args.json else None):
+        print(line)
+    if args.json:
+        print("wrote BENCH_serve.json")

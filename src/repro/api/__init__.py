@@ -31,12 +31,14 @@ from repro.api.registry import (  # noqa: F401
 )
 from repro.api.runner import (  # noqa: F401
     RESULT_KEYS,
+    SERVE_RESULT_KEYS,
     CheckpointPolicy,
     Runner,
     checkpoint_path,
     checkpoint_stamps,
     latest_checkpoint,
     make_result,
+    make_serve_result,
     newest_valid_checkpoint,
     resolve_auto_resume,
     restore_checkpoint,

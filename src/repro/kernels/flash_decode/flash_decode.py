@@ -9,6 +9,15 @@ tile, so the kernel is purely HBM-bandwidth-bound — the roofline floor for
 decode.  Blocks whose positions are entirely masked (beyond ``pos`` or
 outside the sliding window) are skipped with pl.when, so decode cost tracks
 the *filled* cache length, not the allocated one.
+
+Decode positions are **per row**: the scalar-prefetch ``pos`` vector holds
+one int32 position per batch row (a scalar broadcasts), so rows of one
+batch may sit at ragged depths — the continuous-batching serving invariant
+(PR 10).  ``flash_decode_pallas_paged`` is the block-table variant: the KV
+cache is a pool of fixed-size physical pages ``(P, bs, K, h)`` and a
+prefetched ``(B, nb)`` block table maps row-local logical block ``si`` to
+its physical page *in the BlockSpec index_map*, so the gather costs zero
+extra copies — each grid step DMAs exactly the page the table names.
 """
 
 from __future__ import annotations
@@ -24,7 +33,7 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(
-    pos_ref,  # scalar prefetch: (1,) int32
+    pos_ref,  # scalar prefetch: (B,) int32 per-row decode positions
     q_ref, k_ref, v_ref,  # inputs
     o_ref,  # output
     m_ref, l_ref, acc_ref,  # VMEM scratch
@@ -35,7 +44,7 @@ def _decode_kernel(
     sm_scale: float,
 ):
     si = pl.program_id(2)
-    pos = pos_ref[0]
+    pos = pos_ref[pl.program_id(0)]
 
     @pl.when(si == 0)
     def _init():
@@ -73,6 +82,21 @@ def _decode_kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(pos_ref, bt_ref, *rest, **kw):
+    # the block table is consumed by the BlockSpec index_maps only; the
+    # kernel body masks on logical positions exactly like the dense one
+    del bt_ref
+    _decode_kernel(pos_ref, *rest, **kw)
+
+
+def _pos_vector(pos, batch: int) -> jax.Array:
+    """Scalar or (B,) position -> the (B,) int32 prefetch vector."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos.reshape(-1), (batch,)) if pos.ndim else (
+        jnp.full((batch,), pos, jnp.int32)
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("window", "block_s", "interpret")
 )
@@ -80,7 +104,7 @@ def flash_decode_pallas(
     q: jax.Array,  # (B, 1, H, h)
     k_cache: jax.Array,  # (B, S, K, h)
     v_cache: jax.Array,  # (B, S, K, h)
-    pos: jax.Array,  # scalar int32
+    pos: jax.Array,  # scalar int32, or (B,) per-row positions
     *,
     window: int = 0,
     block_s: int = 256,
@@ -125,5 +149,70 @@ def flash_decode_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((B, K, G, h), q.dtype),
         interpret=interpret,
-    )(jnp.asarray([pos], jnp.int32), qh, k_cache, v_cache)
+    )(_pos_vector(pos, B), qh, k_cache, v_cache)
+    return out.reshape(B, 1, H, h)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_pallas_paged(
+    q: jax.Array,  # (B, 1, H, h)
+    k_pages: jax.Array,  # (P, bs, K, h) physical page pool
+    v_pages: jax.Array,  # (P, bs, K, h)
+    block_tables: jax.Array,  # (B, nb) int32: logical block -> physical page
+    pos: jax.Array,  # scalar int32, or (B,) per-row positions
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash-decode: the block table rides the scalar prefetch and
+    the K/V BlockSpec index_maps dereference it, so the "gather" is just
+    which page each sequential grid step DMAs.  Logical position
+    ``s = si * bs + off`` masks exactly like the dense kernel; pages the
+    table maps beyond ``pos`` are skipped (their content — stale data
+    from a freed request, or the reserved scratch page — never loads).
+    Global attention only (the serving path); window layers stay dense.
+    """
+    B, _, H, h = q.shape
+    P, bs, K, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    G = H // K
+
+    qh = q.reshape(B, K, G, h)
+    grid = (B, K, nb)
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel,
+            block_s=bs, num_s_blocks=nb, window=0, sm_scale=h**-0.5,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # pos, block_tables
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, G, h), lambda b, k, si, pos, bt: (b, k, 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, bs, 1, h),
+                    lambda b, k, si, pos, bt: (bt[b, si], 0, k, 0),
+                ),
+                pl.BlockSpec(
+                    (1, bs, 1, h),
+                    lambda b, k, si, pos, bt: (bt[b, si], 0, k, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, G, h), lambda b, k, si, pos, bt: (b, k, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, h), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, h), q.dtype),
+        interpret=interpret,
+    )(
+        _pos_vector(pos, B),
+        jnp.asarray(block_tables, jnp.int32),
+        qh, k_pages, v_pages,
+    )
     return out.reshape(B, 1, H, h)

@@ -1,4 +1,14 @@
-"""Jitted flash-decoding wrapper: Pallas on TPU, jnp einsum elsewhere."""
+"""Jitted flash-decoding wrapper: Pallas on TPU, jnp einsum elsewhere.
+
+``pos`` is a scalar (lockstep batch, the PR 9 path — unchanged) or a
+``(B,)`` int32 vector of per-row decode positions (the continuous-batching
+serving path, PR 10).  ``block_tables`` switches to the paged layout:
+``k_cache``/``v_cache`` are physical page pools ``(P, bs, K, h)`` and the
+``(B, nb)`` table maps each row's logical blocks onto them — the Pallas
+kernel dereferences the table in its BlockSpec index_map on TPU; the jnp
+path gathers pages to the dense layout and runs the dense oracle, which
+keeps paged and dense decode bit-identical off-TPU.
+"""
 
 from __future__ import annotations
 
@@ -14,12 +24,37 @@ def flash_decode(
     v_cache: jax.Array,
     pos: jax.Array,
     *,
+    block_tables: jax.Array | None = None,
     window: int = 0,
     impl: str = "auto",
     interpret: bool = False,
 ) -> jax.Array:
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if block_tables is not None:
+        if window:
+            raise ValueError(
+                "paged decode is global-attention only: sliding-window "
+                "layers keep the dense per-row cache (window=0 required "
+                "with block_tables)"
+            )
+        if impl == "pallas" or interpret:
+            from repro.kernels.flash_decode.flash_decode import (
+                flash_decode_pallas_paged,
+            )
+
+            return flash_decode_pallas_paged(
+                q, k_cache, v_cache, block_tables, pos, interpret=interpret
+            )
+        from repro.kernels.flash_decode.ref import gather_pages
+        from repro.models.attention import decode_attention
+
+        return decode_attention(
+            q,
+            gather_pages(k_cache, block_tables),
+            gather_pages(v_cache, block_tables),
+            pos,
+        )
     if impl == "pallas" or interpret:
         from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
 

@@ -1,7 +1,15 @@
 """Pure-jnp oracle for single-token decode attention against a KV cache.
 
-q: (B, 1, H, h); k_cache/v_cache: (B, S, K, h); pos: scalar — attend to
-cache entries <= pos (and > pos - window when window > 0).
+q: (B, 1, H, h); k_cache/v_cache: (B, S, K, h); pos: scalar OR per-row
+(B,) int32 — row b attends to cache entries <= pos[b] (and > pos[b] -
+window when window > 0).  The scalar form is the PR 9 lockstep path and
+stays bit-identical; the per-row form is the serving path (PR 10), where
+rows of one batch sit at ragged decode positions.
+
+``gather_pages`` materializes a block-table-mapped paged cache as the
+dense (B, S, K, h) layout, so the paged oracle is *literally* the dense
+oracle over gathered pages — the bit-exactness anchor the Pallas paged
+kernel and the ServeEngine equivalence tests pin against.
 """
 
 from __future__ import annotations
@@ -10,6 +18,22 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def _valid_mask(S: int, pos: jax.Array, window: int) -> jax.Array:
+    """-> (S,) for scalar pos (the PR 9 path, kept bit-identical) or
+    (B, S) for per-row pos."""
+    k_pos = jnp.arange(S)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        valid = k_pos <= pos
+        if window:
+            valid &= k_pos > pos - window
+        return valid
+    valid = k_pos[None, :] <= pos[:, None]
+    if window:
+        valid &= k_pos[None, :] > (pos[:, None] - window)
+    return valid
 
 
 def decode_attention_ref(
@@ -27,11 +51,41 @@ def decode_attention_ref(
     logits = jnp.einsum(
         "bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32)
     )
-    k_pos = jnp.arange(S)
-    valid = k_pos <= pos
-    if window:
-        valid &= k_pos > pos - window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    valid = _valid_mask(S, pos, window)
+    if valid.ndim == 1:
+        mask = valid[None, None, None, :]
+    else:
+        mask = valid[:, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, h).astype(q.dtype)
+
+
+def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """pages: (P, bs, K, h); block_tables: (B, nb) int32 physical-block
+    ids -> dense (B, nb*bs, K, h).  Logical position s of row b lives at
+    pages[block_tables[b, s // bs], s % bs]."""
+    B, nb = block_tables.shape
+    _, bs, K, h = pages.shape
+    gathered = pages[block_tables]  # (B, nb, bs, K, h)
+    return gathered.reshape(B, nb * bs, K, h)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Block-table-gathered decode oracle: gather pages to the dense
+    layout, then run the dense oracle.  Positions beyond ``pos`` are
+    masked to exactly NEG_INF before the softmax, so whatever an
+    unmapped / stale block holds cannot reach the output — the property
+    the paged-vs-dense bit-exactness contract rests on."""
+    kc = gather_pages(k_pages, block_tables)
+    vc = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(q, kc, vc, pos, window=window)

@@ -119,12 +119,66 @@ def make_train_step(
     return train_step
 
 
-def make_serve_step(model: Model) -> Callable:
-    def serve_step(params, cache, tokens, pos):
-        """One decode step: (B, 1) token -> next (B, 1) token (greedy)."""
+def sample_tokens(
+    logits: jax.Array,
+    keys: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """Seeded sampling from (B, V) logits with one PRNG key per row.
+
+    ``temperature <= 0`` is greedy argmax (the old serve-loop behaviour).
+    ``top_k > 0`` masks everything below the k-th largest logit to -inf
+    before the draw (>= threshold survives, so ties keep deterministic
+    membership).  Per-row keys let callers key each row on its REQUEST
+    identity — ``fold_in(fold_in(key(seed), request_id), token_index)`` —
+    so a request's tokens are independent of batch composition, row
+    assignment, and scheduling (the serve determinism contract).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k > 0 and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    draw = jax.vmap(lambda key, lg: jax.random.categorical(key, lg))
+    return draw(keys, scaled).astype(jnp.int32)
+
+
+def request_keys(seed: int, rids: jax.Array, tok_idx: jax.Array) -> jax.Array:
+    """Per-row sampling keys from request ids + per-request token indices."""
+    base = jax.random.key(seed)
+    return jax.vmap(
+        lambda r, t: jax.random.fold_in(jax.random.fold_in(base, r), t)
+    )(rids, tok_idx)
+
+
+def make_serve_step(
+    model: Model, temperature: float = 0.0, top_k: int = 0, seed: int = 0
+) -> Callable:
+    """Serve-loop decode step.  Greedy by default (the original 4-arg
+    signature, unchanged for existing callers); with ``temperature > 0``
+    the step takes per-row ``(rids, tok_idx)`` int32 vectors and draws
+    from seeded per-request streams (same seed -> same tokens, whatever
+    the batch around them looks like)."""
+    if temperature <= 0.0:
+        def serve_step(params, cache, tokens, pos):
+            """One decode step: (B, 1) token -> next (B, 1) token (greedy)."""
+            logits, _values, cache = model.decode_step(params, cache, tokens, pos)
+            next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tokens, cache
+
+        return serve_step
+
+    def serve_step(params, cache, tokens, pos, rids, tok_idx):
+        """One sampled decode step: (B, 1) token -> next (B, 1) token."""
         logits, _values, cache = model.decode_step(params, cache, tokens, pos)
-        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tokens, cache
+        keys = request_keys(seed, rids, tok_idx)
+        next_tokens = sample_tokens(
+            logits[:, 0], keys, temperature=temperature, top_k=top_k
+        )
+        return next_tokens[:, None], cache
 
     return serve_step
 

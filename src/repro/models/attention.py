@@ -347,9 +347,12 @@ def decode_attention(
     window: int = 0,
     softcap: float = 0.0,
 ) -> jax.Array:
-    """q: (B, 1, H, h); caches: (B, S, K, h); pos: scalar current position.
+    """q: (B, 1, H, h); caches: (B, S, K, h); pos: scalar current position
+    (lockstep batch), or per-row (B,) int32 positions (ragged batch — the
+    continuous-batching serving path).
 
-    Attends to cache entries <= pos (and > pos - window when local).
+    Row b attends to cache entries <= pos[b] (and > pos[b] - window when
+    local).  The scalar form is unchanged from PR 9 and stays bit-exact.
     """
     B, _, H, h = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
@@ -362,22 +365,116 @@ def decode_attention(
     if softcap > 0:
         logits = softcap * jnp.tanh(logits / softcap)
     k_pos = jnp.arange(S)
-    valid = k_pos <= pos
-    if window:
-        valid &= k_pos > pos - window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        valid = k_pos <= pos
+        if window:
+            valid &= k_pos > pos - window
+        mask = valid[None, None, None, :]
+    else:
+        valid = k_pos[None, :] <= pos[:, None]
+        if window:
+            valid &= k_pos[None, :] > (pos[:, None] - window)
+        mask = valid[:, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, 1, H, h).astype(q.dtype)
 
 
+def chunk_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Chunked-prefill attention: a (B, C, H, h) query chunk whose row-b
+    queries sit at absolute positions pos[b]..pos[b]+C-1, attending to a
+    (B, S, K, h) cache that ALREADY holds the chunk's own K/V (written
+    before this call).  The position mask s <= pos[b] + i gives exact
+    causality both against the cached prefix and within the chunk —
+    ``decode_attention`` is the C == 1 special case.  Global attention
+    only (the serving path)."""
+    B, C, H, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    if k_cache.dtype.itemsize == 1:
+        k_cache = k_cache.astype(jnp.bfloat16)
+        v_cache = v_cache.astype(jnp.bfloat16)
+    qg = q.reshape(B, C, K, G, h) * (h**-0.5)
+    logits = jnp.einsum("bckgh,bskh->bkgcs", qg, k_cache).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.asarray(pos)
+    q_pos = pos.reshape(-1, 1) + jnp.arange(C)[None, :]  # (B|1, C)
+    q_pos = jnp.broadcast_to(q_pos, (B, C))
+    valid = jnp.arange(S)[None, None, :] <= q_pos[..., None]  # (B, C, S)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgcs,bskh->bckgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, C, H, h).astype(q.dtype)
+
+
 def update_kv_cache(
     k_cache: jax.Array, v_cache: jax.Array, k: jax.Array, v: jax.Array, pos
 ) -> tuple[jax.Array, jax.Array]:
-    """Write the new (B, 1, K, h) kv at position ``pos``."""
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
+    """Write the new (B, 1, K, h) kv at position ``pos`` (scalar — the
+    lockstep path, unchanged) or at per-row positions ((B,) int32)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
+        return k_cache, v_cache
+    return update_kv_cache_chunk(k_cache, v_cache, k, v, pos)
+
+
+def update_kv_cache_chunk(
+    k_cache: jax.Array, v_cache: jax.Array, k: jax.Array, v: jax.Array, pos
+) -> tuple[jax.Array, jax.Array]:
+    """Write a (B, C, K, h) kv chunk at per-row start positions ``pos``
+    ((B,) int32 — row b's token i lands at cache slot pos[b] + i).
+    Out-of-range slots are dropped, not clamped: a padded final prefill
+    chunk must never clobber the cache tail."""
+    B, C = k.shape[0], k.shape[1]
+    b_idx = jnp.arange(B)[:, None]
+    s_idx = jnp.asarray(pos).reshape(-1, 1) + jnp.arange(C)[None, :]
+    k_cache = k_cache.at[b_idx, s_idx].set(k.astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[b_idx, s_idx].set(v.astype(v_cache.dtype), mode="drop")
     return k_cache, v_cache
+
+
+def update_paged_kv_cache(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_tables: jax.Array,
+    pos: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Write a (B, C, K, h) kv chunk into (P, bs, K, h) page pools through
+    a (B, nb) block table at per-row start positions ``pos``.
+
+    Logical position p = pos[b] + i maps to page block_tables[b, p // bs]
+    at offset p % bs.  Positions past the table (padded prefill tails)
+    redirect to the reserved scratch page 0 at offset 0 — the allocator
+    never maps page 0 to a live row, so those writes are inert; distinct
+    live rows hold disjoint pages, so the scatter never races."""
+    P, bs = k_pages.shape[0], k_pages.shape[1]
+    B, C = k.shape[0], k.shape[1]
+    nb = block_tables.shape[1]
+    p_idx = jnp.asarray(pos).reshape(-1, 1) + jnp.arange(C)[None, :]  # (B, C)
+    in_range = p_idx < nb * bs
+    blk = jnp.minimum(p_idx // bs, nb - 1)
+    phys = jnp.take_along_axis(
+        jnp.asarray(block_tables, jnp.int32), blk, axis=1
+    )
+    phys = jnp.where(in_range, phys, 0)
+    off = jnp.where(in_range, p_idx % bs, 0)
+    k_pages = k_pages.at[phys, off].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v.astype(v_pages.dtype))
+    return k_pages, v_pages
 
 
 # ---------------------------------------------------------------------------

@@ -485,26 +485,91 @@ class Model:
 
         raise ValueError(cfg.family)
 
+    def init_paged_cache(
+        self, num_blocks: int, block_size: int, dtype=None
+    ) -> tuple[Params, Params]:
+        """Paged KV cache for the serving path: each attention layer's
+        {"k", "v"} become physical page pools ``(P, bs, K, h)`` shared by
+        all rows through a per-request block table (serve/blocks.py).
+        Page 0 is reserved as scratch (never mapped to a live request),
+        so out-of-range writes land there harmlessly.  Same pytree
+        structure as ``init_cache`` — decode_step just threads
+        ``block_tables`` through.  dense/moe only (the families whose
+        decode path is pure global attention)."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged cache supports dense/moe only, not {cfg.family}"
+            )
+        for kind in self.kinds:
+            if tf.local_params(cfg, kind)[0]:
+                raise ValueError(
+                    "paged cache requires uniform global attention; "
+                    "sliding-window layers keep the dense cache"
+                )
+        cb = _CacheBuilder(dtype or jnp.dtype(cfg.cache_dtype))
+        K, h = cfg.num_kv_heads, cfg.head_dim
+        axes = ("pages", "page_slot", "act_kv_heads", "head_dim")
+
+        def pool(stacked_layers=0):
+            shape = (num_blocks, block_size, K, h)
+            a = axes
+            if stacked_layers:
+                shape, a = (stacked_layers,) + shape, ("layers",) + a
+            k, ka = cb.zeros(shape, a)
+            v, va = cb.zeros(shape, a)
+            return {"k": k, "v": v}, {"k": ka, "v": va}
+
+        if self.stacked:
+            n = cfg.num_layers if cfg.family == "dense" else sum(
+                1 for k in self.kinds if k == "M"
+            )
+            c, a = pool(stacked_layers=n)
+            cache, cache_axes = {"blocks": c}, {"blocks": a}
+            if cfg.family == "moe" and n != cfg.num_layers:
+                for i, kind in enumerate(self.kinds):
+                    if kind == "D":
+                        cache[f"layer_{i}"], cache_axes[f"layer_{i}"] = pool()
+            return cache, cache_axes
+        cache, cache_axes = {}, {}
+        for i in range(cfg.num_layers):
+            cache[f"layer_{i}"], cache_axes[f"layer_{i}"] = pool()
+        return cache, cache_axes
+
     # ----------------------------------------------------------- decode step
 
     def decode_step(
-        self, params: Params, cache: Params, tokens: jax.Array, pos: jax.Array
+        self, params: Params, cache: Params, tokens: jax.Array, pos: jax.Array,
+        block_tables: jax.Array | None = None,
     ) -> tuple[jax.Array, jax.Array, Params]:
-        """tokens: (B, 1) -> (logits (B,1,V) f32, values (B,1) f32, cache)."""
+        """tokens: (B, 1) -> (logits (B,1,V) f32, values (B,1) f32, cache).
+
+        ``pos`` is a scalar (lockstep batch — the PR 9 path, unchanged) or
+        a (B,) int32 vector of per-row positions.  ``block_tables`` (B, nb)
+        switches dense/moe attention onto the paged cache from
+        ``init_paged_cache``.
+        """
         cfg = self.cfg
+        if block_tables is not None and cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"block_tables requires a dense/moe model, not {cfg.family}"
+            )
         x = self._embed_decode(params, tokens, pos)
         new_cache = {}
 
         if cfg.family in ("dense", "moe") and self.stacked:
             def step(p, c, h):
-                h, c2 = tf.attn_sublayer_decode(p, c, h, pos, cfg)
+                h, c2 = tf.attn_sublayer_decode(
+                    p, c, h, pos, cfg, block_tables=block_tables
+                )
                 h, _ = tf.ffn_sublayer(p, h, cfg, self.moe_impl, self.mesh)
                 return h, c2
             if cfg.family == "moe" and "layer_0" in params:
                 for i, kind in enumerate(self.kinds):
                     if kind == "D":
                         x, c2 = tf.attn_sublayer_decode(
-                            params[f"layer_{i}"], cache[f"layer_{i}"], x, pos, cfg
+                            params[f"layer_{i}"], cache[f"layer_{i}"], x, pos,
+                            cfg, block_tables=block_tables,
                         )
                         x, _ = tf.ffn_sublayer(params[f"layer_{i}"], x, cfg)
                         new_cache[f"layer_{i}"] = c2
@@ -517,7 +582,7 @@ class Model:
                 window, theta = tf.local_params(cfg, kind)
                 x, c2 = tf.attn_sublayer_decode(
                     params[f"layer_{i}"], cache[f"layer_{i}"], x, pos, cfg,
-                    window=window, theta=theta,
+                    window=window, theta=theta, block_tables=block_tables,
                 )
                 x, _ = tf.ffn_sublayer(params[f"layer_{i}"], x, cfg, self.moe_impl, self.mesh)
                 new_cache[f"layer_{i}"] = c2
@@ -585,15 +650,88 @@ class Model:
         )[..., 0].astype(jnp.float32)
         return logits, values, new_cache
 
+    # ---------------------------------------------------------- prefill step
+
+    def prefill_step(
+        self, params: Params, cache: Params, tokens: jax.Array, pos: jax.Array,
+        block_tables: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array, Params]:
+        """Chunked prefill: process a (B, C) token chunk whose row-b tokens
+        sit at positions pos[b]..pos[b]+C-1, writing K/V into the cache and
+        returning per-position logits — the fused-forward equivalent of C
+        sequential ``decode_step`` calls (bit-exact with them; the parity
+        pin in test_models covers it).  tokens: (B, C); pos: scalar or (B,)
+        -> (logits (B,C,V) f32, values (B,C) f32, cache).  dense/moe with
+        global attention only (the serving path)."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"prefill_step supports dense/moe only, not {cfg.family}; "
+                "other families decode token-by-token"
+            )
+        C = tokens.shape[1]
+        pos = jnp.asarray(pos)
+        x = layers.embed(params["embedding"], tokens, jnp.dtype(cfg.param_dtype))
+        if "gemma" in cfg.name:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if cfg.pos_embed == "learned":
+            positions = tf._rope_positions(pos, C)
+            x = x + layers.learned_pos(params["pos"], positions).astype(x.dtype)
+        new_cache = {}
+        if self.stacked:
+            def step(p, c, h):
+                h, c2 = tf.attn_sublayer_prefill(
+                    p, c, h, pos, cfg, block_tables=block_tables
+                )
+                h, _ = tf.ffn_sublayer(p, h, cfg, self.moe_impl, self.mesh)
+                return h, c2
+            if cfg.family == "moe" and "layer_0" in params:
+                for i, kind in enumerate(self.kinds):
+                    if kind == "D":
+                        x, c2 = tf.attn_sublayer_prefill(
+                            params[f"layer_{i}"], cache[f"layer_{i}"], x, pos,
+                            cfg, block_tables=block_tables,
+                        )
+                        x, _ = tf.ffn_sublayer(params[f"layer_{i}"], x, cfg)
+                        new_cache[f"layer_{i}"] = c2
+            x, blocks_cache = tf.scan_decode_layers(
+                params["blocks"], cache["blocks"], x, step
+            )
+            new_cache["blocks"] = blocks_cache
+        else:
+            for i, kind in enumerate(self.kinds):
+                if tf.local_params(cfg, kind)[0]:
+                    raise ValueError(
+                        "prefill_step requires global attention layers; "
+                        "sliding-window layers decode token-by-token"
+                    )
+                x, c2 = tf.attn_sublayer_prefill(
+                    params[f"layer_{i}"], cache[f"layer_{i}"], x, pos, cfg,
+                    block_tables=block_tables,
+                )
+                x, _ = tf.ffn_sublayer(
+                    params[f"layer_{i}"], x, cfg, self.moe_impl, self.mesh
+                )
+                new_cache[f"layer_{i}"] = c2
+        x = layers.rms_norm(params["final_norm"], x, cfg.rms_norm_eps)
+        logits = layers.unembed(params["embedding"], x)
+        values = jnp.einsum(
+            "btd,dk->btk", x, params["value_head"]["w"].astype(x.dtype)
+        )[..., 0].astype(jnp.float32)
+        return logits, values, new_cache
+
     def _embed_decode(self, params, tokens, pos):
         cfg = self.cfg
         x = layers.embed(params["embedding"], tokens, jnp.dtype(cfg.param_dtype))
         if "gemma" in cfg.name:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
         if cfg.pos_embed == "learned":
-            x = x + layers.learned_pos(
-                params["pos"], pos[None]
-            ).astype(x.dtype)[None]
+            pos = jnp.asarray(pos)
+            if pos.ndim == 0:
+                pe = layers.learned_pos(params["pos"], pos[None])[None]
+            else:  # per-row positions: (B,) -> (B, 1, D)
+                pe = layers.learned_pos(params["pos"], pos[:, None])
+            x = x + pe.astype(x.dtype)
         return x
 
     def _cross_decode(self, p, c, x):

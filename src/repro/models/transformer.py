@@ -146,6 +146,16 @@ def attn_sublayer(
     return x + attn.output_project(p["attn"], out)
 
 
+def _rope_positions(pos: jax.Array | None, width: int = 1) -> jax.Array | None:
+    """Decode-time rope positions: scalar pos -> (1, width) lockstep row;
+    per-row (B,) pos -> (B, width), row b at pos[b]..pos[b]+width-1."""
+    if pos is None:
+        return None
+    pos = jnp.asarray(pos)
+    base = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    return base + jnp.arange(width)[None, :] if width > 1 else base
+
+
 def attn_sublayer_decode(
     p: Params,
     cache: dict,
@@ -155,15 +165,31 @@ def attn_sublayer_decode(
     *,
     window: int = 0,
     theta: float | None = None,
+    block_tables: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
-    """One-token decode.  cache: {"k": (B,S,K,h), "v": ...}."""
+    """One-token decode.  cache: {"k": (B,S,K,h), "v": ...} dense, or
+    {"k": (P,bs,K,h), "v": ...} page pools when ``block_tables`` is given.
+    ``pos`` is a scalar (lockstep, the PR 9 path — unchanged) or a (B,)
+    vector of per-row positions (the serving path)."""
     h = layers.rms_norm(p["attn_norm"], x, cfg.rms_norm_eps)
-    positions = pos[None, None] if cfg.pos_embed == "rope" else None
+    positions = _rope_positions(pos) if cfg.pos_embed == "rope" else None
     q, k, v = attn.qkv_project(
         p["attn"], h, positions=positions,
         rope_theta=theta if theta is not None else cfg.rope_theta,
         eps=cfg.rms_norm_eps,
     )
+    if block_tables is not None:
+        if window or cfg.attn_logit_softcap:
+            raise ValueError(
+                "paged decode supports global attention without logit "
+                "softcap only; sliding-window / softcap layers keep the "
+                "dense cache"
+            )
+        kc, vc = attn.update_paged_kv_cache(
+            cache["k"], cache["v"], k, v, block_tables, pos
+        )
+        out = flash_decode(q, kc, vc, pos, block_tables=block_tables)
+        return x + attn.output_project(p["attn"], out), {"k": kc, "v": vc}
     S = cache["k"].shape[1]
     if window and S == window:
         kc, vc = griffin.ring_cache_update(cache["k"], cache["v"], k, v, pos, window)
@@ -180,6 +206,48 @@ def attn_sublayer_decode(
             # the decode hot loop: Pallas flash_decode on TPU, its
             # bit-identical jnp oracle elsewhere (kernels/flash_decode)
             out = flash_decode(q, kc, vc, pos, window=window)
+    return x + attn.output_project(p["attn"], out), {"k": kc, "v": vc}
+
+
+def attn_sublayer_prefill(
+    p: Params,
+    cache: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    *,
+    block_tables: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """Chunked prefill: a (B, C, D) token chunk whose row-b tokens sit at
+    positions pos[b]..pos[b]+C-1.  The chunk's K/V is written into the
+    cache first, then the chunk attends to the whole cache with the
+    per-row position mask — within-chunk causality falls out of the mask,
+    so this is exactly C fused copies of ``attn_sublayer_decode`` (the
+    prefill-vs-decode parity pin).  Global attention, no softcap (the
+    serving path); rows past their prompt write out-of-range and are
+    dropped (dense) or land on the scratch page (paged)."""
+    if cfg.attn_logit_softcap:
+        raise ValueError("chunked prefill does not support logit softcap")
+    C = x.shape[1]
+    h = layers.rms_norm(p["attn_norm"], x, cfg.rms_norm_eps)
+    positions = _rope_positions(pos, C) if cfg.pos_embed == "rope" else None
+    q, k, v = attn.qkv_project(
+        p["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+        eps=cfg.rms_norm_eps,
+    )
+    if block_tables is not None:
+        kc, vc = attn.update_paged_kv_cache(
+            cache["k"], cache["v"], k, v, block_tables, pos
+        )
+        from repro.kernels.flash_decode.ref import gather_pages
+
+        out = attn.chunk_decode_attention(
+            q, gather_pages(kc, block_tables), gather_pages(vc, block_tables),
+            pos,
+        )
+    else:
+        kc, vc = attn.update_kv_cache_chunk(cache["k"], cache["v"], k, v, pos)
+        out = attn.chunk_decode_attention(q, kc, vc, pos)
     return x + attn.output_project(p["attn"], out), {"k": kc, "v": vc}
 
 

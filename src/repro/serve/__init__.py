@@ -1,0 +1,30 @@
+"""Continuous-batching LM serving (PR 10).
+
+The serving stack behind the Podracer decode path:
+
+  * :mod:`repro.serve.blocks` — the paged KV cache bookkeeping: a
+    free-list page allocator plus per-request block tables over the
+    ``(P, bs, K, h)`` page pools ``Model.init_paged_cache`` allocates;
+  * :mod:`repro.serve.scheduler` — sarathi-style continuous batching:
+    admit requests from a queue, interleave chunked prefill with decode
+    under a fixed token budget per step, evict finished rows, preempt on
+    cache exhaustion;
+  * :mod:`repro.serve.engine` — ``ServeEngine``: one donated-jit serve
+    step per iteration (decode + sample + cache update in one dispatch),
+    seeded per-request sampling streams, and the
+    ``api.make_serve_result`` counter schema.
+"""
+
+from repro.serve.blocks import BlockAllocator, CacheExhausted, RowTables
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request, Scheduler, ServeConfig
+
+__all__ = [
+    "BlockAllocator",
+    "CacheExhausted",
+    "Request",
+    "RowTables",
+    "Scheduler",
+    "ServeConfig",
+    "ServeEngine",
+]

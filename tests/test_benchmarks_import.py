@@ -65,3 +65,14 @@ def test_run_registers_lm_suite():
 
     assert '"lm": _lm_suite' in inspect.getsource(run.main)
     assert "BENCH_lm.json" in inspect.getsource(run._lm_suite)
+
+
+def test_run_registers_serve_suite():
+    """``--suite serve`` stays wired to serve_bench -> BENCH_serve.json
+    (the ISSUE 10 continuous-vs-static batching suite)."""
+    import inspect
+
+    from benchmarks import run
+
+    assert '"serve": _serve_suite' in inspect.getsource(run.main)
+    assert "BENCH_serve.json" in inspect.getsource(run._serve_suite)

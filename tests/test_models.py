@@ -45,6 +45,60 @@ def test_decode_attention_matches_last_row():
     assert jnp.abs(out - ref).max() < 1e-4
 
 
+def test_decode_attention_per_row_positions_match_scalar():
+    """ISSUE 10: decode with a (B,) position vector (the serving decode
+    dispatch) is bit-exact with scalar-position decode row by row."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    B, S, H, K, h = 3, 16, 4, 2, 8
+    q1 = jax.random.normal(ks[0], (B, 1, H, h))
+    kc = jax.random.normal(ks[1], (B, S, K, h))
+    vc = jax.random.normal(ks[2], (B, S, K, h))
+    pos = jnp.array([0, 5, 15], jnp.int32)
+    out = attn.decode_attention(q1, kc, vc, pos)
+    for b in range(B):
+        row = attn.decode_attention(
+            q1[b : b + 1], kc[b : b + 1], vc[b : b + 1],
+            jnp.int32(int(pos[b])),
+        )
+        assert jnp.array_equal(out[b : b + 1], row)
+
+
+def test_chunk_decode_attention_matches_sequential_decode():
+    """ISSUE 10: a (B, C) prefill chunk attending over the cache (chunk
+    K/V already written) is bit-exact with C single-token decode steps at
+    per-row staggered positions."""
+    ks = jax.random.split(jax.random.key(12), 3)
+    B, C, S, H, K, h = 3, 4, 16, 4, 2, 8
+    q = jax.random.normal(ks[0], (B, C, H, h))
+    kc = jax.random.normal(ks[1], (B, S, K, h))
+    vc = jax.random.normal(ks[2], (B, S, K, h))
+    pos = jnp.array([0, 3, 7], jnp.int32)
+    out = attn.chunk_decode_attention(q, kc, vc, pos)
+    for i in range(C):
+        step = attn.decode_attention(q[:, i : i + 1], kc, vc, pos + i)
+        assert jnp.array_equal(out[:, i : i + 1], step)
+
+
+def test_update_paged_kv_cache_routes_oob_to_scratch():
+    """Out-of-range chunk positions (padded prefill tails, idle rows at
+    pos = max_seq) land on reserved page 0; in-range writes land exactly
+    where the block table maps them."""
+    B, C, K, h, bs, nb = 2, 2, 1, 4, 4, 2
+    P = 1 + B * nb
+    kp = jnp.zeros((P, bs, K, h))
+    vp = jnp.zeros((P, bs, K, h))
+    tables = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    k = jnp.ones((B, C, K, h))
+    v = jnp.full((B, C, K, h), 2.0)
+    # row 0 writes slots 3..4 (pages 1 then 2); row 1 is idle at max_seq
+    pos = jnp.array([3, nb * bs], jnp.int32)
+    kp2, vp2 = attn.update_paged_kv_cache(kp, vp, k, v, tables, pos)
+    assert kp2[1, 3].max() == 1 and kp2[2, 0].max() == 1
+    assert vp2[2, 0].max() == 2
+    assert jnp.abs(kp2[3:]).max() == 0  # idle row touched only scratch
+    assert jnp.abs(kp2[1, :3]).max() == 0 and jnp.abs(kp2[2, 1:]).max() == 0
+
+
 def test_rope_relative_property():
     """RoPE inner products depend only on relative positions."""
     k1, k2 = jax.random.split(jax.random.key(3))
@@ -186,6 +240,65 @@ def test_prefill_decode_step_logit_parity(arch, unroll):
     )
     np.testing.assert_allclose(
         np.asarray(jnp.stack(dec_values, axis=1)), np.asarray(ref_values),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,unroll",
+    [
+        ("qwen2-1.5b", False),
+        ("qwen2-1.5b", True),
+        ("deepseek-moe-16b", True),
+    ],
+)
+def test_prefill_step_matches_forward(arch, unroll):
+    """ISSUE 10 satellite: the fused chunked-prefill step (what
+    ``examples/serve_lm.py`` and the ServeEngine now route prompts
+    through, replacing the old teacher-forced decode loop) reproduces the
+    full causal forward logits — both as one whole-prompt chunk and as
+    two carried 4-token chunks."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import make_model
+
+    cfg = dataclasses.replace(
+        get_reduced_config(arch), param_dtype="float32",
+        cache_dtype="float32", remat="none",
+    )
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = make_model(cfg, unroll=unroll)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 8
+    tokens = jax.random.randint(
+        jax.random.key(1), (B, T), 0, cfg.vocab_size, dtype=jnp.int32
+    )
+    ref_logits, ref_values, _ = model.forward(params, {"tokens": tokens})
+
+    cache, _ = model.init_cache(B, T)
+    logits, values, _ = model.prefill_step(
+        params, cache, tokens, jnp.zeros((B,), jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(values), np.asarray(ref_values),
+                               atol=1e-4, rtol=1e-4)
+
+    cache, _ = model.init_cache(B, T)
+    chunks = []
+    for c in range(0, T, 4):
+        lg, _, cache = model.prefill_step(
+            params, cache, tokens[:, c : c + 4],
+            jnp.full((B,), c, jnp.int32),
+        )
+        chunks.append(lg)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(chunks, axis=1)), np.asarray(ref_logits),
         atol=1e-4, rtol=1e-4,
     )
 
